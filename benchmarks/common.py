@@ -1,0 +1,71 @@
+"""Shared helpers for the paper-artifact benchmarks.
+
+Every ``figN_*.py`` / ``table1_*.py`` module exposes ``run(out_dir) -> dict``
+returning::
+
+    {"name": ..., "rows": [...], "checks": [CheckResult-as-dict, ...]}
+
+``run.py`` aggregates the checks into the PASS/FAIL summary that validates
+the reproduction against the paper's own claims (EXPERIMENTS.md
+§Paper-claims reads the emitted JSON).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass
+from pathlib import Path
+from typing import List, Optional
+
+RESULTS_DIR = Path(__file__).resolve().parent.parent / "results"
+
+
+@dataclass
+class Check:
+    """One claim-validation: value must land in [lo, hi] (inclusive)."""
+    name: str
+    value: float
+    lo: Optional[float] = None
+    hi: Optional[float] = None
+    note: str = ""
+
+    @property
+    def ok(self) -> bool:
+        if self.lo is not None and self.value < self.lo:
+            return False
+        if self.hi is not None and self.value > self.hi:
+            return False
+        return True
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["ok"] = self.ok
+        return d
+
+
+def save_result(out_dir: Path, name: str, payload: dict) -> Path:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    p = out_dir / f"{name}.json"
+    p.write_text(json.dumps(payload, indent=2, default=float))
+    return p
+
+
+def fmt_table(headers: List[str], rows: List[list]) -> str:
+    """Plain-text aligned table for bench stdout."""
+    cols = [headers] + [[str(c) for c in r] for r in rows]
+    widths = [max(len(r[i]) for r in cols) for i in range(len(headers))]
+    def line(r):
+        return "  ".join(str(c).ljust(w) for c, w in zip(r, widths))
+    sep = "  ".join("-" * w for w in widths)
+    return "\n".join([line(headers), sep] + [line(r) for r in rows])
+
+
+def summarize_checks(checks: List[Check]) -> str:
+    lines = []
+    for c in checks:
+        band = ""
+        if c.lo is not None or c.hi is not None:
+            band = f" (band [{c.lo}, {c.hi}])"
+        mark = "PASS" if c.ok else "FAIL"
+        lines.append(f"  [{mark}] {c.name}: {c.value:.4g}{band}"
+                     + (f" — {c.note}" if c.note else ""))
+    return "\n".join(lines)

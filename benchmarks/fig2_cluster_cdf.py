@@ -1,0 +1,68 @@
+"""Paper Fig 2 — CDF of GPU memory consumption across a production cluster.
+
+The paper plots the Alibaba gpu-v2020 trace (959,080 machine snapshots,
+6,500 GPUs): ~68% of machines consume <=20% of GPU memory and ~87% consume
+<=50%.  Our synthetic cluster-trace generator (repro.core.monitor) is
+calibrated to those anchors; this benchmark samples it at trace scale and
+validates the two anchor points within +-3pp, plus the dynamic trace's
+long-run distribution within +-6pp (the OU/job dynamics wander around the
+band mixture).
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import Check, fmt_table, save_result
+from repro.core.monitor import ClusterTrace, ClusterTraceConfig
+
+
+def run(out_dir: Path) -> dict:
+    trace = ClusterTrace(ClusterTraceConfig(num_devices=64, seed=7))
+
+    # static snapshot distribution (what Fig 2 actually plots)
+    snaps = trace.sample_usage_fractions(n_machines=1800, n_snapshots=533)
+    flat = snaps.reshape(-1)          # ~959k machine snapshots
+    levels = [0.1, 0.2, 0.3, 0.5, 0.75, 0.9]
+    cdf = {lv: float((flat <= lv).mean()) for lv in levels}
+
+    # dynamic trace distribution (what drives revocations at runtime)
+    dyn = []
+    t2 = ClusterTrace(ClusterTraceConfig(num_devices=256, seed=11))
+    for _ in range(400):
+        dyn.append(t2.step() / t2.cfg.capacity_bytes)
+    dyn = np.concatenate(dyn)
+    dyn_cdf = {lv: float((dyn <= lv).mean()) for lv in levels}
+
+    rows = [[f"<= {int(lv*100)}%", f"{cdf[lv]:.3f}", f"{dyn_cdf[lv]:.3f}"]
+            for lv in levels]
+    checks = [
+        Check("fig2.snapshots", float(flat.size), lo=900_000,
+              note="paper: 959,080 machine snapshots"),
+        Check("fig2.cdf_at_20pct", cdf[0.2], lo=0.65, hi=0.71,
+              note="paper: ~68% of machines use <=20% of GPU memory"),
+        Check("fig2.cdf_at_50pct", cdf[0.5], lo=0.84, hi=0.90,
+              note="paper: ~87% of machines use <=50% of GPU memory"),
+        Check("fig2.dynamic_cdf_at_20pct", dyn_cdf[0.2], lo=0.62, hi=0.74,
+              note="runtime trace stays near the calibrated mixture"),
+        Check("fig2.dynamic_cdf_at_50pct", dyn_cdf[0.5], lo=0.81, hi=0.93),
+    ]
+
+    print("Fig 2 — cluster GPU-memory-consumption CDF "
+          "(static snapshots / dynamic trace):")
+    print(fmt_table(["usage level", "CDF (snapshots)", "CDF (dynamic)"], rows))
+
+    payload = {"name": "fig2_cluster_cdf",
+               "cdf": cdf, "dynamic_cdf": dyn_cdf,
+               "n_snapshots": int(flat.size),
+               "checks": [c.to_dict() for c in checks]}
+    save_result(out_dir, "fig2_cluster_cdf", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    from benchmarks.common import RESULTS_DIR, summarize_checks
+    out = run(RESULTS_DIR)
+    print(summarize_checks([Check(**{k: v for k, v in c.items() if k != "ok"})
+                            for c in out["checks"]]))

@@ -1,0 +1,76 @@
+"""Paper Fig 6 — throughput as a function of expert offload percentage.
+
+Claims validated:
+  * Harvest (peer offload) throughput stays flat (or degrades minimally)
+    from 0% to 100% experts offloaded;
+  * CPU offload degrades significantly with the offloaded fraction;
+  * the qualitative anchors: Qwen2-MoE peer stays ~constant while CPU
+    offload loses >=15% at full offload; Mixtral loses >=20%.
+
+(The paper's absolute tokens/s — Qwen2 ~975 peer vs ~810 host at 100% —
+come from its H100 test bench; our simulator reproduces the *shape* and
+relative degradation.  Note the paper's Fig 5 (+53% for Qwen2 at 50%
+offload) and Fig 6 (-17% at 100% offload) are not mutually consistent; we
+validate each figure's claim on its own terms and record both numbers.)
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import Check, fmt_table, save_result
+from repro.configs import get_config
+from repro.core.simulator import AccessModelConfig, simulate_moe_decode
+from repro.core.tiers import H100_NVLINK
+
+MODELS = ["mixtral-8x7b", "qwen2-moe", "phi-tiny-moe"]  # the 3 shown in Fig 6
+FRACTIONS = [0.0, 0.25, 0.5, 0.75, 1.0]
+
+
+def run(out_dir: Path, decode_steps: int = 4) -> dict:
+    hw = H100_NVLINK
+    out_rows, checks = [], []
+    for arch in MODELS:
+        cfg = get_config(arch)
+        peer_curve, host_curve = [], []
+        for f in FRACTIONS:
+            am = AccessModelConfig(seed=0)
+            p = simulate_moe_decode(cfg, hw, f, use_peer=True,
+                                    decode_steps=decode_steps, access=am)
+            h = simulate_moe_decode(cfg, hw, f, use_peer=False,
+                                    decode_steps=decode_steps, access=am)
+            peer_curve.append(p.tokens_per_s)
+            host_curve.append(h.tokens_per_s)
+        out_rows.append({"model": arch, "fractions": FRACTIONS,
+                         "peer_tps": peer_curve, "host_tps": host_curve})
+
+        peer_drop = 1 - min(peer_curve) / peer_curve[0]
+        host_drop = 1 - host_curve[-1] / host_curve[0]
+        host_monotone = all(host_curve[i] >= host_curve[i + 1] - 1e-6
+                            for i in range(len(host_curve) - 1))
+        checks += [
+            Check(f"fig6.{arch}.peer_drop_pct", peer_drop * 100, hi=5.0,
+                  note="Harvest throughput stays ~flat vs offload fraction"),
+            Check(f"fig6.{arch}.host_drop_pct", host_drop * 100, lo=15.0,
+                  note="CPU offload degrades significantly at full offload"),
+            Check(f"fig6.{arch}.host_monotone", float(host_monotone), lo=1.0,
+                  note="CPU-offload curve decreases monotonically"),
+        ]
+
+        print(f"Fig 6 — {arch}: throughput vs offload fraction")
+        print(fmt_table(
+            ["offloaded", "Harvest tok/s", "CPU offload tok/s"],
+            [[f"{int(f*100)}%", f"{p:.0f}", f"{h:.0f}"]
+             for f, p, h in zip(FRACTIONS, peer_curve, host_curve)]))
+        print()
+
+    payload = {"name": "fig6_offload_sweep", "rows": out_rows,
+               "checks": [c.to_dict() for c in checks]}
+    save_result(out_dir, "fig6_offload_sweep", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    from benchmarks.common import RESULTS_DIR
+    run(RESULTS_DIR)

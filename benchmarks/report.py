@@ -1,0 +1,111 @@
+"""Render EXPERIMENTS.md tables from results/ artifacts.
+
+Usage:  PYTHONPATH=src python -m benchmarks.report [--section dryrun|roofline|claims]
+Prints markdown; EXPERIMENTS.md embeds the output.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from benchmarks.common import RESULTS_DIR
+from benchmarks.roofline import load_rows
+from repro.configs import dryrun_pairs
+
+
+def md_table(headers, rows):
+    out = ["| " + " | ".join(headers) + " |",
+           "|" + "|".join("---" for _ in headers) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(c) for c in r) + " |")
+    return "\n".join(out)
+
+
+def baseline_rows(path=None):
+    rows = load_rows(path or (RESULTS_DIR / "dryrun.jsonl"))
+    return [r for r in rows if not r.get("harvest_inplace")
+            and not r.get("peer_fraction")]
+
+
+def section_dryrun():
+    rows = baseline_rows()
+    expected = dryrun_pairs()
+    out_rows = []
+    for arch, shape in expected:
+        cells = [arch, shape]
+        for mesh in ("pod", "multipod"):
+            r = next((x for x in rows if x["arch"] == arch
+                      and x["shape"] == shape and x["mesh"] == mesh), None)
+            if r is None or not r.get("ok"):
+                cells.append("**FAIL**")
+                continue
+            gib = r["mem"]["total_bytes"] / 2**30
+            cells.append(f"ok {gib:.1f} GiB/dev "
+                         f"({r['lower_s'] + r['compile_s']:.0f}s)")
+        coll = r["collectives"]["counts"] if r and r.get("ok") else {}
+        cells.append(", ".join(f"{k.split('-')[-1] if False else k}:{int(v)}"
+                               for k, v in coll.items() if v))
+        out_rows.append(cells)
+    print(md_table(["arch", "shape", "pod (16x16)", "multipod (2x16x16)",
+                    "collectives (multipod, count x trip)"], out_rows))
+
+
+def section_roofline():
+    rows = baseline_rows()
+    pod = {(r["arch"], r["shape"]): r for r in rows if r["mesh"] == "pod"}
+    out_rows = []
+    for arch, shape in dryrun_pairs():
+        r = pod.get((arch, shape))
+        if r is None or not r.get("ok"):
+            out_rows.append([arch, shape] + ["-"] * 6)
+            continue
+        rf = r["roofline"]
+        ct, mt, lt = (rf["compute_term_s"], rf["memory_term_s"],
+                      rf["collective_term_s"])
+        ratio = rf.get("useful_flops_ratio")
+        out_rows.append([
+            arch, shape, f"{ct:.3f}", f"{mt:.3f}", f"{lt:.3f}",
+            f"**{rf['bottleneck']}**",
+            f"{ratio:.2f}" if ratio is not None else "-",
+            f"{r['mem']['total_bytes'] / 2**30:.1f}",
+        ])
+    print(md_table(["arch", "shape", "compute s", "memory s", "collective s",
+                    "bottleneck", "6ND/HLO", "GiB/dev"], out_rows))
+
+
+def section_claims():
+    names = ["fig2_cluster_cdf", "fig3_transfer_latency", "table1_model_zoo",
+             "fig5_moe_throughput", "fig6_offload_sweep", "fig7_kv_latency",
+             "roofline"]
+    rows = []
+    for n in names:
+        p = RESULTS_DIR / f"{n}.json"
+        if not p.exists():
+            rows.append([n, "-", "missing"])
+            continue
+        checks = json.loads(p.read_text()).get("checks", [])
+        ok = sum(1 for c in checks if c.get("ok"))
+        rows.append([n, f"{ok}/{len(checks)}",
+                     "PASS" if ok == len(checks) else "FAIL"])
+        for c in checks:
+            band = f"[{c.get('lo')}, {c.get('hi')}]"
+            rows.append([f"&nbsp;&nbsp;{c['name']}",
+                         f"{c['value']:.4g} in {band}",
+                         "pass" if c.get("ok") else "**FAIL**"])
+    print(md_table(["claim check", "value", "status"], rows))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="all")
+    a = ap.parse_args()
+    if a.section in ("dryrun", "all"):
+        print("\n### Dry-run matrix\n")
+        section_dryrun()
+    if a.section in ("roofline", "all"):
+        print("\n### Roofline (single-pod, per device)\n")
+        section_roofline()
+    if a.section in ("claims", "all"):
+        print("\n### Paper-claim checks\n")
+        section_claims()

@@ -1,0 +1,75 @@
+"""Paper Table 1 — MoE model architecture comparison.
+
+Validates that our config files reproduce the paper's model zoo:
+
+    Model         | Params (B) | Active (B) | Experts | Active Exp.
+    Mixtral-8x7B  | 47.0       | 13.0       | 8       | 2
+    Phi-3.5-MoE   | 60.8       | 6.6        | 16      | 2
+    Phi-tiny-MoE  | 3.8        | 1.1        | 16      | 2
+    Qwen2-MoE     | 14.3       | 2.7        | 64      | 4
+
+Param counts are recomputed from the architecture dims (config ->
+``param_counts()``), so this doubles as a regression test on the configs.
+Note: the paper lists Phi-3.5-MoE at 60.8B; the official model card
+(microsoft/Phi-3.5-MoE-instruct) reports 16x3.8B with 42B total — our
+config follows the architecture dims (d_ff_expert=6400, 16 experts,
+32 layers) which yield ~42B, so the Phi-3.5 total is checked against the
+model-card number and the discrepancy with the paper's table is recorded.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+from benchmarks.common import Check, fmt_table, save_result
+from repro.configs import get_config
+
+# (arch, paper_total_B, paper_active_B, experts, top_k, check_total_B)
+TABLE1 = [
+    ("mixtral-8x7b", 47.0, 13.0, 8, 2, 47.0),
+    ("phi-3.5-moe", 60.8, 6.6, 16, 2, 42.0),   # model-card total (see module doc)
+    ("phi-tiny-moe", 3.8, 1.1, 16, 2, 3.8),
+    ("qwen2-moe", 14.3, 2.7, 64, 4, 14.3),
+]
+
+
+def run(out_dir: Path) -> dict:
+    rows, out_rows, checks = [], [], []
+    for arch, p_total, p_active, experts, top_k, chk_total in TABLE1:
+        cfg = get_config(arch)
+        pc = cfg.param_counts()
+        total_b = pc["total"] / 1e9
+        active_b = pc["active"] / 1e9
+        rows.append([arch, f"{total_b:.1f} (paper {p_total})",
+                     f"{active_b:.1f} (paper {p_active})",
+                     f"{cfg.moe.num_experts} (paper {experts})",
+                     f"{cfg.moe.top_k} (paper {top_k})"])
+        out_rows.append({"model": arch, "total_b": total_b,
+                         "active_b": active_b,
+                         "experts": cfg.moe.num_experts,
+                         "top_k": cfg.moe.top_k,
+                         "paper_total_b": p_total,
+                         "paper_active_b": p_active})
+        checks += [
+            Check(f"table1.{arch}.total_b", total_b,
+                  lo=chk_total * 0.85, hi=chk_total * 1.15),
+            Check(f"table1.{arch}.active_b", active_b,
+                  lo=p_active * 0.6, hi=p_active * 1.25,
+                  note="active params (attn share approximated)"),
+            Check(f"table1.{arch}.experts", cfg.moe.num_experts,
+                  lo=experts, hi=experts),
+            Check(f"table1.{arch}.top_k", cfg.moe.top_k, lo=top_k, hi=top_k),
+        ]
+
+    print("Table 1 — MoE model zoo (recomputed from configs):")
+    print(fmt_table(["model", "params B", "active B", "experts", "top-k"],
+                    rows))
+
+    payload = {"name": "table1_model_zoo", "rows": out_rows,
+               "checks": [c.to_dict() for c in checks]}
+    save_result(out_dir, "table1_model_zoo", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    from benchmarks.common import RESULTS_DIR
+    run(RESULTS_DIR)

@@ -1,0 +1,71 @@
+"""KV-cache paging with Harvest under a fair scheduler (paper §5 + §6.3).
+
+Serves a reduced Yi-6B with a deliberately tight local KV pool and a
+completely-fair scheduler: preempted requests' KV blocks are evicted into
+harvested peer HBM and reloaded over the fast path when they resume.
+Decoded tokens are bit-identical to an all-local run.
+
+Run:  PYTHONPATH=src python examples/kv_paging_long_context.py
+"""
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.core.allocator import HarvestAllocator
+from repro.core.tiers import H100_NVLINK
+from repro.models import model as M
+from repro.serving.engine import HarvestServingEngine
+
+MiB = 2**20
+
+
+def build():
+    cfg = dataclasses.replace(get_config("yi-6b").reduced(), num_layers=2)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def serve(cfg, params, *, slots, alloc=None, scheduler="fcfs"):
+    eng = HarvestServingEngine(
+        cfg, params, max_batch=2, block_size=8, num_local_slots=slots,
+        max_seq_len=128, allocator=alloc, hardware=H100_NVLINK,
+        scheduler=scheduler)
+    prompts = [[3 + i, 141, 59, 26, 5 + i, 35] for i in range(6)]
+    reqs = [eng.submit(p, max_new_tokens=24) for p in prompts]
+    stats = eng.run(max_steps=2000)
+    return eng, reqs, stats
+
+
+def main():
+    cfg, params = build()
+
+    print("1) baseline: tight local pool (12 blocks), fair scheduler, "
+          "evictions fall back to host DRAM (no peer capacity)")
+    eng0, ref, s0 = serve(cfg, params, slots=12, scheduler="fair")
+    kv0 = eng0.kv_mgr.stats
+    print(f"   preemptions {s0.preemptions}, evict->host "
+          f"{kv0['evict_to_host']}, host reloads {kv0['reload_host']}, "
+          f"reload time {s0.reload_s * 1e3:.2f} ms\n")
+
+    print("2) Harvest: same pool + fair scheduler, peer tier enabled")
+    alloc = HarvestAllocator({1: 256 * MiB})
+    eng, out, s1 = serve(cfg, params, slots=12, alloc=alloc, scheduler="fair")
+    kv = eng.kv_mgr.stats
+    print(f"   preemptions          : {s1.preemptions}")
+    print(f"   blocks evicted->peer : {kv['evict_to_peer']}")
+    print(f"   peer reloads         : {kv['reload_peer']}")
+    print(f"   reload time          : {s1.reload_s * 1e3:.2f} ms "
+          f"({s0.reload_s / max(s1.reload_s, 1e-12):.1f}x faster than host)")
+
+    # The paper's correctness contract: WHERE a miss is served from (peer
+    # HBM vs host DRAM) never changes the result — slot dynamics and math
+    # are identical, only the transfer path differs.
+    identical = all(a.output == b.output for a, b in zip(ref, out))
+    print(f"\n   tokens identical to host-fallback run: {identical}")
+    assert identical, "the peer tier must never change decoded tokens"
+    assert s1.reload_s < s0.reload_s, "peer reloads must be faster"
+
+
+if __name__ == "__main__":
+    main()

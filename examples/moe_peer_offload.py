@@ -1,0 +1,73 @@
+"""MoE expert offload with Harvest (paper §4).
+
+Loads Qwen2-MoE's architecture, offloads half the experts, and runs the
+CGOPipe-style decode simulation twice — expert misses served from host DRAM
+(PCIe) vs from harvested peer HBM (NVLink) — while the Expert Rebalancer
+migrates the hottest experts into peer memory as capacity appears and falls
+back transparently when the trace revokes it.
+
+Run:  PYTHONPATH=src python examples/moe_peer_offload.py [--arch qwen2-moe]
+"""
+import argparse
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.allocator import HarvestAllocator
+from repro.core.monitor import ClusterTrace, ClusterTraceConfig, PeerMonitor
+from repro.core.rebalancer import ExpertRebalancer
+from repro.core.simulator import AccessModelConfig, ExpertAccessModel, \
+    simulate_moe_decode
+from repro.core.tiers import H100_NVLINK, Tier, expert_bytes
+
+GiB = 2**30
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-moe")
+    ap.add_argument("--offload", type=float, default=0.5)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    hw = H100_NVLINK
+    eb = expert_bytes(cfg)
+    print(f"{cfg.name}: {cfg.moe.num_experts} experts x {eb / 2**20:.0f} MiB, "
+          f"top-{cfg.moe.top_k}, {args.offload:.0%} offloaded\n")
+
+    # -- throughput: host offload vs Harvest peer offload -----------------
+    host = simulate_moe_decode(cfg, hw, args.offload, use_peer=False,
+                               decode_steps=8)
+    peer = simulate_moe_decode(cfg, hw, args.offload, use_peer=True,
+                               decode_steps=8)
+    print(f"CPU offload   : {host.tokens_per_s:8.1f} tok/s")
+    print(f"Harvest (peer): {peer.tokens_per_s:8.1f} tok/s  "
+          f"(+{(peer.tokens_per_s / host.tokens_per_s - 1) * 100:.0f}%)\n")
+
+    # -- the rebalancer reacting to live peer availability ----------------
+    alloc = HarvestAllocator({0: 8 * GiB, 1: 8 * GiB})
+    reb = ExpertRebalancer(cfg, alloc, hw, local_fraction=1 - args.offload)
+    trace = ClusterTrace(ClusterTraceConfig(num_devices=2,
+                                            capacity_bytes=8 * GiB, seed=1))
+    mon = PeerMonitor(alloc, trace, capacity_bytes=8 * GiB)
+    am = ExpertAccessModel(cfg.moe.num_experts, cfg.moe.top_k,
+                           AccessModelConfig(seed=0))
+
+    for step in range(16):
+        experts = np.unique(am.sample_microbatch(324))
+        for li in range(min(cfg.num_moe_layers, 4)):
+            reb.record_access(li, experts)
+        migrated = reb.rebalance(max_migrations=8)
+        mon.tick()
+        frac = reb.residency_fractions()
+        print(f"step {step:2d}: migrated {migrated:2d}  residency "
+              f"local={frac[Tier.LOCAL_HBM.value]:.2f} "
+              f"peer={frac[Tier.PEER_HBM.value]:.2f} "
+              f"host={frac[Tier.HOST_DRAM.value]:.2f}  "
+              f"revocations={reb.stats['revocations']}")
+
+    print("\nrebalancer stats:", reb.stats)
+
+
+if __name__ == "__main__":
+    main()

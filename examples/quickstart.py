@@ -1,0 +1,55 @@
+"""Quickstart: the Harvest API in 60 lines.
+
+Allocates peer memory opportunistically, registers a revocation callback,
+watches the cluster trace shrink a peer's budget, and shows the fallback.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core.allocator import HarvestAllocator
+from repro.core.monitor import ClusterTrace, ClusterTraceConfig, PeerMonitor
+
+GiB = 2**30
+
+
+def main():
+    # Four peer devices with 16 GiB of harvestable HBM each.
+    alloc = HarvestAllocator({d: 16 * GiB for d in range(4)})
+
+    # --- harvest_alloc: opportunistic peer allocation --------------------
+    handles = []
+    for i in range(6):
+        h = alloc.harvest_alloc(3 * GiB, hints={"purpose": f"kv-shard-{i}"})
+        if h is None:
+            print(f"alloc {i}: no peer capacity (graceful failure)")
+            continue
+        print(f"alloc {i}: device={h.device} offset={h.offset >> 30}GiB "
+              f"size={h.size >> 30}GiB")
+        handles.append(h)
+
+    # --- harvest_register_cb: revocation notification --------------------
+    def on_revoked(handle):
+        print(f"  -> REVOKED device={handle.device} size={handle.size >> 30}GiB"
+              f" (falling back to host DRAM copy)")
+
+    for h in handles:
+        alloc.harvest_register_cb(h, on_revoked)
+
+    # --- external pressure: a cluster trace shrinks peer budgets ---------
+    trace = ClusterTrace(ClusterTraceConfig(num_devices=4,
+                                            capacity_bytes=16 * GiB, seed=42))
+    mon = PeerMonitor(alloc, trace, capacity_bytes=16 * GiB,
+                      reserve_bytes=1 * GiB)
+    for t in range(12):
+        budgets = mon.tick()
+        live = len(alloc.live_handles())
+        print(f"t={t:2d} budgets(GiB)="
+              f"{[round(b / GiB, 1) for b in budgets.values()]} live={live}")
+
+    # --- harvest_free: explicit release ----------------------------------
+    for h in list(alloc.live_handles()):
+        alloc.harvest_free(h)
+    print("stats:", alloc.stats)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Placement policies for the Harvest controller.
+
+The paper's prototype uses best-fit; §3.2 names locality, fairness,
+interference and stability as alternative objectives.  All are implemented
+here as composable rankers: a policy orders candidate peer devices for a
+request, the allocator takes the first that fits.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass(frozen=True)
+class PlacementRequest:
+    size: int
+    client: str = "default"
+    hints: dict = field(default_factory=dict)   # e.g. {"requester_device": 3}
+
+
+class PlacementPolicy:
+    def rank(self, devices: Dict[int, dict], req: PlacementRequest) -> List[int]:
+        raise NotImplementedError
+
+    def on_alloc(self, req: PlacementRequest, device_id: int) -> None:
+        pass
+
+
+class BestFitPolicy(PlacementPolicy):
+    """Minimise leftover contiguous space (the paper's default)."""
+
+    def rank(self, devices, req):
+        fitting = [(d, v) for d, v in devices.items()
+                   if v["largest_free"] >= req.size]
+        fitting.sort(key=lambda kv: kv[1]["largest_free"] - req.size)
+        return [d for d, _ in fitting]
+
+
+class WorstFitPolicy(PlacementPolicy):
+    """Maximise leftover space (lower fragmentation under churn)."""
+
+    def rank(self, devices, req):
+        fitting = [(d, v) for d, v in devices.items()
+                   if v["largest_free"] >= req.size]
+        fitting.sort(key=lambda kv: -(kv[1]["largest_free"] - req.size))
+        return [d for d, _ in fitting]
+
+
+class LocalityPolicy(PlacementPolicy):
+    """Prefer ICI-adjacent peers (paper §8: topology-aware placement).
+
+    Distance = ring hop count on the device ring; ties broken best-fit.
+    """
+
+    def __init__(self, num_devices: int):
+        self.n = num_devices
+
+    def _dist(self, a: int, b: int) -> int:
+        d = abs(a - b) % self.n
+        return min(d, self.n - d)
+
+    def rank(self, devices, req):
+        src = req.hints.get("requester_device", 0)
+        fitting = [(d, v) for d, v in devices.items()
+                   if v["largest_free"] >= req.size]
+        fitting.sort(key=lambda kv: (self._dist(src, kv[0]),
+                                     kv[1]["largest_free"] - req.size))
+        return [d for d, _ in fitting]
+
+
+class StabilityPolicy(PlacementPolicy):
+    """Prefer peers with low budget churn (fewer future revocations)."""
+
+    def rank(self, devices, req):
+        fitting = [(d, v) for d, v in devices.items()
+                   if v["largest_free"] >= req.size]
+        fitting.sort(key=lambda kv: (kv[1]["churn"],
+                                     kv[1]["largest_free"] - req.size))
+        return [d for d, _ in fitting]
+
+
+class FairnessPolicy(PlacementPolicy):
+    """Per-client byte budget wrapped around an inner policy."""
+
+    def __init__(self, inner: PlacementPolicy, per_client_bytes: int):
+        self.inner = inner
+        self.cap = per_client_bytes
+        self.usage: Dict[str, int] = {}
+
+    def rank(self, devices, req):
+        if self.usage.get(req.client, 0) + req.size > self.cap:
+            return []
+        return self.inner.rank(devices, req)
+
+    def on_alloc(self, req, device_id):
+        self.usage[req.client] = self.usage.get(req.client, 0) + req.size
+        self.inner.on_alloc(req, device_id)
+
+    def on_free(self, client: str, size: int):
+        self.usage[client] = max(0, self.usage.get(client, 0) - size)
+
+
+POLICIES = {
+    "best_fit": BestFitPolicy,
+    "worst_fit": WorstFitPolicy,
+    "locality": LocalityPolicy,
+    "stability": StabilityPolicy,
+}

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels (validated with interpret=True on CPU).
+
+  flash_attention — prefill attention (causal / SWA / chunked-local, GQA fold)
+  paged_attention — decode attention over the Harvest KV block pool
+                    (scalar-prefetch block-table chasing)
+  moe_ffn         — fused gated expert FFN over dispatch buffers
+  harvest_copy    — chunked tier-to-tier block gather (the Harvest data mover)
+
+Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper,
+TPU-compiled vs CPU-interpret dispatch), ref.py (pure-jnp oracle).
+"""

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash-attention kernel (materialised softmax)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, sq: int, scale: Optional[float] = None,
+                        sliding_window: Optional[int] = None,
+                        attention_chunk: Optional[int] = None):
+    """q: (B, gq*sq, hd);  k, v: (B, sk, hd) — same folding as the kernel."""
+    B, qrows, hd = q.shape
+    sk = k.shape[1]
+    scale = hd ** -0.5 if scale is None else scale
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = (jnp.arange(qrows) % sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = k_pos <= q_pos
+    if sliding_window is not None:
+        mask &= k_pos > q_pos - sliding_window
+    if attention_chunk is not None:
+        mask &= (k_pos // attention_chunk) == (q_pos // attention_chunk)
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(mask[None], p, 0.0)
+    out = jnp.einsum("bqk,bkh->bqh", p, v.astype(jnp.float32))
+    out = out / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return out.astype(q.dtype)

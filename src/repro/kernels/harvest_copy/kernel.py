@@ -1,0 +1,57 @@
+"""Pallas TPU chunked tier-copy kernel (the Harvest data mover).
+
+Gathers a batch of KV blocks / expert shards out of a source pool into a
+dense staging buffer, chunk by chunk.  The slot list is a scalar-prefetch
+operand, so the BlockSpec index_map chases it exactly like the runtime's
+reload plan — this is the TPU analogue of the batched cudaMemcpyPeerAsync
+the paper issues on a reload, and Pallas's grid pipeline gives the
+double-buffering (copy chunk i+1 while chunk i lands) for free.
+
+Grid: (num_blocks_to_copy, chunks_per_block).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(ids_ref, src_ref, dst_ref):
+    dst_ref[...] = src_ref[...]
+
+
+def harvest_gather(src_pool, slot_ids, *, chunk: int = 512,
+                   interpret: bool = True):
+    """src_pool: (n_slots, block_elems); slot_ids: (m,) int32
+    -> (m, block_elems) staging buffer."""
+    n_slots, elems = src_pool.shape
+    m = slot_ids.shape[0]
+    chunk = min(chunk, elems)
+    assert elems % chunk == 0
+    n_chunks = elems // chunk
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m, n_chunks),
+        in_specs=[
+            pl.BlockSpec((None, chunk), lambda i, j, ids: (ids[i], j)),
+        ],
+        out_specs=pl.BlockSpec((None, chunk), lambda i, j, ids: (i, j)),
+    )
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, elems), src_pool.dtype),
+        interpret=interpret,
+    )(slot_ids.astype(jnp.int32), src_pool)
+
+
+def harvest_scatter(dst_pool, staging, slot_ids, *, interpret: bool = True):
+    """Write staging rows back into pool slots (reload completion).
+
+    Implemented with a jnp scatter (aliasing-safe); the gather above is the
+    bandwidth-critical direction.
+    """
+    return dst_pool.at[slot_ids].set(staging.astype(dst_pool.dtype),
+                                     mode="drop")

@@ -1,0 +1,25 @@
+"""Jit'd wrappers for the harvest tier-copy kernels."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.harvest_copy.kernel import harvest_gather, harvest_scatter
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def gather_blocks(src_pool, slot_ids, *, chunk: int = 512,
+                  interpret: Optional[bool] = None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return harvest_gather(src_pool, slot_ids, chunk=chunk, interpret=interp)
+
+
+@jax.jit
+def scatter_blocks(dst_pool, staging, slot_ids):
+    return harvest_scatter(dst_pool, staging, slot_ids)

@@ -1,0 +1,11 @@
+"""Oracle for the harvest gather/scatter data movers."""
+import jax.numpy as jnp
+
+
+def harvest_gather_ref(src_pool, slot_ids):
+    return jnp.take(src_pool, slot_ids, axis=0)
+
+
+def harvest_scatter_ref(dst_pool, staging, slot_ids):
+    return dst_pool.at[slot_ids].set(staging.astype(dst_pool.dtype),
+                                     mode="drop")

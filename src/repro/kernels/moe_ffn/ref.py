@@ -1,0 +1,21 @@
+"""Oracle for the fused expert-FFN kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_ffn_ref(xd, wi, wg, wo, *, activation: str = "silu"):
+    x = xd.astype(jnp.float32)
+    h = jnp.einsum("ecd,edf->ecf", x, wi.astype(jnp.float32))
+    g = jnp.einsum("ecd,edf->ecf", x, wg.astype(jnp.float32))
+    if activation == "silu":
+        g = jax.nn.silu(g)
+    elif activation == "gelu":
+        g = jax.nn.gelu(g)
+    elif activation == "relu2":
+        g = jnp.square(jax.nn.relu(g))
+    else:
+        raise ValueError(activation)
+    out = jnp.einsum("ecf,efd->ecd", g * h, wo.astype(jnp.float32))
+    return out.astype(xd.dtype)

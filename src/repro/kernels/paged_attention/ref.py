@@ -1,0 +1,45 @@
+"""Oracle for the paged decode-attention kernel: gather blocks densely and
+run materialised softmax attention."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q, pool_k, pool_v, block_table, q_pos, *,
+                        scale: Optional[float] = None,
+                        sliding_window: Optional[int] = None,
+                        attention_chunk: Optional[int] = None):
+    """Same signature as the kernel; dense gather reference."""
+    b, nq, hd = q.shape
+    n_slots, bs, nkv, _ = pool_k.shape
+    gq = nq // nkv
+    max_blk = block_table.shape[1]
+    scale = hd ** -0.5 if scale is None else scale
+
+    tab = jnp.maximum(block_table, 0)
+    # (b, max_blk, bs, nkv, hd) -> (b, max_blk*bs, nkv, hd)
+    kg = jnp.take(pool_k, tab.reshape(-1), axis=0).reshape(
+        b, max_blk, bs, nkv, hd).reshape(b, max_blk * bs, nkv, hd)
+    vg = jnp.take(pool_v, tab.reshape(-1), axis=0).reshape(
+        b, max_blk, bs, nkv, hd).reshape(b, max_blk * bs, nkv, hd)
+
+    pos = jnp.arange(max_blk * bs)[None, :]                 # block j covers j*bs..
+    valid = (pos <= q_pos[:, None]) & jnp.repeat(block_table >= 0, bs, axis=1)
+    if sliding_window is not None:
+        valid &= pos > (q_pos[:, None] - sliding_window)
+    if attention_chunk is not None:
+        valid &= (pos // attention_chunk) == (q_pos[:, None] // attention_chunk)
+
+    qr = q.reshape(b, nkv, gq, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bKgh,bsKh->bKgs", qr, kg.astype(jnp.float32))
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    out = jnp.einsum("bKgs,bsKh->bKgh", p, vg.astype(jnp.float32))
+    out = out / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return out.reshape(b, nq, hd).astype(q.dtype)

@@ -1,0 +1,112 @@
+import os
+os.environ.setdefault(
+    "XLA_FLAGS",
+    "--xla_force_host_platform_device_count=512 "
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion,"
+    "while-loop-expensive-invariant-code-motion")
+
+"""Dry-run profiler: top HBM-traffic / collective / dot-FLOP contributors.
+
+The hypothesis->change->measure loop's "profile" on a CPU-only container:
+lower + compile one (arch x shape x mesh), run the trip-count-aware HLO
+analysis, and print the heaviest ops with their while-loop multipliers.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.audit --arch qwen2-vl-72b \
+      --shape decode_32k [--mesh pod] [--top 20] [--dump /tmp/x.hlo]
+"""
+
+import argparse
+import math
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--top", type=int, default=18)
+    ap.add_argument("--dump", default=None)
+    ap.add_argument("--harvest-inplace", action="store_true")
+    ap.add_argument("--peer-fraction", type=float, default=0.0)
+    args = ap.parse_args()
+
+    import jax
+    from repro.configs import INPUT_SHAPES, get_config
+    from repro.launch import hlo_analysis as H
+    from repro.launch.mesh import make_production_mesh, make_rules
+    from repro.launch.specs import build_lowering
+
+    cfg = get_config(args.arch)
+    shape = INPUT_SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.mesh == "multipod")
+    rules = make_rules(mesh)
+    n_dev = math.prod(mesh.devices.shape)
+    fn, fargs, shardings = build_lowering(
+        cfg, shape, rules, harvest_inplace=args.harvest_inplace,
+        peer_fraction=args.peer_fraction)
+    donate = {"train": (0, 1), "decode": (1,), "prefill": ()}[shape.kind]
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=shardings,
+                           donate_argnums=donate).lower(*fargs).compile()
+        hlo = compiled.as_text()
+        ma = compiled.memory_analysis()
+    if args.dump:
+        open(args.dump, "w").write(hlo)
+
+    comps = H.parse_computations(hlo)
+    mult = H.comp_multipliers(comps)
+    shapes = {}
+    for c in comps.values():
+        for op in c.ops:
+            shapes[op.name] = op.type_str
+
+    total = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+             + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+    print(f"memory/device: {total / 2**30:.2f} GiB  "
+          f"(arg {ma.argument_size_in_bytes / 2**30:.2f} + temp "
+          f"{ma.temp_size_in_bytes / 2**30:.2f} + out "
+          f"{ma.output_size_in_bytes / 2**30:.2f} - alias "
+          f"{ma.alias_size_in_bytes / 2**30:.2f})")
+
+    traffic, colls, dots = [], [], []
+    for c in comps.values():
+        m = mult.get(c.name, 0.0)
+        if m <= 0:
+            continue
+        for op in c.ops:
+            base = next((k for k in H.COLLECTIVE_OPS if op.opcode == k
+                         or op.opcode == k + "-start"), None)
+            if base is not None:
+                nb = H._type_bytes(op.type_str)
+                colls.append((m * nb, m, base, op.type_str[:70],
+                              op.rest.split("metadata")[0][:40]))
+            if op.opcode in ("dot", "convolution") and c.is_fusion is False:
+                pass
+            if c.is_fusion:
+                continue
+            if op.opcode in H._NO_TRAFFIC:
+                continue
+            t = H._op_traffic(op, comps, shapes)
+            traffic.append((m * t, m, op.opcode, op.name[:34],
+                            op.type_str[:64]))
+
+    cost = H.analyze(hlo, default_group=n_dev)
+    print(f"\ntotals: dot {cost.dot_flops / 1e12:.2f} TFLOP  "
+          f"hbm {cost.hbm_bytes / 2**30:.1f} GiB  "
+          f"coll {cost.collective_bytes / 2**30:.2f} GiB")
+    print(f"collectives: " + "  ".join(
+        f"{k}={v / 2**30:.2f}GiB/n={cost.collective_counts[k]:.0f}"
+        for k, v in cost.collectives.items() if v))
+
+    print(f"\ntop {args.top} HBM-traffic ops (bytes x trip-count):")
+    for r in sorted(traffic, reverse=True)[:args.top]:
+        print(f"  {r[0] / 2**30:8.2f}GiB x{r[1]:5.0f} {r[2]:22s} "
+              f"{r[3]:34s} {r[4]}")
+    print(f"\ntop {min(args.top, len(colls))} collectives:")
+    for r in sorted(colls, reverse=True)[:args.top]:
+        print(f"  {r[0] / 2**30:8.3f}GiB x{r[1]:5.0f} {r[2]:19s} {r[3]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,260 @@
+import os
+# 512 placeholder devices for the production meshes; the two while-loop LICM
+# passes are disabled for TPU dtype fidelity: the CPU backend has no native
+# bf16 dot, so it upcasts operands to f32 and (with LICM on) hoists full
+# f32 copies of every loop-carried weight/KV-pool stack out of the layer
+# scan — phantom buffers a TPU, with native bf16 MXU ops, never allocates.
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion,"
+    "while-loop-expensive-invariant-code-motion")
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, extract memory/cost/collective analyses, and append
+JSONL records that feed EXPERIMENTS.md §Dry-run and §Roofline.
+
+The XLA_FLAGS line above MUST run before any other import (jax locks the
+device count on first init) — do not move it.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all [--mesh pod|multipod|both] [--force]
+"""
+
+import argparse
+import json
+import math
+import re
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*(?P<result>[^=]*?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<start>-start)?\(")
+SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred|"
+                      r"f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def parse_collectives(hlo: str, default_group: int) -> dict:
+    """Per-device bytes moved through links, by collective type.
+
+    Ring-algorithm accounting: all-gather/reduce-scatter/all-to-all move
+    (g-1)/g of the full buffer per device; all-reduce moves 2x that;
+    collective-permute moves the full buffer once.
+    """
+    out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    counts = dict.fromkeys(out, 0)
+    for line in hlo.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if m is None or "-done" in line:
+            continue
+        op = m.group("op")
+        result = m.group("result")
+        nbytes = 0
+        for dt, dims in SHAPE_RE.findall(result):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * DTYPE_BYTES[dt]
+        g = default_group
+        gm = GROUPS_RE.search(line)
+        if gm:
+            g = int(gm.group(2))
+        else:
+            gb = GROUPS_BRACE_RE.search(line)
+            if gb:
+                g = len(gb.group(1).split(","))
+        g = max(g, 1)
+        if op == "all-reduce":
+            moved = 2 * nbytes * (g - 1) / g
+        elif op == "collective-permute":
+            moved = nbytes
+        else:
+            moved = nbytes * (g - 1) / g
+        out[op] += moved
+        counts[op] += 1
+    out["counts"] = counts
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    pc = cfg.param_counts()
+    n = pc["active"]
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # decode: one token/request
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str,
+            harvest_inplace: bool = False, peer_fraction: float = 0.0) -> dict:
+    import jax
+    from repro.configs import INPUT_SHAPES, get_config
+    from repro.core.tiers import TPU_V5E
+    from repro.launch.mesh import make_production_mesh, make_rules
+    from repro.launch.specs import build_lowering
+
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    multi_pod = mesh_kind == "multipod"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(mesh)
+    n_dev = math.prod(mesh.devices.shape)
+
+    fn, args, shardings = build_lowering(cfg, shape, rules,
+                                         harvest_inplace=harvest_inplace,
+                                         peer_fraction=peer_fraction)
+    from repro.launch.hlo_analysis import analyze as analyze_hlo
+
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "devices": n_dev, "harvest_inplace": harvest_inplace,
+           "peer_fraction": peer_fraction, "ok": False}
+    # donation mirrors production: train updates (params, opt) in place,
+    # decode updates the KV/state pools in place
+    donate = {"train": (0, 1), "decode": (1,), "prefill": ()}[shape.kind]
+    t0 = time.time()
+    try:
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=shardings, donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            ma = compiled.memory_analysis()
+            ca = compiled.cost_analysis() or {}
+            hlo = compiled.as_text()
+            coll = parse_collectives(hlo, default_group=n_dev)
+            # trip-count-aware analysis: XLA's cost_analysis counts while
+            # (lax.scan) bodies ONCE; every model here scans over layers.
+            hcost = analyze_hlo(hlo, default_group=n_dev)
+
+        flops_xla = float(ca.get("flops", 0.0))
+        bytes_xla = float(ca.get("bytes accessed", 0.0))
+        # corrected terms: parsed dot FLOPs / fusion-boundary HBM traffic /
+        # ring-model collective bytes, each x enclosing while trip counts
+        flops_dev = max(hcost.dot_flops, flops_xla)
+        bytes_dev = max(hcost.hbm_bytes, bytes_xla)
+        coll_bytes_dev = hcost.collective_bytes
+        hw = TPU_V5E
+        compute_term = flops_dev / hw.peak_flops
+        memory_term = bytes_dev / hw.hbm_bw
+        collective_term = coll_bytes_dev / hw.peer_link.bandwidth
+        mf = model_flops(cfg, shape)
+        mf_dev = mf / n_dev
+        rec.update(
+            ok=True,
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            mem=dict(
+                argument_bytes=ma.argument_size_in_bytes,
+                output_bytes=ma.output_size_in_bytes,
+                temp_bytes=ma.temp_size_in_bytes,
+                alias_bytes=ma.alias_size_in_bytes,
+                total_bytes=(ma.argument_size_in_bytes + ma.output_size_in_bytes
+                             + ma.temp_size_in_bytes - ma.alias_size_in_bytes),
+            ),
+            cost=dict(flops_per_device=flops_dev, bytes_per_device=bytes_dev,
+                      flops_xla=flops_xla, bytes_xla=bytes_xla,
+                      dot_flops_parsed=hcost.dot_flops,
+                      hbm_bytes_parsed=hcost.hbm_bytes),
+            collectives=hcost.as_dict(),
+            collectives_untripped=coll,
+            roofline=dict(
+                compute_term_s=compute_term,
+                memory_term_s=memory_term,
+                collective_term_s=collective_term,
+                bottleneck=max(
+                    [("compute", compute_term), ("memory", memory_term),
+                     ("collective", collective_term)], key=lambda kv: kv[1])[0],
+                model_flops_per_device=mf_dev,
+                useful_flops_ratio=(mf_dev / flops_dev) if flops_dev else None,
+            ),
+        )
+    except Exception as e:  # noqa: BLE001 — a dry-run failure is a bug report
+        rec["error"] = f"{type(e).__name__}: {e}"[:2000]
+    rec["wall_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--harvest-inplace", action="store_true")
+    ap.add_argument("--peer-fraction", type=float, default=0.0)
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--timeout", type=int, default=3000)
+    args = ap.parse_args()
+
+    out_path = Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        from repro.configs import dryrun_pairs
+        done = set()
+        if out_path.exists() and not args.force:
+            for line in out_path.read_text().splitlines():
+                try:
+                    r = json.loads(line)
+                    if r.get("ok"):
+                        done.add((r["arch"], r["shape"], r["mesh"],
+                                  r.get("harvest_inplace", False)))
+                except json.JSONDecodeError:
+                    pass
+        meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+        pairs = dryrun_pairs()
+        todo = [(a, s, m) for m in meshes for (a, s) in pairs
+                if (a, s, m, args.harvest_inplace) not in done]
+        print(f"{len(todo)} lowerings to run ({len(done)} cached)")
+        for i, (a, s, m) in enumerate(todo):
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", a, "--shape", s, "--mesh", m, "--out", args.out]
+            if args.harvest_inplace:
+                cmd.append("--harvest-inplace")
+            if args.peer_fraction:
+                cmd += ["--peer-fraction", str(args.peer_fraction)]
+            print(f"[{i+1}/{len(todo)}] {a} x {s} x {m}", flush=True)
+            try:
+                subprocess.run(cmd, timeout=args.timeout, check=False)
+            except subprocess.TimeoutExpired:
+                with out_path.open("a") as f:
+                    f.write(json.dumps({
+                        "arch": a, "shape": s, "mesh": m, "ok": False,
+                        "error": f"timeout after {args.timeout}s"}) + "\n")
+        return
+
+    assert args.arch and args.shape, "--arch/--shape required without --all"
+    rec = run_one(args.arch, args.shape, args.mesh,
+                  harvest_inplace=args.harvest_inplace,
+                  peer_fraction=args.peer_fraction)
+    with out_path.open("a") as f:
+        f.write(json.dumps(rec) + "\n")
+    status = "OK" if rec["ok"] else f"FAIL: {rec.get('error', '?')}"
+    print(f"{args.arch} x {args.shape} x {args.mesh}: {status} "
+          f"({rec['wall_s']}s)")
+    if rec["ok"]:
+        r = rec["roofline"]
+        print(f"  mem/device: {rec['mem']['total_bytes']/2**30:.2f} GiB  "
+              f"bottleneck: {r['bottleneck']}")
+        print(f"  terms: compute {r['compute_term_s']*1e3:.2f}ms  "
+              f"memory {r['memory_term_s']*1e3:.2f}ms  "
+              f"collective {r['collective_term_s']*1e3:.2f}ms")
+
+
+if __name__ == "__main__":
+    main()

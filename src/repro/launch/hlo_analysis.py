@@ -1,0 +1,502 @@
+"""Trip-count-aware cost analysis over compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts the body of a ``while`` loop ONCE
+(verified empirically: a length-10 scanned matmul reports 1 matmul's FLOPs).
+Every model here scans over layers, so FLOPs / bytes / collective bytes from
+the stock analysis are undercounted by ~num_layers for the scanned part.
+
+This module re-derives the three roofline inputs from ``compiled.as_text()``:
+
+  * ``dot_flops``        — 2 x |out| x contracted-dim product per dot/conv,
+  * ``hbm_bytes``        — operand+result bytes of top-level (unfused) ops,
+  * ``collective_bytes`` — ring-model bytes per collective type,
+
+each multiplied by the product of enclosing ``while`` trip counts, which
+post-optimization HLO exposes as ``backend_config={"known_trip_count":
+{"n":"32"}, ...}``.
+
+The HBM-byte model counts traffic at fusion boundaries: ops *inside* a
+fusion computation stay in registers/VMEM (that is what fusion means), so
+summing operand/result sizes of the ops at the top level of non-fusion
+computations approximates bytes moved through HBM.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0, "s4": 1,
+               "u4": 1}
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_OP_LINE = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_SHAPE = re.compile(r"(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|s4|u4|"
+                    r"pred|f8e4m3fn|f8e5m2|token)\[([0-9,]*)\]")
+_CALLED_ONE = re.compile(
+    r"(?:calls|to_apply|body|condition|true_computation|false_computation)"
+    r"=%([\w.\-]+)")
+_CALLED_MANY = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# opcodes that produce no HBM traffic of their own
+_NO_TRAFFIC = {"parameter", "constant", "get-tuple-element", "bitcast",
+               "tuple", "after-all", "iota", "partition-id", "replica-id"}
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (handles tuples by summing elements)."""
+    total = 0
+    for dt, dims in _SHAPE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE.search(type_str)
+    if not m:
+        return None
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str                  # operands + attributes tail of the line
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    is_fusion: bool = False
+    ops: List[Op] = field(default_factory=list)
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        if line and not line[0].isspace():
+            m = _COMP_HEADER.match(line)
+            if m:
+                name = m.group(2)
+                cur = Computation(name, is_entry=bool(m.group(1)),
+                                  is_fusion="fused_computation" in name
+                                  or name.startswith("wrapped_"))
+                comps[name] = cur
+            continue
+        if cur is None or "=" not in line:
+            continue
+        m = _OP_LINE.match(line)
+        if m:
+            cur.ops.append(Op(*m.groups()))
+    return comps
+
+
+def _called_comps(op: Op) -> List[str]:
+    out = [m.group(1) for m in _CALLED_ONE.finditer(op.rest)]
+    for m in _CALLED_MANY.finditer(op.rest):
+        out += [n.strip().lstrip("%") for n in m.group(1).split(",")]
+    return out
+
+
+def comp_multipliers(comps: Dict[str, Computation]) -> Dict[str, float]:
+    """Product of enclosing while trip counts per computation."""
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:       # fall back: the computation named main-ish
+        entry = comps.get("main") or next(iter(comps.values()))
+    mult: Dict[str, float] = defaultdict(float)
+
+    def visit(name: str, m: float):
+        if name not in comps:
+            return
+        if mult[name] >= m:          # already visited with >= multiplier
+            return
+        mult[name] = m
+        for op in comps[name].ops:
+            child_m = m
+            if op.opcode == "while":
+                tm = _TRIP.search(op.rest)
+                child_m = m * (int(tm.group(1)) if tm else 1)
+            for callee in _called_comps(op):
+                visit(callee, child_m)
+
+    visit(entry.name, 1.0)
+    return dict(mult)
+
+
+def _group_size(op: Op, default_group: int) -> int:
+    m = _GROUPS_IOTA.search(op.rest)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_BRACE.search(op.rest)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return max(default_group, 1)
+
+
+@dataclass
+class HLOCost:
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, float] = field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        d = dict(self.collectives)
+        d["counts"] = {k: v for k, v in self.collective_counts.items()}
+        return d
+
+
+def analyze(hlo: str, default_group: int = 1) -> HLOCost:
+    comps = parse_computations(hlo)
+    mult = comp_multipliers(comps)
+    # name -> type_str for operand shape lookup (dot contracting dims)
+    shapes: Dict[str, str] = {}
+    ops_by_name: Dict[str, Op] = {}
+    for c in comps.values():
+        for op in c.ops:
+            shapes[op.name] = op.type_str
+            ops_by_name[op.name] = op
+
+    # Pure dtype/layout fusions (wrapped_convert etc.): the XLA CPU backend
+    # materializes f32 copies of bf16 tensors because it has no native bf16
+    # arithmetic; a TPU reads bf16 directly.  Charge such fusions zero
+    # traffic and charge their consumers at the SOURCE dtype.
+    pure_convert: Dict[str, bool] = {}
+    for cname, c in comps.items():
+        if c.is_fusion:
+            body = [o for o in c.ops
+                    if o.opcode not in ("parameter", "constant")]
+            pure_convert[cname] = bool(body) and all(
+                o.opcode in _PASSTHROUGH for o in body)
+
+    # comp of each op, caller site of each computation, param lists
+    comp_of: Dict[str, str] = {}
+    params_of_comp: Dict[str, List[str]] = defaultdict(list)
+    caller_of_comp: Dict[str, Op] = {}
+    for cname, c in comps.items():
+        idx_params = []
+        for op in c.ops:
+            comp_of[op.name] = cname
+            if op.opcode == "parameter":
+                pm = re.match(r"\s*(\d+)", op.rest)
+                idx_params.append((int(pm.group(1)) if pm else len(idx_params),
+                                   op.name))
+            for callee in _called_comps(op):
+                caller_of_comp[callee] = op
+        params_of_comp[cname] = [n for _, n in sorted(idx_params)]
+
+    def _dtype_bytes_of(type_str: str) -> int:
+        m = _SHAPE.search(type_str)
+        return DTYPE_BYTES[m.group(1)] if m else 0
+
+    _src_memo: Dict[str, int] = {}
+
+    def _src_dtype_bytes(name: str, depth: int = 0) -> int:
+        """Element width of the ultimate producer, through dtype-promotion
+        chains: passthrough ops, slicing, fusion roots, parameters (via the
+        call site), and get-tuple-element of tuples / while carries."""
+        if name in _src_memo:
+            return _src_memo[name]
+        if depth > 100 or name not in ops_by_name:
+            return 0
+        op = ops_by_name[name]
+        _src_memo[name] = _dtype_bytes_of(op.type_str)  # cycle guard
+        out = _src_memo[name]
+        refs = _operand_names(op)
+        if op.opcode in _PASSTHROUGH or op.opcode in _SLICING \
+                or op.opcode == "dynamic-update-slice":
+            if refs:
+                out = _src_dtype_bytes(refs[0], depth + 1) or out
+        elif op.opcode == "fusion":
+            callee = next((cn for cn in _called_comps(op) if cn in comps),
+                          None)
+            if callee and comps[callee].ops:
+                root = comps[callee].ops[-1]
+                out = _src_dtype_bytes(root.name, depth + 1) or out
+        elif op.opcode == "parameter":
+            cname = comp_of.get(name)
+            caller = caller_of_comp.get(cname)
+            if caller is not None:
+                try:
+                    pidx = params_of_comp[cname].index(name)
+                except ValueError:
+                    pidx = -1
+                crefs = _operand_names(caller)
+                if 0 <= pidx < len(crefs):
+                    out = _src_dtype_bytes(crefs[pidx], depth + 1) or out
+        elif op.opcode == "get-tuple-element":
+            im = re.search(r"index=(\d+)", op.rest)
+            if refs and im:
+                k = int(im.group(1))
+                base = refs[0]
+                # hop through while/params to the defining tuple
+                hops = 0
+                while base in ops_by_name and hops < 20:
+                    bop = ops_by_name[base]
+                    if bop.opcode == "while":
+                        base = _operand_names(bop)[0]
+                    elif bop.opcode == "parameter":
+                        cname = comp_of.get(base)
+                        caller = caller_of_comp.get(cname)
+                        if caller is None:
+                            break
+                        base = _operand_names(caller)[0] \
+                            if _operand_names(caller) else base
+                        if caller.opcode != "while" and base == refs[0]:
+                            break
+                    elif bop.opcode == "tuple":
+                        brefs = _operand_names(bop)
+                        if k < len(brefs):
+                            out = _src_dtype_bytes(brefs[k], depth + 1) or out
+                        break
+                    else:
+                        break
+                    hops += 1
+        _src_memo[name] = out
+        return out
+
+    def src_scale(operand_name: str, res_type: str) -> float:
+        """min(1, source-dtype / result-dtype) through convert chains."""
+        res_b = _dtype_bytes_of(res_type)
+        src_b = _src_dtype_bytes(operand_name)
+        if res_b and src_b and src_b < res_b:
+            return src_b / res_b
+        return 1.0
+
+    cost = HLOCost(collectives={k: 0.0 for k in COLLECTIVE_OPS},
+                   collective_counts={k: 0.0 for k in COLLECTIVE_OPS})
+
+    for c in comps.values():
+        m = mult.get(c.name, 0.0)
+        if m <= 0:
+            continue
+        for op in c.ops:
+            # ---- dot/conv FLOPs (counted inside fusions too) -------------
+            if op.opcode in ("dot", "convolution"):
+                out = _shape_dims(op.type_str)
+                if out is not None:
+                    _, odims = out
+                    n_out = 1
+                    for d in odims:
+                        n_out *= d
+                    k = 1
+                    cm = _CONTRACT.search(op.rest)
+                    if cm:
+                        # lhs operand = first %ref in the operand list
+                        opnd = re.match(r"\s*%?([\w.\-]+)", op.rest)
+                        lhs_dims = None
+                        if opnd and opnd.group(1) in shapes:
+                            sh = _shape_dims(shapes[opnd.group(1)])
+                            lhs_dims = sh[1] if sh else None
+                        if lhs_dims:
+                            for ci in cm.group(1).split(","):
+                                if ci:
+                                    idx = int(ci)
+                                    if idx < len(lhs_dims):
+                                        k *= lhs_dims[idx]
+                    cost.dot_flops += m * 2.0 * n_out * k
+            # ---- collective bytes (ring accounting) ----------------------
+            base = next((k for k in COLLECTIVE_OPS
+                         if op.opcode == k or op.opcode == k + "-start"), None)
+            if base is not None and not op.opcode.endswith("-done"):
+                nbytes = _type_bytes(op.type_str)
+                opnds = _operand_names(op)
+                if opnds:       # charge at the pre-promotion source dtype
+                    nbytes *= src_scale(opnds[0], op.type_str)
+                if base == "all-gather":
+                    # result type is the gathered (full) buffer
+                    g = _group_size(op, default_group)
+                    moved = nbytes * (g - 1) / g
+                elif base == "all-reduce":
+                    g = _group_size(op, default_group)
+                    moved = 2 * nbytes * (g - 1) / g
+                elif base == "reduce-scatter":
+                    g = _group_size(op, default_group)
+                    moved = nbytes * (g - 1)   # result is the shard
+                elif base == "all-to-all":
+                    g = _group_size(op, default_group)
+                    moved = nbytes * (g - 1) / g
+                else:  # collective-permute
+                    moved = nbytes
+                cost.collectives[base] += m * moved
+                cost.collective_counts[base] += m
+                cost.collective_bytes += m * moved
+            # ---- HBM traffic at fusion boundaries ------------------------
+            if not c.is_fusion and op.opcode not in _NO_TRAFFIC:
+                cost.hbm_bytes += m * _op_traffic(op, comps, shapes,
+                                                  pure_convert, src_scale)
+    return cost
+
+
+_SLICING = {"dynamic-slice", "slice", "gather"}
+
+
+def _operand_names(op: Op) -> List[str]:
+    # operands end at the first close-paren; attributes (calls=, body=,
+    # metadata=...) follow it, so no name-based filtering is needed
+    head = op.rest.split(")")[0]
+    return [r.group(1) for r in re.finditer(r"%([\w.\-]+)", head)]
+
+
+def _op_traffic(op: Op, comps: Dict[str, Computation],
+                shapes: Dict[str, str], pure_convert=None,
+                src_scale=None) -> float:
+    """HBM bytes moved by one top-level op.
+
+    Slicing ops read only what they produce; dynamic-update-slice writes only
+    the update region; fusions are analysed per-parameter so a fused
+    dynamic-slice of a big loop-carried buffer (the lax.scan pattern) is
+    charged the slice, not the buffer.  Reads resolve through dtype-promotion
+    chains (``src_scale``) so a CPU-backend f32 copy of a bf16 tensor is
+    charged at bf16 width, matching the TPU target.
+    """
+    out_bytes = _type_bytes(op.type_str)
+    operands = _operand_names(op)
+
+    def in_cost(name: str) -> float:
+        b = _type_bytes(shapes.get(name, ""))
+        if src_scale is not None and name in shapes:
+            b *= src_scale(name, shapes[name])
+        return b
+
+    if op.opcode in _SLICING:
+        return 2.0 * out_bytes
+    if op.opcode == "dynamic-update-slice":
+        upd = _type_bytes(shapes.get(operands[1], "")) if len(operands) > 1 \
+            else out_bytes
+        return 2.0 * upd
+    if op.opcode == "fusion":
+        comp = None
+        for cname in _called_comps(op):
+            if cname in comps:
+                comp = comps[cname]
+                break
+        if comp is not None:
+            if pure_convert is not None and pure_convert.get(comp.name):
+                return 0.0      # dtype-copy fusion: absent on TPU
+            return _fusion_traffic(op, comp, shapes, out_bytes, operands,
+                                   in_cost)
+
+    in_bytes = sum(in_cost(o) for o in operands)
+    return out_bytes + in_bytes
+
+
+_PASSTHROUGH = {"convert", "bitcast", "copy", "reshape", "transpose"}
+
+
+def _fusion_traffic(op: Op, comp: Computation, shapes: Dict[str, str],
+                    out_bytes: float, operands: List[str],
+                    in_cost=None) -> float:
+    """HBM traffic of one fusion call, with TPU in-place-DUS semantics.
+
+    Convert/bitcast chains are resolved through: the XLA CPU backend has no
+    native bf16 dot, so it upcasts operands and emits full-pool
+    convert(dus(convert(param), update)) round-trips for the lax.scan KV
+    update pattern; a TPU emits a native in-place DUS fusion that writes
+    only the update region.  We charge the TPU semantics (and document the
+    CPU artifact in EXPERIMENTS.md).
+    """
+    inner = {o.name: o for o in comp.ops}
+    param_of: Dict[str, int] = {}
+    consumers: Dict[str, List[Op]] = defaultdict(list)
+    for iop in comp.ops:
+        if iop.opcode == "parameter":
+            pm = re.match(r"\s*(\d+)", iop.rest)
+            if pm:
+                param_of[iop.name] = int(pm.group(1))
+        else:
+            for ref in _operand_names(iop):
+                consumers[ref].append(iop)
+
+    def resolve(name: str) -> str:
+        """Follow pure dtype/layout chains back to their source op."""
+        seen = 0
+        while name in inner and inner[name].opcode in _PASSTHROUGH \
+                and seen < 32:
+            refs = _operand_names(inner[name])
+            if not refs:
+                break
+            name = refs[0]
+            seen += 1
+        return name
+
+    def real_consumers(name: str) -> List[Op]:
+        """Consumers reached through pure dtype/layout chains."""
+        out, stack, seen = [], [name], set()
+        while stack:
+            n = stack.pop()
+            for co in consumers.get(n, []):
+                if co.name in seen:
+                    continue
+                seen.add(co.name)
+                if co.opcode in _PASSTHROUGH:
+                    stack.append(co.name)
+                else:
+                    out.append(co)
+        return out
+
+    _INPLACE = ("dynamic-update-slice", "scatter")
+
+    def upd_bytes(iop: Op) -> float:
+        # dus(target, update, idx...) / scatter(target, indices, updates)
+        refs = _operand_names(iop)
+        k = 1 if iop.opcode == "dynamic-update-slice" else 2
+        if len(refs) > k:
+            src = refs[k]
+            if src in inner:
+                return _type_bytes(inner[src].type_str)
+            return _type_bytes(shapes.get(src, ""))
+        return 0.0
+
+    reads = 0.0
+    dus_on_param = 0.0
+    for pname, pidx in param_of.items():
+        if pidx < len(operands):
+            full = in_cost(operands[pidx]) if in_cost is not None \
+                else _type_bytes(shapes.get(operands[pidx], ""))
+        else:
+            full = 0.0
+        cons = real_consumers(pname)
+        if not cons:
+            continue
+        if all(co.opcode in _INPLACE
+               and resolve(_operand_names(co)[0]) == pname for co in cons):
+            # parameter only serves as in-place update target (TPU aliases
+            # the donated buffer): charge the updated rows, not the buffer
+            u = sum(upd_bytes(co) for co in cons)
+            reads += u
+            dus_on_param = max(dus_on_param, u)
+        elif all(co.opcode in _SLICING for co in cons):
+            reads += sum(_type_bytes(co.type_str) for co in cons)
+        else:
+            reads += full
+    # root resolving to an in-place update on a param -> write update only
+    root = comp.ops[-1] if comp.ops else None
+    writes = out_bytes
+    if root is not None:
+        rsrc = resolve(root.name)
+        if rsrc in inner and inner[rsrc].opcode in _INPLACE and dus_on_param:
+            writes = dus_on_param
+    return reads + writes

@@ -1,0 +1,42 @@
+"""Production meshes and sharding-rule construction.
+
+Single pod: (data=16, model=16) = 256 chips (v5e-class).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the pod axis is pure
+data parallelism (batch + KV pool blocks shard over it; weights/optimizer
+stay FSDP-within-pod so no per-layer gather crosses the pod boundary —
+only the gradient all-reduce does).
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module touches no jax device state.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.models.sharding import DEFAULT_RULES, ShardingRules
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_rules(mesh, *, kv_axes: Optional[tuple] = None) -> ShardingRules:
+    """Logical->physical rules for the given mesh (pod-aware)."""
+    rules = dict(DEFAULT_RULES)
+    multi_pod = "pod" in mesh.shape
+    if multi_pod:
+        rules["act_batch"] = ("pod", "data")
+        rules["kv_blocks"] = ("pod", "data", "model")
+    if kv_axes is not None:
+        rules["kv_blocks"] = kv_axes
+    return ShardingRules(mesh=mesh, rules=rules)
+
+
+def total_shards(rules: ShardingRules, logical: str = "kv_blocks") -> int:
+    return rules.axis_size(rules.axis(logical))

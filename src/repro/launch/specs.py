@@ -1,0 +1,284 @@
+"""ShapeDtypeStruct input specs for every (architecture x input-shape) pair.
+
+``build_lowering(cfg, shape, rules)`` returns (step_fn, abstract_args,
+in_shardings) — everything ``jax.jit(...).lower()`` needs, with zero device
+allocation (the shannon/kernels dry-run pattern).
+
+Shape kinds:
+  train    -> train_step (loss + grad + AdamW update)
+  prefill  -> prefill    (full-sequence forward, returns last logits + KV)
+  decode   -> serve_step (ONE token against the Harvest KV pools / states)
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch.mesh import make_rules, total_shards
+from repro.models import model as M
+from repro.models import ssm as S
+from repro.models import xlstm as X
+from repro.models.sharding import ShardingRules, logical_to_spec
+from repro.train.optim import adamw_init, train_step
+
+KV_BLOCK_SIZE = 256
+DECODE_HEADROOM_BLOCKS = 1
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _shard(rules: Optional[ShardingRules], sds, *logical):
+    if rules is None:
+        return None
+    return NamedSharding(rules.mesh,
+                         logical_to_spec(rules, *logical, shape=sds.shape))
+
+
+# ---------------------------------------------------------------------------
+# Batch specs (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def abstract_batch(cfg: ModelConfig, shape: InputShape, with_labels: bool):
+    b, s = shape.global_batch, shape.seq_len
+    npre = cfg.modality.num_prefix_embeddings if cfg.modality else 0
+    s_tok = s - npre
+    ncb = cfg.modality.num_codebooks if cfg.modality else 1
+    tok_shape = (b, s_tok, ncb) if (cfg.family == "audio" and ncb > 1) \
+        else (b, s_tok)
+    batch = {
+        "tokens": _sds(tok_shape, jnp.int32),
+        "positions": _sds((b, s), jnp.int32),
+    }
+    if npre:
+        batch["prefix_embeddings"] = _sds((b, npre, cfg.d_model), jnp.bfloat16)
+    if cfg.rope_style == "mrope":
+        batch["positions_3d"] = _sds((b, s, 3), jnp.int32)
+    if with_labels:
+        batch["labels"] = _sds(tok_shape, jnp.int32)
+    return batch
+
+
+def batch_shardings(cfg, batch, rules: Optional[ShardingRules]):
+    if rules is None:
+        return None
+    out = {}
+    for k, v in batch.items():
+        logical = ("act_batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = _shard(rules, v, *logical)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode state specs
+# ---------------------------------------------------------------------------
+
+
+def blocks_per_request(cfg: ModelConfig, seq_len: int,
+                       block_size: int = KV_BLOCK_SIZE) -> int:
+    """KV working set in blocks: SWA/chunked attention bound it."""
+    span = seq_len
+    if cfg.sliding_window is not None:
+        span = min(span, cfg.sliding_window)
+    if cfg.attention_chunk is not None:
+        span = min(span, cfg.attention_chunk)
+    return math.ceil(span / block_size) + DECODE_HEADROOM_BLOCKS
+
+
+def abstract_decode_state(cfg: ModelConfig, shape: InputShape,
+                          rules: Optional[ShardingRules],
+                          block_size: int = KV_BLOCK_SIZE,
+                          peer_fraction: float = 0.0):
+    b, seq = shape.global_batch, shape.seq_len
+    nkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    L_kv = M.num_kv_layers(cfg)
+    shards = total_shards(rules) if rules is not None else 1
+
+    def pools(n_needed):
+        n_slots = shards * math.ceil(n_needed / shards)
+        return M.KVPools(
+            pool_k=_sds((L_kv, n_slots, block_size, nkv, hd), jnp.bfloat16),
+            pool_v=_sds((L_kv, n_slots, block_size, nkv, hd), jnp.bfloat16),
+            slot_req=_sds((n_slots,), jnp.int32),
+            slot_base=_sds((n_slots,), jnp.int32),
+            append_slot=_sds((b,), jnp.int32),
+            append_off=_sds((b,), jnp.int32),
+        )
+
+    kv = peer = None
+    if L_kv:
+        n_needed = b * blocks_per_request(cfg, seq, block_size)
+        kv = pools(n_needed)
+        if peer_fraction > 0:
+            peer = pools(max(int(n_needed * peer_fraction), shards))
+
+    states = None
+    if cfg.family == "hybrid":
+        states = jax.eval_shape(
+            lambda: jax.tree.map(
+                lambda t: jnp.broadcast_to(t, (cfg.num_layers,) + t.shape),
+                S.init_ssm_state(cfg, b)))
+    elif cfg.family == "ssm":
+        per = cfg.xlstm.slstm_every
+        n_super = cfg.num_layers // per
+        states = jax.eval_shape(lambda: (
+            jax.tree.map(lambda t: jnp.broadcast_to(
+                t, (n_super, per - 1) + t.shape), X.init_mlstm_state(cfg, b)),
+            jax.tree.map(lambda t: jnp.broadcast_to(
+                t, (n_super,) + t.shape), X.init_slstm_state(cfg, b)),
+        ))
+
+    ncb = cfg.modality.num_codebooks if cfg.modality else 1
+    tokens = _sds((b, ncb), jnp.int32) if (cfg.family == "audio" and ncb > 1) \
+        else _sds((b,), jnp.int32)
+    p3 = _sds((b, 3), jnp.int32) if cfg.rope_style == "mrope" else None
+    return M.DecodeState(tokens=tokens, pos=_sds((b,), jnp.int32), kv=kv,
+                         peer=peer, states=states, positions_3d=p3)
+
+
+def decode_state_shardings(cfg, state: M.DecodeState,
+                           rules: Optional[ShardingRules]):
+    if rules is None:
+        return None
+
+    def pool_shardings(kv):
+        if kv is None:
+            return None
+        return M.KVPools(
+            pool_k=_shard(rules, kv.pool_k, None, "kv_blocks", None, None, None),
+            pool_v=_shard(rules, kv.pool_v, None, "kv_blocks", None, None, None),
+            slot_req=_shard(rules, kv.slot_req, "kv_blocks"),
+            slot_base=_shard(rules, kv.slot_base, "kv_blocks"),
+            append_slot=_shard(rules, kv.append_slot, None),
+            append_off=_shard(rules, kv.append_off, None),
+        )
+
+    def state_shardings(states):
+        if states is None:
+            return None
+        def leaf(s):
+            # (stack dims..., b, heads-ish...) — shard batch where divisible
+            logical = [None] * len(s.shape)
+            for i, d in enumerate(s.shape):
+                pass
+            # find the batch dim: hybrid (L, b, ...), xlstm (ns, per, b, ...)
+            return s
+        # shard batch + heads dims by name convention
+        if cfg.family == "hybrid":
+            return S.SSMState(
+                s=_shard(rules, states.s, None, "act_batch", "state_heads",
+                         None, None),
+                conv=_shard(rules, states.conv, None, "act_batch", None, None),
+            )
+        mst, sst = states
+        msh = X.MLSTMState(
+            c=_shard(rules, mst.c, None, None, "act_batch", "state_heads",
+                     None, None),
+            n=_shard(rules, mst.n, None, None, "act_batch", "state_heads", None),
+            m=_shard(rules, mst.m, None, None, "act_batch", "state_heads"),
+            conv=_shard(rules, mst.conv, None, None, "act_batch", None, None),
+        )
+        ssh = X.SLSTMState(
+            c=_shard(rules, sst.c, None, "act_batch", "state_heads", None),
+            n=_shard(rules, sst.n, None, "act_batch", "state_heads", None),
+            m=_shard(rules, sst.m, None, "act_batch", "state_heads", None),
+            h=_shard(rules, sst.h, None, "act_batch", "state_heads", None),
+        )
+        return (msh, ssh)
+
+    rep = NamedSharding(rules.mesh, P())
+    return M.DecodeState(
+        tokens=rep, pos=rep,
+        kv=pool_shardings(state.kv),
+        peer=pool_shardings(state.peer),
+        states=state_shardings(state.states),
+        positions_3d=rep if state.positions_3d is not None else None,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Lowering builder
+# ---------------------------------------------------------------------------
+
+
+def build_lowering(cfg: ModelConfig, shape: InputShape,
+                   rules: Optional[ShardingRules],
+                   harvest_inplace: bool = False,
+                   peer_fraction: float = 0.0):
+    """Returns (fn, abstract_args, in_shardings)."""
+    params = M.abstract_params(cfg)
+    pspecs = M.param_specs(cfg, rules)
+    psh = None if rules is None else jax.tree.map(
+        lambda s: NamedSharding(rules.mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, P))
+
+    if shape.kind == "train":
+        batch = abstract_batch(cfg, shape, with_labels=True)
+        opt = jax.eval_shape(adamw_init, params)
+        osh = None if rules is None else jax.eval_shape(adamw_init, params)
+        if rules is not None:
+            rep = NamedSharding(rules.mesh, P())
+            osh = type(opt)(step=rep,
+                            mu=jax.tree.map(lambda s: NamedSharding(rules.mesh, s),
+                                            pspecs,
+                                            is_leaf=lambda x: isinstance(x, P)),
+                            nu=jax.tree.map(lambda s: NamedSharding(rules.mesh, s),
+                                            pspecs,
+                                            is_leaf=lambda x: isinstance(x, P)))
+
+        def fn(params, opt_state, batch):
+            return train_step(params, opt_state, batch, cfg, rules)
+
+        args = (params, opt, batch)
+        shardings = None if rules is None else (
+            psh, osh, batch_shardings(cfg, batch, rules))
+        return fn, args, shardings
+
+    if shape.kind == "prefill":
+        batch = abstract_batch(cfg, shape, with_labels=False)
+
+        def fn(params, batch):
+            logits, out = M.prefill(params, batch, cfg, rules)
+            return logits, out.kv, out.states
+
+        args = (params, batch)
+        shardings = None if rules is None else (
+            psh, batch_shardings(cfg, batch, rules))
+        return fn, args, shardings
+
+    # decode — batch-REPLICATED over the data axis (§Perf iteration 2):
+    # with batch sharded over "data", GSPMD must all-gather every 2D-sharded
+    # weight each step (~weights x 15/16 over ICI, the dominant decode
+    # collective).  One decode token is compute-trivial, so replicating the
+    # batch lets GSPMD contract against the local weight shard and
+    # all-reduce the (tiny) activations instead; weights stay 2D-sharded at
+    # rest.  KV pools keep their (data, model) slot sharding.
+    import dataclasses as _dc
+    import os as _os
+    baseline = _os.environ.get("HARVEST_DECODE_BASELINE") == "1"
+    # batch replication pays only when per-request state is KV-paged (the
+    # pools shard over kv_blocks regardless); SSM/hybrid recurrent state
+    # scales with batch and must keep its act_batch sharding
+    replicate_ok = cfg.family not in ("ssm", "hybrid")
+    rules_d = rules if (rules is None or baseline or not replicate_ok)         else _dc.replace(rules, rules={**rules.rules, "act_batch": None})
+    state = abstract_decode_state(cfg, shape, rules_d,
+                                  peer_fraction=peer_fraction)
+
+    def fn(params, state):
+        return M.serve_step(params, state, cfg, rules_d,
+                            harvest_inplace=harvest_inplace,
+                            carried_pools=not baseline)
+
+    args = (params, state)
+    shardings = None if rules is None else (
+        psh, decode_state_shardings(cfg, state, rules_d))
+    return fn, args, shardings

@@ -1,0 +1,46 @@
+"""Training launcher.
+
+CPU example (quickstart scale):
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --reduced \
+      --steps 200 --batch 8 --seq-len 128
+
+On a real TPU pod the same entry point shards with the production mesh
+(--mesh pod|multipod) via the schema PartitionSpecs.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="2-layer smoke-scale variant (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--mesh", choices=["none", "pod", "multipod"],
+                    default="none")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.train.loop import train
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    rules = None
+    if args.mesh != "none":
+        from repro.launch.mesh import make_production_mesh, make_rules
+        mesh = make_production_mesh(multi_pod=args.mesh == "multipod")
+        rules = make_rules(mesh)
+    train(cfg, steps=args.steps, batch=args.batch, seq_len=args.seq_len,
+          lr=args.lr, seed=args.seed, rules=rules, ckpt_dir=args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

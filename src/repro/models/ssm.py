@@ -1,0 +1,148 @@
+"""Mamba2 (SSD) selective state-space layer.
+
+Prefill/train uses the chunked SSD algorithm (intra-chunk quadratic +
+inter-chunk state recurrence); decode uses the O(1) single-token recurrence.
+The recurrent state is the "reconstructible transient state" case of the
+Harvest durability model: it may live in the lossy peer tier and be rebuilt
+by re-running prefill if revoked.
+
+Shapes follow the Mamba2 paper with ngroups=1:
+  d_inner = expand * d_model,  nheads = d_inner // head_dim
+  state S: (b, nheads, head_dim, state_dim)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.sharding import shard
+
+
+class SSMState(NamedTuple):
+    s: jnp.ndarray        # (b, nh, hd, N) fp32 — SSM state
+    conv: jnp.ndarray     # (b, W-1, conv_dim) — causal-conv tail
+
+
+def ssm_dims(cfg: ModelConfig):
+    sc = cfg.ssm
+    d_inner = sc.expand * cfg.d_model
+    nheads = d_inner // sc.head_dim
+    conv_dim = d_inner + 2 * sc.state_dim          # x, B, C go through the conv
+    return d_inner, nheads, conv_dim
+
+
+def _causal_conv(u, w, b, tail=None):
+    """Depthwise causal conv1d.  u: (b, s, c);  w: (W, c);  tail: (b, W-1, c)."""
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros(u.shape[:1] + (W - 1,) + u.shape[2:], u.dtype)
+    up = jnp.concatenate([tail, u], axis=1)
+    out = sum(up[:, i:i + u.shape[1]] * w[i] for i in range(W))
+    new_tail = up[:, up.shape[1] - (W - 1):]
+    return jax.nn.silu(out + b), new_tail
+
+
+def _ssd_chunked(xh, dt, A, B, C, chunk: int, s0=None):
+    """Chunked SSD scan.
+
+    xh: (b, s, nh, hd)   dt: (b, s, nh)   A: (nh,)  B, C: (b, s, N)
+    Returns (y: (b, s, nh, hd), final state (b, nh, hd, N)).
+    """
+    b, s, nh, hd = xh.shape
+    N = B.shape[-1]
+    nchunks = -(-s // chunk)
+    pad = nchunks * chunk - s
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+
+    f32 = jnp.float32
+    # chunk-major layout for lax.scan: (c, b, q, ...)
+    xc = xh.reshape(b, nchunks, chunk, nh, hd).astype(f32).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(b, nchunks, chunk, nh).astype(f32).transpose(1, 0, 2, 3)
+    Bc = B.reshape(b, nchunks, chunk, N).astype(f32).transpose(1, 0, 2, 3)
+    Cc = C.reshape(b, nchunks, chunk, N).astype(f32).transpose(1, 0, 2, 3)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def scan_body(S_prev, inp):
+        xq, dtq, Bq, Cq = inp                      # (b,q,nh,hd) (b,q,nh) (b,q,N)
+        dA = dtq * A[None, None, :]
+        cum = jnp.cumsum(dA, axis=1)               # (b,q,nh) log-decay
+        # intra-chunk: L[i,j] = exp(cum_i - cum_j), j <= i
+        diff = cum[:, :, None, :] - cum[:, None, :, :]          # (b,i,j,nh)
+        L = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+        CB = jnp.einsum("bin,bjn->bij", Cq, Bq)
+        y_intra = jnp.einsum("bijh,bij,bjh,bjhd->bihd", L, CB, dtq, xq)
+        # inter-chunk contribution from carried state
+        y_inter = jnp.einsum("bin,bih,bhdn->bihd", Cq, jnp.exp(cum), S_prev)
+        # state update
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)            # (b,q,nh)
+        S_local = jnp.einsum("bjh,bjh,bjn,bjhd->bhdn",
+                             decay_to_end, dtq, Bq, xq)
+        S_new = S_prev * jnp.exp(cum[:, -1, :])[..., None, None] + S_local
+        return S_new, y_intra + y_inter
+
+    if s0 is None:
+        s0 = jnp.zeros((b, nh, hd, N), f32)
+    S_final, yc = jax.lax.scan(scan_body, s0, (xc, dtc, Bc, Cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(b, nchunks * chunk, nh, hd)
+    return y[:, :s], S_final
+
+
+def mamba2_layer(x, p, cfg: ModelConfig, rules=None,
+                 state: Optional[SSMState] = None, single_token: bool = False
+                 ) -> Tuple[jnp.ndarray, SSMState]:
+    """Mamba2 sublayer.  x: (b, s, d).  Returns (y, new_state)."""
+    sc = cfg.ssm
+    d_inner, nheads, conv_dim = ssm_dims(cfg)
+    b, s, d = x.shape
+
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+
+    conv_tail = state.conv if state is not None else None
+    xbc, new_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_tail)
+    xs, B, C = jnp.split(xbc, [d_inner, d_inner + sc.state_dim], axis=-1)
+    xh = xs.reshape(b, s, nheads, sc.head_dim)
+    xh = shard(xh, rules, "act_batch", "act_seq", "state_heads", None)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (nh,)
+    s_prev = state.s if state is not None else None
+
+    if single_token:
+        # O(1) recurrence: S = S * exp(dt A) + dt B x ; y = C S
+        f32 = jnp.float32
+        dt1 = dt[:, 0].astype(f32)                              # (b, nh)
+        dA = jnp.exp(dt1 * A[None, :])
+        if s_prev is None:
+            s_prev = jnp.zeros((b, nheads, sc.head_dim, sc.state_dim), f32)
+        Bx = jnp.einsum("bh,bn,bhd->bhdn", dt1, B[:, 0].astype(f32),
+                        xh[:, 0].astype(f32))
+        S = s_prev * dA[..., None, None] + Bx
+        y = jnp.einsum("bn,bhdn->bhd", C[:, 0].astype(f32), S)[:, None]
+    else:
+        y, S = _ssd_chunked(xh, dt, A, B.astype(jnp.float32), C.astype(jnp.float32),
+                            sc.chunk_size, s_prev)
+
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    return out, SSMState(s=S, conv=new_tail)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int) -> SSMState:
+    sc = cfg.ssm
+    d_inner, nheads, conv_dim = ssm_dims(cfg)
+    return SSMState(
+        s=jnp.zeros((batch, nheads, sc.head_dim, sc.state_dim), jnp.float32),
+        conv=jnp.zeros((batch, sc.conv_width - 1, conv_dim), jnp.bfloat16),
+    )

@@ -1,0 +1,3 @@
+from repro.serving.engine import EngineStats, HarvestServingEngine
+from repro.serving.scheduler import (SCHEDULERS, CompletelyFairScheduler,
+                                     FCFSScheduler, Request)

@@ -1,0 +1,394 @@
+"""Harvest serving engine: continuous batching + tiered paged KV.
+
+Runs a (reduced) model for real on this host while the Harvest runtime
+manages placement: the local pool is a live JAX array consumed by
+``serve_step``; evicted blocks' payloads move into the KVOffloadManager's
+store (peer / host tier), reloads copy them back, revocations drop or
+fall back per the durability mode, and the cluster-trace monitor injects
+the external memory pressure that drives revocations.
+
+Wall-time on this CPU host is meaningless for the paper's claims, so the
+engine keeps a *simulated clock*: per decode step,
+    t_step = max(t_compute, t_reload)   (CGOPipe-style overlap)
+with t_compute from the hardware model and t_reload from the tier links.
+Generated tokens are REAL (greedy/temperature over the model's logits).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.allocator import HarvestAllocator
+from repro.core.kv_manager import KVOffloadManager
+from repro.core.monitor import PeerMonitor
+from repro.core.tiers import H100_NVLINK, HardwareModel, Tier
+from repro.models import model as M
+from repro.serving.scheduler import SCHEDULERS, Request
+
+
+@dataclass
+class EngineStats:
+    clock_s: float = 0.0
+    compute_s: float = 0.0
+    reload_s: float = 0.0
+    steps: int = 0
+    tokens_out: int = 0
+    recomputes: int = 0
+    preemptions: int = 0
+
+    def throughput(self) -> float:
+        return self.tokens_out / max(self.clock_s, 1e-12)
+
+
+class HarvestServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
+                 block_size: int = 16, num_local_slots: int = 24,
+                 max_seq_len: int = 256,
+                 allocator: Optional[HarvestAllocator] = None,
+                 monitor: Optional[PeerMonitor] = None,
+                 hardware: HardwareModel = H100_NVLINK,
+                 scheduler: str = "fcfs", durability: str = "host_backed",
+                 temperature: float = 0.0, seed: int = 0,
+                 overlap_reloads: bool = True):
+        assert cfg.has_kv_cache or cfg.family == "ssm"
+        self.cfg = cfg
+        self.params = params
+        self.B = max_batch
+        self.bs = block_size
+        self.hw = hardware
+        self.temperature = temperature
+        self.rng = np.random.default_rng(seed)
+        self.overlap = overlap_reloads
+        self.monitor = monitor
+        self.scheduler = SCHEDULERS[scheduler]() if isinstance(scheduler, str) \
+            else scheduler
+
+        self.L_kv = M.num_kv_layers(cfg)
+        nkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        self.n_slots = num_local_slots
+        self.allocator = allocator or HarvestAllocator({})
+        self.kv_mgr = KVOffloadManager(
+            cfg, self.allocator, hardware, block_size, num_local_slots,
+            durability=durability, store_payload=True,
+            num_kv_layers=self.L_kv)
+        self.kv_mgr.evict_hook = self._on_evict
+        self.kv_mgr.reload_hook = self._on_reload
+
+        if self.L_kv:
+            self.pool_k = jnp.zeros((self.L_kv, self.n_slots, block_size,
+                                     nkv, hd), jnp.float32)
+            self.pool_v = jnp.zeros_like(self.pool_k)
+        else:
+            self.pool_k = self.pool_v = None
+        self.slot_req = np.full((self.n_slots,), -1, np.int32)
+        self.slot_base = np.zeros((self.n_slots,), np.int32)
+
+        self.states = self._init_states()
+        self.row_tokens = np.zeros((self.B,), np.int32)
+        self.row_pos = np.zeros((self.B,), np.int32)
+        self.free_rows = list(range(self.B))
+        self.row_of: Dict[int, int] = {}       # req_id -> batch row
+        self.waiting: List[Request] = []
+        self.running: List[Request] = []
+        self.finished: List[Request] = []
+        self.stats = EngineStats()
+        self._next_id = 0
+        self._decode_fn = jax.jit(
+            lambda p, st: M.serve_step(p, st, cfg, None))
+        self._prefill_fn = jax.jit(
+            lambda p, batch: M.forward(p, batch, cfg, None, want_kv=True))
+
+        # per-token decode compute estimate (weight-read bound)
+        pc = cfg.param_counts()
+        self._t_flop_tok = 2 * pc["active"] / hardware.peak_flops
+        self._t_weights = 2 * pc["active"] / hardware.hbm_bw
+
+    # ----------------------------------------------------------- payload
+    def _on_evict(self, bid, slot):
+        if self.pool_k is None:
+            return
+        data = np.stack([np.asarray(self.pool_k[:, slot]),
+                         np.asarray(self.pool_v[:, slot])], axis=1)
+        self.kv_mgr.write_payload(*bid, data)
+        self.slot_req[slot] = -1
+
+    def _on_reload(self, bid, slot):
+        data = self.kv_mgr.read_payload(*bid)
+        assert data is not None, f"reload of lost block {bid}"
+        self.pool_k = self.pool_k.at[:, slot].set(data[:, 0])
+        self.pool_v = self.pool_v.at[:, slot].set(data[:, 1])
+        self.slot_req[slot] = self.row_of.get(bid[0], -1)
+        self.slot_base[slot] = self.kv_mgr.table[bid].base_pos
+
+    # ------------------------------------------------------------ states
+    def _init_states(self):
+        cfg = self.cfg
+        if cfg.family == "hybrid":
+            from repro.models import ssm as S
+            st0 = S.init_ssm_state(cfg, self.B)
+            return jax.tree.map(
+                lambda t: jnp.broadcast_to(t, (cfg.num_layers,) + t.shape)
+                .astype(t.dtype), st0)
+        if cfg.family == "ssm":
+            from repro.models import xlstm as X
+            per = cfg.xlstm.slstm_every
+            ns = cfg.num_layers // per
+            m0 = X.init_mlstm_state(cfg, self.B)
+            s0 = X.init_slstm_state(cfg, self.B)
+            return (jax.tree.map(lambda t: jnp.broadcast_to(
+                        t, (ns, per - 1) + t.shape), m0),
+                    jax.tree.map(lambda t: jnp.broadcast_to(
+                        t, (ns,) + t.shape), s0))
+        return None
+
+    def _set_state_row(self, row, new_states):
+        """Write one request's prefill states into its batch row."""
+        if self.states is None:
+            return
+        if self.cfg.family == "hybrid":
+            self.states = jax.tree.map(
+                lambda full, one: full.at[:, row].set(one[:, 0]),
+                self.states, new_states)
+        else:
+            m_full, s_full = self.states
+            m_new, s_new = new_states
+            m_full = jax.tree.map(
+                lambda full, one: full.at[:, :, row].set(one[:, :, 0]),
+                m_full, m_new)
+            s_full = jax.tree.map(
+                lambda full, one: full.at[:, row].set(one[:, 0]),
+                s_full, s_new)
+            self.states = (m_full, s_full)
+
+    # ------------------------------------------------------------ submit
+    def submit(self, prompt: List[int], max_new_tokens: int) -> Request:
+        r = Request(self._next_id, list(prompt), max_new_tokens)
+        self._next_id += 1
+        self.waiting.append(r)
+        return r
+
+    # ------------------------------------------------------------ prefill
+    def _prefill(self, r: Request) -> None:
+        prefix = r.prompt + r.output            # rollback re-prefills output
+        n = len(prefix)
+        n_pad = self.bs * math.ceil(n / self.bs)
+        toks = np.zeros((1, n_pad), np.int32)
+        toks[0, :n] = prefix
+        batch = {"tokens": jnp.asarray(toks),
+                 "positions": jnp.broadcast_to(jnp.arange(n_pad), (1, n_pad))}
+        npre = self.cfg.modality.num_prefix_embeddings if self.cfg.modality else 0
+        if npre:
+            batch["prefix_embeddings"] = jnp.zeros((1, npre, self.cfg.d_model),
+                                                   jnp.bfloat16)
+            batch["positions"] = jnp.broadcast_to(
+                jnp.arange(n_pad + npre), (1, n_pad + npre))
+        if self.cfg.rope_style == "mrope":
+            s_all = n_pad + npre
+            batch["positions_3d"] = jnp.broadcast_to(
+                jnp.arange(s_all)[:, None], (1, s_all, 3))
+        logits, out = self._prefill_fn(self.params, batch)
+        row = r.row
+        # simulated prefill cost: read weights once + prefix compute
+        self.stats.clock_s += max(n * self._t_flop_tok, self._t_weights)
+
+        if self.L_kv:
+            k, v = out.kv
+            if npre:   # prefix embeddings occupy the first npre positions
+                k, v = k[:, :, npre:], v[:, :, npre:]
+            nb = math.ceil(n / self.bs)
+            for j in range(nb):
+                slot, ops = self.kv_mgr.allocate_block(r.req_id, j, j * self.bs)
+                self._apply_ops(ops)
+                lo, hi = j * self.bs, min((j + 1) * self.bs, n_pad)
+                self.pool_k = self.pool_k.at[:, slot, :hi - lo].set(
+                    k[:, 0, lo:hi].astype(jnp.float32))
+                self.pool_v = self.pool_v.at[:, slot, :hi - lo].set(
+                    v[:, 0, lo:hi].astype(jnp.float32))
+                self.slot_req[slot] = row
+                self.slot_base[slot] = j * self.bs
+                ent = self.kv_mgr.table[(r.req_id, j)]
+                ent.filled = min(self.bs, n - lo) if lo < n else 0
+        if out.states is not None:
+            self._set_state_row(row, out.states)
+
+        nxt = self._sample(np.asarray(logits[0, npre + n - 1]))
+        if not r.output:
+            r.output.append(int(nxt))
+            self.stats.tokens_out += 1
+        self.row_tokens[row] = r.output[-1]
+        self.row_pos[row] = len(r.prompt) + len(r.output) - 1
+        r.needs_prefill = False
+
+    def _sample(self, logits: np.ndarray) -> int:
+        if self.temperature <= 0:
+            return int(np.argmax(logits))
+        p = logits.astype(np.float64) / self.temperature
+        p = np.exp(p - p.max())
+        p /= p.sum()
+        return int(self.rng.choice(len(p), p=p))
+
+    def _apply_ops(self, ops) -> float:
+        t = sum(op.seconds for op in ops)
+        self.stats.reload_s += t
+        return t
+
+    # -------------------------------------------------------------- step
+    def step(self) -> bool:
+        """One engine iteration. Returns False when all work is done."""
+        if not (self.waiting or self.running):
+            return False
+        sched_step = self.stats.steps
+        self.kv_mgr.pinned = {r.req_id for r in self.running}
+
+        # preemption (fair scheduling, §6.3)
+        victim = self.scheduler.pick_preemption(self.running, self.waiting,
+                                                sched_step)
+        if victim is not None and self.L_kv:
+            ops = self.kv_mgr.evict_request(victim.req_id)
+            self._apply_ops(ops)
+            victim.state = "preempted"
+            self.running.remove(victim)
+            self.free_rows.append(victim.row)
+            self.row_of.pop(victim.req_id, None)
+            victim.row = None
+            self.waiting.append(victim)
+            self.stats.preemptions += 1
+
+        # admission (capacity-aware: the pinned working sets must fit the
+        # local pool, with one append-headroom block per request)
+        def blocks_needed(req):
+            return math.ceil((len(req.prompt) + len(req.output) + 1) / self.bs) + 1
+
+        pinned_blocks = sum(blocks_needed(r) for r in self.running)
+        admissible = []
+        for cand in list(self.waiting):
+            need = blocks_needed(cand)
+            if pinned_blocks + need > self.n_slots or not self.free_rows:
+                break
+            pinned_blocks += need
+            admissible.append(cand)
+        rest = [w for w in self.waiting if w not in admissible]
+        self.waiting = admissible
+        admitted = self.scheduler.admit(self.waiting, self.free_rows)
+        self.waiting = self.waiting + rest
+        for r in admitted:
+            self.running.append(r)
+            self.row_of[r.req_id] = r.row
+            self.kv_mgr.pinned.add(r.req_id)
+            if r.needs_prefill:
+                self._prefill(r)
+            else:   # resuming a preempted request: reload its blocks
+                nb = math.ceil((r.pos + 1) / self.bs)
+                t = 0.0
+                for j in range(nb):
+                    if (r.req_id, j) in self.kv_mgr.table:
+                        t += self._apply_ops(
+                            self.kv_mgr.ensure_resident(r.req_id, j))
+                self.row_tokens[r.row] = r.output[-1]
+                self.row_pos[r.row] = r.pos
+                self.stats.clock_s += t
+
+        if not self.running:
+            self.stats.steps += 1
+            return bool(self.waiting)
+
+        # fetch mode: every running request's blocks must be local
+        reload_t = 0.0
+        for r in list(self.running):
+            if not self.L_kv:
+                continue
+            nb = math.ceil((r.pos + 1) / self.bs)
+            lost = False
+            for j in range(nb):
+                if (r.req_id, j) not in self.kv_mgr.table:
+                    continue
+                if self.kv_mgr.is_lost(r.req_id, j):
+                    lost = True
+                    break
+                for op in self.kv_mgr.ensure_resident(r.req_id, j):
+                    reload_t += op.seconds
+                    self.stats.reload_s += op.seconds
+            if lost:
+                # lossy revocation: rebuild the whole prefix (recompute)
+                self.stats.recomputes += 1
+                self.kv_mgr.free_request(r.req_id)
+                self._prefill(r)
+
+        # allocate append blocks where the position crosses a boundary
+        append_slot = np.full((self.B,), self.n_slots, np.int32)
+        append_off = np.zeros((self.B,), np.int32)
+        for r in self.running:
+            pos = r.pos
+            j = pos // self.bs
+            if self.L_kv:
+                if (r.req_id, j) not in self.kv_mgr.table:
+                    slot, ops = self.kv_mgr.allocate_block(r.req_id, j,
+                                                           j * self.bs)
+                    reload_t += self._apply_ops(ops)
+                    self.slot_req[slot] = r.row
+                    self.slot_base[slot] = j * self.bs
+                ent = self.kv_mgr.table[(r.req_id, j)]
+                append_slot[r.row] = ent.local_slot
+                append_off[r.row] = pos % self.bs
+                ent.filled = max(ent.filled, pos % self.bs + 1)
+
+        state = M.DecodeState(
+            tokens=jnp.asarray(self.row_tokens),
+            pos=jnp.asarray(self.row_pos),
+            kv=None if not self.L_kv else M.KVPools(
+                pool_k=self.pool_k, pool_v=self.pool_v,
+                slot_req=jnp.asarray(self.slot_req),
+                slot_base=jnp.asarray(self.slot_base),
+                append_slot=jnp.asarray(append_slot),
+                append_off=jnp.asarray(append_off)),
+            peer=None, states=self.states,
+            positions_3d=(jnp.stack([jnp.asarray(self.row_pos)] * 3, -1)
+                          if self.cfg.rope_style == "mrope" else None))
+        logits, new_state = self._decode_fn(self.params, state)
+        if self.L_kv:
+            self.pool_k = new_state.kv.pool_k
+            self.pool_v = new_state.kv.pool_v
+        if self.states is not None:
+            self.states = new_state.states
+
+        n_active = len(self.running)
+        compute_t = max(n_active * self._t_flop_tok, self._t_weights)
+        self.stats.compute_s += compute_t
+        self.stats.clock_s += max(compute_t, reload_t) if self.overlap \
+            else compute_t + reload_t
+
+        logits_np = np.asarray(logits)
+        for r in list(self.running):
+            tok = self._sample(logits_np[r.row])
+            r.output.append(tok)
+            r.decode_steps += 1
+            self.stats.tokens_out += 1
+            self.row_tokens[r.row] = tok
+            self.row_pos[r.row] = r.pos
+            if r.done:
+                r.state = "done"
+                self.running.remove(r)
+                self.finished.append(r)
+                self.free_rows.append(r.row)
+                for slot in np.nonzero(self.slot_req == r.row)[0]:
+                    self.slot_req[slot] = -1
+                self.kv_mgr.free_request(r.req_id)
+                self.row_of.pop(r.req_id, None)
+                r.row = None
+
+        if self.monitor is not None and sched_step % 4 == 0:
+            self.monitor.tick()
+        self.stats.steps += 1
+        return True
+
+    def run(self, max_steps: int = 10_000) -> EngineStats:
+        for _ in range(max_steps):
+            if not self.step():
+                break
+        return self.stats

@@ -1,0 +1,78 @@
+"""Request schedulers for the serving engine.
+
+FCFS continuous batching is the baseline; CompletelyFairScheduler adds
+token-level preemption (paper §6.3): fairness increases KV working-set
+churn, which Harvest absorbs by lowering the marginal cost of
+preemption-induced reloads.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+@dataclass
+class Request:
+    req_id: int
+    prompt: List[int]
+    max_new_tokens: int
+    output: List[int] = field(default_factory=list)
+    row: Optional[int] = None          # batch row while running
+    state: str = "waiting"             # waiting | running | preempted | done
+    enqueue_step: int = 0
+    decode_steps: int = 0
+    needs_prefill: bool = True         # (re)prefill required (new / rolled back)
+
+    @property
+    def pos(self) -> int:
+        return len(self.prompt) + len(self.output) - 1
+
+    @property
+    def done(self) -> bool:
+        return len(self.output) >= self.max_new_tokens
+
+
+class FCFSScheduler:
+    """Admit in arrival order whenever a batch row frees up."""
+
+    preemptive = False
+
+    def admit(self, waiting: List[Request], free_rows: List[int]
+              ) -> List[Request]:
+        admitted = []
+        while waiting and free_rows:
+            r = waiting.pop(0)
+            r.row = free_rows.pop(0)
+            r.state = "running"
+            admitted.append(r)
+        return admitted
+
+    def pick_preemption(self, running: List[Request], waiting: List[Request],
+                        step: int) -> Optional[Request]:
+        return None
+
+
+class CompletelyFairScheduler(FCFSScheduler):
+    """Round-robin over requests at token granularity.
+
+    Every ``quantum`` decode steps, if anyone is waiting, the running request
+    with the most decoded tokens is preempted (its KV blocks pushed to the
+    Harvest tiers) and the head-of-line waiter takes the row.
+    """
+
+    preemptive = True
+
+    def __init__(self, quantum: int = 8):
+        self.quantum = quantum
+
+    def pick_preemption(self, running, waiting, step):
+        if not waiting or step % self.quantum:
+            return None
+        candidates = [r for r in running if r.decode_steps >= self.quantum]
+        if not candidates:
+            return None
+        return max(candidates, key=lambda r: r.decode_steps)
+
+
+SCHEDULERS = {"fcfs": FCFSScheduler, "fair": CompletelyFairScheduler}

@@ -1,0 +1,1 @@
+from repro.train.optim import AdamWState, adamw_init, adamw_update, train_step

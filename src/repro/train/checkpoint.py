@@ -1,0 +1,69 @@
+"""Checkpointing: flat-key npz save/restore for params + optimizer state.
+
+Path-keyed so a checkpoint survives schema reordering; no pickle, no
+framework lock-in — a checkpoint is a plain npz any tool can read.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+from repro.train.optim import AdamWState
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":      # npz cannot round-trip bf16
+            key += "@bfloat16"
+            arr = arr.view(np.uint16)
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(path, params, opt_state: AdamWState, step: int,
+                    metadata: dict = None) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat = {f"params/{k}": v for k, v in _flatten(params).items()}
+    flat.update({f"opt/mu/{k}": v for k, v in _flatten(opt_state.mu).items()})
+    flat.update({f"opt/nu/{k}": v for k, v in _flatten(opt_state.nu).items()})
+    flat["opt/step"] = np.asarray(opt_state.step)
+    flat["meta/step"] = np.asarray(step)
+    np.savez(path, **flat)
+    if metadata:
+        Path(str(path) + ".json").write_text(json.dumps(metadata, indent=2))
+
+
+def restore_checkpoint(path, params_template, opt_template: AdamWState
+                       ) -> Tuple[Any, AdamWState, int]:
+    """Restore into the template's structure (shapes are validated)."""
+    data = np.load(path)
+
+    def rebuild(template, prefix):
+        flat_t = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for path_t, leaf in flat_t[0]:
+            key = prefix + "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                                    for p in path_t)
+            if key in data:
+                arr = data[key]
+            else:                                   # bf16 stored as uint16
+                import ml_dtypes
+                arr = data[key + "@bfloat16"].view(ml_dtypes.bfloat16)
+            assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+            leaves.append(arr.astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(flat_t[1], leaves)
+
+    params = rebuild(params_template, "params/")
+    opt = AdamWState(step=np.asarray(data["opt/step"]),
+                     mu=rebuild(opt_template.mu, "opt/mu/"),
+                     nu=rebuild(opt_template.nu, "opt/nu/"))
+    return params, opt, int(data["meta/step"])

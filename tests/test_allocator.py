@@ -1,0 +1,110 @@
+"""Harvest allocator: unit + hypothesis property tests."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BestFitPolicy, FairnessPolicy, HarvestAllocator,
+                        LocalityPolicy, RevokedError, StabilityPolicy,
+                        WorstFitPolicy)
+from repro.core.allocator import _FreeList
+
+
+def test_alloc_free_roundtrip():
+    a = HarvestAllocator({0: 1000})
+    h = a.harvest_alloc(400)
+    assert h is not None and h.size == 400
+    assert a.device_view()[0]["free"] == 600
+    a.harvest_free(h)
+    assert a.device_view()[0]["free"] == 1000
+    with pytest.raises(RevokedError):
+        a.harvest_free(h)
+
+
+def test_alloc_failure_returns_none():
+    a = HarvestAllocator({0: 100})
+    assert a.harvest_alloc(101) is None
+    assert a.stats["failed"] == 1
+
+
+def test_best_fit_picks_tightest_device():
+    a = HarvestAllocator({0: 1000, 1: 500})
+    h = a.harvest_alloc(450)
+    assert h.device == 1          # tighter fit
+
+
+def test_revocation_order_and_callback():
+    a = HarvestAllocator({0: 1000})
+    h1, h2, h3 = (a.harvest_alloc(300) for _ in range(3))
+    revoked = []
+    for h in (h1, h2, h3):
+        a.harvest_register_cb(h, lambda hh: revoked.append(hh.handle_id))
+    out = a.update_budget(0, 350)
+    # newest-first revocation until usage fits
+    assert [h.handle_id for h in out] == [h3.handle_id, h2.handle_id]
+    assert revoked == [h3.handle_id, h2.handle_id]
+    assert a.is_live(h1) and not a.is_live(h2)
+
+
+def test_drain_blocks_revocation_with_inflight_io():
+    a = HarvestAllocator({0: 100})
+    h = a.harvest_alloc(100)
+    a.begin_io(h)
+    with pytest.raises(RuntimeError):
+        a.update_budget(0, 0)
+    a.end_io(h)
+    assert a.update_budget(0, 0)[0].handle_id == h.handle_id
+
+
+def test_fairness_policy_caps_client():
+    pol = FairnessPolicy(BestFitPolicy(), per_client_bytes=500)
+    a = HarvestAllocator({0: 10_000}, policy=pol)
+    assert a.harvest_alloc(400, client="tenant-a") is not None
+    assert a.harvest_alloc(400, client="tenant-a") is None
+    assert a.harvest_alloc(400, client="tenant-b") is not None
+
+
+def test_locality_policy_prefers_near_device():
+    pol = LocalityPolicy(num_devices=8)
+    a = HarvestAllocator({d: 1000 for d in range(8)}, policy=pol)
+    h = a.harvest_alloc(100, hints={"requester_device": 3})
+    assert h.device == 3
+    h2 = a.harvest_alloc(1000, hints={"requester_device": 3})
+    assert h2.device in (2, 4)    # ring-adjacent once 3 can't fit
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.integers(1, 64)), max_size=60))
+def test_freelist_invariants(ops):
+    """Property: free bytes conserved; segments sorted, coalesced, disjoint."""
+    fl = _FreeList(256)
+    live = []
+    for is_alloc, size in ops:
+        if is_alloc:
+            off = fl.best_fit(size)
+            if off is not None:
+                live.append((off, size))
+        elif live:
+            off, size = live.pop()
+            fl.release(off, size)
+    # invariant 1: conservation
+    assert fl.free_bytes == 256 - sum(s for _, s in live)
+    # invariant 2: sorted, coalesced, non-overlapping
+    segs = fl.segments
+    for (o1, s1), (o2, s2) in zip(segs, segs[1:]):
+        assert o1 + s1 < o2, "adjacent free segments must be coalesced"
+    # invariant 3: no free segment overlaps a live allocation
+    for off, size in live:
+        for o, s in segs:
+            assert off + size <= o or o + s <= off
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.integers(10, 200), min_size=1, max_size=20),
+       st.integers(0, 1000))
+def test_budget_shrink_always_fits(sizes, new_budget):
+    """Property: after update_budget, usage <= budget (or no allocs left)."""
+    a = HarvestAllocator({0: 2000})
+    for s in sizes:
+        a.harvest_alloc(s)
+    a.update_budget(0, new_budget)
+    used = sum(h.size for h in a.live_handles())
+    assert used <= max(new_budget, 0) or not a.live_handles()

@@ -1,0 +1,78 @@
+"""Config system: exact assigned specs, param counts, reduced variants."""
+import pytest
+
+from repro.configs import (ASSIGNED_ARCHS, INPUT_SHAPES, PAPER_ARCHS,
+                           all_configs, dryrun_pairs, get_config)
+
+EXPECTED = {
+    # arch: (layers, d_model, heads, kv, d_ff, vocab)
+    "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+    "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+    "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+    "command-r-35b": (40, 8192, 64, 8, 22528, 256000),
+    "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+    "nemotron-4-15b": (32, 6144, 48, 8, 24576, 256000),
+    "h2o-danube-3-4b": (24, 3840, 32, 8, 10240, 32000),
+    "yi-6b": (32, 4096, 32, 4, 11008, 64000),
+    "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+    "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+}
+
+# total-parameter sanity bands (billions)
+PARAM_BANDS = {
+    "qwen2-vl-72b": (65, 80), "llama4-maverick-400b-a17b": (360, 440),
+    "zamba2-7b": (5.5, 8), "command-r-35b": (28, 38), "xlstm-1.3b": (1.0, 2.2),
+    "nemotron-4-15b": (14, 17), "h2o-danube-3-4b": (3.3, 4.6),
+    "yi-6b": (5.4, 7), "musicgen-medium": (1.0, 2.0), "dbrx-132b": (120, 140),
+}
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_exact_assigned_spec(arch):
+    cfg = get_config(arch)
+    exp = EXPECTED[arch]
+    assert (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.d_ff, cfg.vocab_size) == exp
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_param_count_band(arch):
+    total = get_config(arch).param_counts()["total"] / 1e9
+    lo, hi = PARAM_BANDS[arch]
+    assert lo <= total <= hi, total
+
+
+def test_moe_specifics():
+    l4 = get_config("llama4-maverick-400b-a17b")
+    assert l4.moe.num_experts == 128 and l4.moe.top_k == 1
+    assert l4.moe.layer_period == 2
+    dbrx = get_config("dbrx-132b")
+    assert dbrx.moe.num_experts == 16 and dbrx.moe.top_k == 4
+    assert get_config("zamba2-7b").ssm.state_dim == 64
+
+
+def test_paper_table1_active_params():
+    # paper Table 1 active-parameter column
+    for arch, active in [("mixtral-8x7b", 13.0), ("qwen2-moe", 2.7),
+                         ("phi-3.5-moe", 6.6)]:
+        got = get_config(arch).param_counts()["active"] / 1e9
+        assert abs(got - active) / active < 0.15, (arch, got)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS + PAPER_ARCHS)
+def test_reduced_constraints(arch):
+    r = get_config(arch).reduced()
+    assert r.num_layers == 2
+    assert r.d_model <= 512
+    if r.moe:
+        assert r.moe.num_experts <= 4
+    assert r.num_heads % r.num_kv_heads == 0
+
+
+def test_dryrun_pairs_skips():
+    pairs = dryrun_pairs()
+    assert ("yi-6b", "long_500k") not in pairs          # full attention
+    assert ("zamba2-7b", "long_500k") in pairs          # hybrid: O(1) state
+    assert ("h2o-danube-3-4b", "long_500k") in pairs    # SWA
+    assert ("llama4-maverick-400b-a17b", "long_500k") in pairs  # chunked
+    assert len(pairs) == 34

@@ -1,0 +1,91 @@
+"""serve_step (paged Harvest KV pools / recurrent state) must reproduce the
+full-sequence forward logits for every architecture family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models import model as M
+
+
+def pools_from_prefill(kvs, b, s, bs, npb, dtype=jnp.float32):
+    k, v = kvs
+    Lk, nkv, hd = k.shape[0], k.shape[3], k.shape[4]
+    n_slots = b * npb
+    pool_k = np.zeros((Lk, n_slots, bs, nkv, hd), np.float32)
+    pool_v = np.zeros_like(pool_k)
+    slot_req = np.full((n_slots,), -1, np.int32)
+    slot_base = np.zeros((n_slots,), np.int32)
+    for r in range(b):
+        for j in range(npb):
+            slot = r * npb + j
+            slot_req[slot] = r
+            slot_base[slot] = j * bs
+            lo, hi = j * bs, min((j + 1) * bs, s)
+            if lo < s:
+                pool_k[:, slot, :hi - lo] = np.asarray(k[:, r, lo:hi], np.float32)
+                pool_v[:, slot, :hi - lo] = np.asarray(v[:, r, lo:hi], np.float32)
+    return (jnp.asarray(pool_k, dtype), jnp.asarray(pool_v, dtype),
+            jnp.asarray(slot_req), jnp.asarray(slot_base))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced()
+    rng = jax.random.PRNGKey(0)
+    params = M.init_params(rng, cfg)
+    b, s, bs, n_extra = 2, 21, 8, 4
+    npre = cfg.modality.num_prefix_embeddings if cfg.modality else 0
+    ncb = cfg.modality.num_codebooks if cfg.modality else 1
+    audio = cfg.family == "audio" and ncb > 1
+    tshape = (b, s + n_extra, ncb) if audio else (b, s + n_extra)
+    tokens = jax.random.randint(rng, tshape, 0, cfg.vocab_size)
+    S_all = s + n_extra + npre
+    positions = jnp.broadcast_to(jnp.arange(S_all), (b, S_all))
+
+    def batch_for(n):
+        bd = {"tokens": tokens[:, :n],
+              "positions": positions[:, :n + npre]}
+        if npre:
+            bd["prefix_embeddings"] = 0.02 * jax.random.normal(
+                rng, (b, npre, cfg.d_model))
+        if cfg.rope_style == "mrope":
+            bd["positions_3d"] = jnp.broadcast_to(
+                jnp.arange(n + npre)[:, None], (b, n + npre, 3))
+        return bd
+
+    ref_logits, _ = M.forward(params, batch_for(s + n_extra), cfg)
+    _, out = M.prefill(params, batch_for(s), cfg)
+
+    npb = (s + npre + n_extra + bs - 1) // bs
+    kv = None
+    if out.kv is not None:
+        # positions in the pool include the modality prefix
+        pk, pv, sr, sb = pools_from_prefill(out.kv, b, s + npre, bs, npb)
+        kv = M.KVPools(pk, pv, sr, sb, jnp.zeros((b,), jnp.int32),
+                       jnp.zeros((b,), jnp.int32))
+    st = M.DecodeState(
+        tokens=tokens[:, s], pos=jnp.full((b,), s + npre, jnp.int32),
+        kv=kv, peer=None, states=out.states,
+        positions_3d=(jnp.full((b, 3), s + npre, jnp.int32)
+                      if cfg.rope_style == "mrope" else None))
+    maxerr = 0.0
+    for t in range(n_extra):
+        pos = s + npre + t
+        if kv is not None:
+            aslot = jnp.array([r * npb + pos // bs for r in range(b)], jnp.int32)
+            aoff = jnp.full((b,), pos % bs, jnp.int32)
+            st = st._replace(kv=st.kv._replace(append_slot=aslot,
+                                               append_off=aoff))
+        st = st._replace(tokens=tokens[:, s + t],
+                         pos=jnp.full((b,), pos, jnp.int32),
+                         positions_3d=(jnp.full((b, 3), pos, jnp.int32)
+                                       if cfg.rope_style == "mrope" else None))
+        logits, st = M.serve_step(params, st, cfg)
+        ref = ref_logits[:, npre + s + t]
+        if logits.ndim == 3:      # audio: (b, ncb, V)
+            ref = ref_logits[:, npre + s + t]
+        maxerr = max(maxerr, float(jnp.max(jnp.abs(
+            logits.astype(jnp.float32) - ref.astype(jnp.float32)))))
+    assert maxerr < 0.02, maxerr

@@ -1,0 +1,201 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles.
+
+Every Pallas kernel runs in interpret mode on CPU (the kernel body executes
+in Python) and must match its ``ref.py`` oracle to dtype-appropriate
+tolerance across a sweep of shapes, dtypes, and masking variants.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import mha
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.harvest_copy.ops import gather_blocks, scatter_blocks
+from repro.kernels.harvest_copy.ref import (harvest_gather_ref,
+                                            harvest_scatter_ref)
+from repro.kernels.moe_ffn.ops import expert_ffn
+from repro.kernels.moe_ffn.ref import moe_ffn_ref
+from repro.kernels.paged_attention.ops import decode_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def _tol(dtype):
+    return TOL[jnp.bfloat16 if dtype == jnp.bfloat16 else jnp.float32]
+
+
+# ---------------------------------------------------------------------------
+# flash attention (prefill)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,sq,nq,nkv,hd", [
+    (1, 128, 4, 4, 64),        # MHA, single q block
+    (2, 256, 8, 2, 64),        # GQA 4:1, 2 q blocks
+    (1, 384, 4, 1, 128),       # MQA, ragged block count
+    (2, 128, 6, 3, 32),        # non-pow2 heads
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(b, sq, nq, nkv, hd, dtype):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(b, sq, nq, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, sq, nkv, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, sq, nkv, hd)), dtype)
+    out = mha(q, k, v, interpret=True)
+
+    gq = nq // nkv
+    qf = q.reshape(b, sq, nkv, gq, hd).transpose(0, 2, 3, 1, 4)
+    qf = qf.reshape(b * nkv, gq * sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * nkv, sq, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * nkv, sq, hd)
+    ref = flash_attention_ref(qf, kf, vf, sq=sq)
+    ref = ref.reshape(b, nkv, gq, sq, hd).transpose(0, 3, 1, 2, 4)
+    ref = ref.reshape(b, sq, nq, hd)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window,chunk", [(64, None), (None, 128), (32, None)])
+def test_flash_attention_masks(window, chunk):
+    b, sq, nq, nkv, hd = 1, 256, 4, 2, 64
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(b, sq, nq, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, sq, nkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, sq, nkv, hd)), jnp.float32)
+    out = mha(q, k, v, sliding_window=window, attention_chunk=chunk,
+              interpret=True)
+    gq = nq // nkv
+    qf = q.reshape(b, sq, nkv, gq, hd).transpose(0, 2, 3, 1, 4)
+    qf = qf.reshape(b * nkv, gq * sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * nkv, sq, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * nkv, sq, hd)
+    ref = flash_attention_ref(qf, kf, vf, sq=sq, sliding_window=window,
+                              attention_chunk=chunk)
+    ref = ref.reshape(b, nkv, gq, sq, hd).transpose(0, 3, 1, 2, 4)
+    ref = ref.reshape(b, sq, nq, hd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention
+# ---------------------------------------------------------------------------
+
+
+def _make_paged(rng, b, nq, nkv, hd, n_slots, bs, max_blk, dtype):
+    q = jnp.asarray(rng.normal(size=(b, nq, hd)), dtype)
+    pool_k = jnp.asarray(rng.normal(size=(n_slots, bs, nkv, hd)), dtype)
+    pool_v = jnp.asarray(rng.normal(size=(n_slots, bs, nkv, hd)), dtype)
+    # each request owns a run of blocks; some table entries are -1 (absent)
+    table = np.full((b, max_blk), -1, np.int32)
+    slot = 0
+    q_pos = np.zeros((b,), np.int32)
+    for r in range(b):
+        nb = rng.integers(1, max_blk + 1)
+        for j in range(nb):
+            table[r, j] = slot
+            slot += 1
+        q_pos[r] = nb * bs - rng.integers(1, bs + 1)
+    return q, pool_k, pool_v, jnp.asarray(table), jnp.asarray(q_pos)
+
+
+@pytest.mark.parametrize("b,nq,nkv,hd,bs,max_blk", [
+    (2, 4, 4, 64, 16, 3),
+    (3, 8, 2, 64, 32, 4),
+    (2, 4, 1, 128, 16, 2),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_matches_ref(b, nq, nkv, hd, bs, max_blk, dtype):
+    rng = np.random.default_rng(2)
+    n_slots = b * max_blk + 2
+    q, pk, pv, table, q_pos = _make_paged(rng, b, nq, nkv, hd, n_slots, bs,
+                                          max_blk, dtype)
+    out = decode_attention(q, pk, pv, table, q_pos, interpret=True)
+    ref = paged_attention_ref(q, pk, pv, table, q_pos)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [16, 48])
+def test_paged_attention_sliding_window(window):
+    rng = np.random.default_rng(3)
+    b, nq, nkv, hd, bs, max_blk = 2, 4, 2, 64, 16, 4
+    n_slots = b * max_blk + 1
+    q, pk, pv, table, q_pos = _make_paged(rng, b, nq, nkv, hd, n_slots, bs,
+                                          max_blk, jnp.float32)
+    out = decode_attention(q, pk, pv, table, q_pos, sliding_window=window,
+                           interpret=True)
+    ref = paged_attention_ref(q, pk, pv, table, q_pos, sliding_window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused expert FFN
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("e,c,d,f", [
+    (2, 128, 64, 256),
+    (4, 256, 128, 512),
+    (1, 128, 32, 128),
+])
+@pytest.mark.parametrize("activation", ["silu", "gelu", "relu2"])
+def test_moe_ffn_matches_ref(e, c, d, f, activation):
+    rng = np.random.default_rng(4)
+    xd = jnp.asarray(rng.normal(size=(e, c, d)), jnp.float32)
+    wi = jnp.asarray(rng.normal(size=(e, d, f)) * 0.05, jnp.float32)
+    wg = jnp.asarray(rng.normal(size=(e, d, f)) * 0.05, jnp.float32)
+    wo = jnp.asarray(rng.normal(size=(e, f, d)) * 0.05, jnp.float32)
+    out = expert_ffn(xd, wi, wg, wo, activation=activation, interpret=True)
+    ref = moe_ffn_ref(xd, wi, wg, wo, activation=activation)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16])
+def test_moe_ffn_bf16(dtype):
+    rng = np.random.default_rng(5)
+    e, c, d, f = 2, 128, 64, 256
+    xd = jnp.asarray(rng.normal(size=(e, c, d)), dtype)
+    wi = jnp.asarray(rng.normal(size=(e, d, f)) * 0.05, dtype)
+    wg = jnp.asarray(rng.normal(size=(e, d, f)) * 0.05, dtype)
+    wo = jnp.asarray(rng.normal(size=(e, f, d)) * 0.05, dtype)
+    out = expert_ffn(xd, wi, wg, wo, interpret=True)
+    ref = moe_ffn_ref(xd, wi, wg, wo)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=4e-2,
+                               atol=4e-2)
+
+
+# ---------------------------------------------------------------------------
+# harvest block copy (gather/scatter)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_slots,n_move,block_elems", [
+    (16, 4, 2048),       # KV-block-sized payloads, flat layout
+    (64, 64, 256),       # move the whole pool
+    (8, 1, 128),         # single block
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_harvest_gather_scatter_roundtrip(n_slots, n_move, block_elems, dtype):
+    rng = np.random.default_rng(6)
+    src = jnp.asarray(rng.normal(size=(n_slots, block_elems)), dtype)
+    dst = jnp.asarray(rng.normal(size=(n_slots, block_elems)), dtype)
+    ids = jnp.asarray(rng.choice(n_slots, size=n_move, replace=False)
+                      .astype(np.int32))
+
+    got = gather_blocks(src, ids, interpret=True)
+    ref = harvest_gather_ref(src, ids)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+    new_dst = scatter_blocks(dst, got, ids)
+    ref_dst = harvest_scatter_ref(dst, ref, ids)
+    np.testing.assert_array_equal(np.asarray(new_dst), np.asarray(ref_dst))
+    # round-trip: gathered-from-src blocks landed in dst at the same slots
+    np.testing.assert_array_equal(np.asarray(new_dst[ids]),
+                                  np.asarray(src[ids]))

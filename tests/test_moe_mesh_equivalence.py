@@ -1,0 +1,59 @@
+"""The fully-manual expert-parallel MoE path (shard_map over data x model)
+must match the global-dispatch path numerically, gradients included.
+
+Runs in a subprocess because the 4-device CPU mesh needs
+XLA_FLAGS=--xla_force_host_platform_device_count=4 before jax initializes
+(the main test process must keep the single real device).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+PROG = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.base import ModelConfig, MoEConfig
+    from repro.models.sharding import ShardingRules, DEFAULT_RULES
+    from repro.models import model as M
+    from repro.models.moe import moe_layer
+
+    cfg = ModelConfig(name="t", family="moe", source="", num_layers=2,
+                      d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                      vocab_size=64,
+                      moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=64,
+                                    capacity_factor=8.0))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    lp = jax.tree.map(lambda t: t[0], params["layers"])
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    rules = ShardingRules(mesh, dict(DEFAULT_RULES))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 32), jnp.float32)
+
+    y_ref, _ = jax.jit(lambda x, p: moe_layer(x, p, cfg, None))(x, lp["moe"])
+    with mesh:
+        y_mesh, _ = jax.jit(lambda x, p: moe_layer(x, p, cfg, rules))(
+            x, lp["moe"])
+    assert np.allclose(np.asarray(y_ref), np.asarray(y_mesh), atol=2e-5), \
+        np.abs(np.asarray(y_ref) - np.asarray(y_mesh)).max()
+
+    g = jax.jit(jax.grad(lambda p: moe_layer(x, p, cfg, None)[0].sum()))(
+        lp["moe"])
+    with mesh:
+        gm = jax.jit(jax.grad(lambda p: moe_layer(x, p, cfg, rules)[0].sum()))(
+            lp["moe"])
+    err = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(np.abs(np.asarray(a) - np.asarray(b)).max()),
+        g, gm)))
+    assert err < 2e-3, f"grad mismatch {err}"
+    print("OK")
+""")
+
+
+def test_moe_local_dispatch_matches_global():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", PROG], env=env,
+                       capture_output=True, text=True, timeout=480)
+    assert r.returncode == 0 and "OK" in r.stdout, r.stderr[-2000:]

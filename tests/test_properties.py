@@ -1,0 +1,180 @@
+"""Property-based tests (hypothesis) on the Harvest runtime's invariants.
+
+Invariants under arbitrary alloc/free/budget-update interleavings:
+  * no two live allocations on a device overlap (exclusive segments);
+  * per-device usage == sum of live allocation sizes, and never exceeds the
+    device budget after every operation settles;
+  * free-list bytes + used bytes == freelist capacity (conservation);
+  * revocation fires the callback exactly once, after invalidation
+    (``is_live`` is already False inside the callback);
+  * freeing or re-registering a revoked handle raises;
+  * the KV block table never maps a block to two tiers at once, and lost
+    blocks are reported lost until rewritten.
+"""
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.allocator import HarvestAllocator, RevokedError
+from repro.core.kv_manager import KVOffloadManager
+from repro.core.monitor import ClusterTrace, ClusterTraceConfig, PeerMonitor
+from repro.core.policy import (BestFitPolicy, LocalityPolicy, StabilityPolicy,
+                               WorstFitPolicy)
+from repro.core.tiers import TPU_V5E, Tier
+
+MiB = 2**20
+
+op_strategy = st.lists(
+    st.one_of(
+        st.tuples(st.just("alloc"), st.integers(1, 64)),       # size MiB
+        st.tuples(st.just("free"), st.integers(0, 200)),       # index
+        st.tuples(st.just("budget"),
+                  st.integers(0, 3), st.integers(0, 256)),     # dev, MiB
+    ),
+    min_size=1, max_size=120,
+)
+
+
+def _check_invariants(alloc: HarvestAllocator):
+    for dev_id, dev in alloc._devices.items():
+        live = [h for h in alloc.live_handles() if h.device == dev_id]
+        # exclusive segments
+        segs = sorted((h.offset, h.size) for h in live)
+        for (o1, s1), (o2, _) in zip(segs, segs[1:]):
+            assert o1 + s1 <= o2, "overlapping live allocations"
+        # usage accounting
+        assert dev.used == sum(h.size for h in live)
+        assert dev.used <= max(dev.budget, 0) or not live
+        # conservation: freelist + live == capacity
+        assert dev.freelist.free_bytes + dev.used == dev.freelist.capacity
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=op_strategy, policy_idx=st.integers(0, 3))
+def test_allocator_invariants_under_interleaving(ops, policy_idx):
+    policy = [BestFitPolicy(), WorstFitPolicy(), LocalityPolicy(4),
+              StabilityPolicy()][policy_idx]
+    alloc = HarvestAllocator({d: 256 * MiB for d in range(4)}, policy=policy)
+    handles = []
+    revoked = []
+
+    def cb(h):
+        assert not alloc.is_live(h), "callback must fire after invalidation"
+        revoked.append(h.handle_id)
+
+    for op in ops:
+        if op[0] == "alloc":
+            h = alloc.harvest_alloc(op[1] * MiB)
+            if h is not None:
+                alloc.harvest_register_cb(h, cb)
+                handles.append(h)
+        elif op[0] == "free":
+            if handles:
+                h = handles.pop(op[1] % len(handles))
+                if alloc.is_live(h):
+                    alloc.harvest_free(h)
+        else:
+            _, dev, mib = op
+            alloc.update_budget(dev, mib * MiB)
+        _check_invariants(alloc)
+
+    # each revocation fired exactly once
+    assert len(revoked) == len(set(revoked)) == alloc.stats["revocations"]
+
+
+@settings(max_examples=30, deadline=None)
+@given(budget=st.integers(0, 64), size=st.integers(1, 16))
+def test_revoked_handle_is_dead(budget, size):
+    alloc = HarvestAllocator({0: 64 * MiB})
+    h = alloc.harvest_alloc(size * MiB)
+    assert h is not None
+    alloc.update_budget(0, 0)          # revoke everything
+    assert not alloc.is_live(h)
+    try:
+        alloc.harvest_free(h)
+        raise AssertionError("free of revoked handle must raise")
+    except RevokedError:
+        pass
+    try:
+        alloc.harvest_register_cb(h, lambda _: None)
+        raise AssertionError("register on revoked handle must raise")
+    except RevokedError:
+        pass
+    alloc.update_budget(0, budget * MiB)
+    h2 = alloc.harvest_alloc(size * MiB)
+    assert (h2 is not None) == (budget >= size)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seq=st.lists(st.integers(0, 2), min_size=1, max_size=60),
+       seed=st.integers(0, 5))
+def test_drain_blocks_revocation(seq, seed):
+    """Revocation must not complete while IO is in flight on the region."""
+    alloc = HarvestAllocator({0: 8 * MiB})
+    h = alloc.harvest_alloc(4 * MiB)
+    alloc.begin_io(h)
+    try:
+        alloc.update_budget(0, 0)
+        raise AssertionError("revocation with in-flight IO must raise")
+    except RuntimeError:
+        pass
+    alloc.end_io(h)
+    revoked = alloc.update_budget(0, 0)
+    assert [r.handle_id for r in revoked] == [h.handle_id]
+
+
+@settings(max_examples=25, deadline=None)
+@given(steps=st.integers(1, 40), seed=st.integers(0, 100))
+def test_monitor_budgets_track_trace(steps, seed):
+    cfgm = ClusterTraceConfig(num_devices=4, capacity_bytes=256 * MiB,
+                              seed=seed)
+    trace = ClusterTrace(cfgm)
+    alloc = HarvestAllocator({d: 256 * MiB for d in range(4)})
+    mon = PeerMonitor(alloc, trace, capacity_bytes=256 * MiB,
+                      reserve_bytes=16 * MiB)
+    # grab as much as possible, then let the trace churn
+    while alloc.harvest_alloc(8 * MiB) is not None:
+        pass
+    for _ in range(steps):
+        budgets = mon.tick()
+        for d, b in budgets.items():
+            assert b >= 0
+            assert alloc._devices[d].used <= max(b, 0) or b == 0
+        _check_invariants(alloc)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_req=st.integers(1, 6), blocks_per=st.integers(1, 8),
+       evictions=st.integers(0, 30), seed=st.integers(0, 50))
+def test_kv_block_table_residency(n_req, blocks_per, evictions, seed):
+    """Every block is in exactly one tier; lost blocks stay lost."""
+    rng = np.random.default_rng(seed)
+    cfg = get_config("yi-6b").reduced()
+    n_blocks = n_req * blocks_per
+    local_slots = max(n_blocks // 2, 2)
+    alloc = HarvestAllocator({1: 64 * MiB})
+    kv = KVOffloadManager(cfg, alloc, TPU_V5E, block_size=16,
+                          num_local_slots=local_slots)
+    for r in range(n_req):
+        for j in range(blocks_per):
+            kv.allocate_block(r, j, j * 16)
+
+    for _ in range(evictions):
+        r = int(rng.integers(0, n_req))
+        if rng.random() < 0.5:
+            kv.evict_request(r)
+        else:
+            for op in kv.ensure_resident(r, int(rng.integers(0, blocks_per))):
+                assert op.seconds > 0
+        # every tracked block is in exactly one tier (tier is a function)
+        counts = kv.tier_counts()
+        assert sum(counts.values()) == len(kv.table)
+        # no local slot double-booked
+        slots = [e.local_slot for e in kv.table.values()
+                 if e.tier == Tier.LOCAL_HBM]
+        assert len(slots) == len(set(slots))
+        assert len(slots) + len(kv.free_slots) == local_slots
+    # device budgets respected throughout
+    _check_invariants(alloc)
