@@ -19,6 +19,7 @@ from pathlib import Path
 
 from benchmarks.common import Check, fmt_table, save_result
 from repro.configs import PAPER_ARCHS, get_config
+from repro.core.runtime import HarvestRuntime
 from repro.core.simulator import AccessModelConfig, simulate_moe_decode
 from repro.core.tiers import H100_NVLINK
 
@@ -33,6 +34,9 @@ DECODE_STEPS = 8
 def run(out_dir: Path, trials: int = TRIALS,
         decode_steps: int = DECODE_STEPS) -> dict:
     hw = H100_NVLINK
+    # one runtime for the whole figure: its TransferEngine accounts every
+    # simulated peer fetch into the unified metrics snapshot saved below
+    runtime = HarvestRuntime(hardware=hw)
     rows, out_rows = [], []
     gains = {}
     for arch in PAPER_ARCHS:
@@ -41,9 +45,11 @@ def run(out_dir: Path, trials: int = TRIALS,
         for t in range(trials):
             am = AccessModelConfig(seed=t)
             p = simulate_moe_decode(cfg, hw, 0.5, use_peer=True,
-                                    decode_steps=decode_steps, access=am)
+                                    decode_steps=decode_steps, access=am,
+                                    runtime=runtime)
             h = simulate_moe_decode(cfg, hw, 0.5, use_peer=False,
-                                    decode_steps=decode_steps, access=am)
+                                    decode_steps=decode_steps, access=am,
+                                    runtime=runtime)
             peer_tps.append(p.tokens_per_s)
             host_tps.append(h.tokens_per_s)
         peer = sum(peer_tps) / trials
@@ -73,6 +79,7 @@ def run(out_dir: Path, trials: int = TRIALS,
                     rows))
 
     payload = {"name": "fig5_moe_throughput", "rows": out_rows,
+               "transfer_metrics": runtime.stats().get("transfer", {}),
                "checks": [c.to_dict() for c in checks]}
     save_result(out_dir, "fig5_moe_throughput", payload)
     return payload

@@ -21,6 +21,7 @@ import numpy as np
 
 from benchmarks.common import Check, fmt_table, save_result
 from repro.configs import get_config
+from repro.core.runtime import HarvestRuntime
 from repro.core.simulator import AccessModelConfig, simulate_moe_decode
 from repro.core.tiers import H100_NVLINK
 
@@ -30,6 +31,7 @@ FRACTIONS = [0.0, 0.25, 0.5, 0.75, 1.0]
 
 def run(out_dir: Path, decode_steps: int = 4) -> dict:
     hw = H100_NVLINK
+    runtime = HarvestRuntime(hardware=hw)
     out_rows, checks = [], []
     for arch in MODELS:
         cfg = get_config(arch)
@@ -37,9 +39,11 @@ def run(out_dir: Path, decode_steps: int = 4) -> dict:
         for f in FRACTIONS:
             am = AccessModelConfig(seed=0)
             p = simulate_moe_decode(cfg, hw, f, use_peer=True,
-                                    decode_steps=decode_steps, access=am)
+                                    decode_steps=decode_steps, access=am,
+                                    runtime=runtime)
             h = simulate_moe_decode(cfg, hw, f, use_peer=False,
-                                    decode_steps=decode_steps, access=am)
+                                    decode_steps=decode_steps, access=am,
+                                    runtime=runtime)
             peer_curve.append(p.tokens_per_s)
             host_curve.append(h.tokens_per_s)
         out_rows.append({"model": arch, "fractions": FRACTIONS,
@@ -66,6 +70,7 @@ def run(out_dir: Path, decode_steps: int = 4) -> dict:
         print()
 
     payload = {"name": "fig6_offload_sweep", "rows": out_rows,
+               "transfer_metrics": runtime.stats().get("transfer", {}),
                "checks": [c.to_dict() for c in checks]}
     save_result(out_dir, "fig6_offload_sweep", payload)
     return payload

@@ -12,7 +12,7 @@ import dataclasses
 import jax
 
 from repro.configs import get_config
-from repro.core.allocator import HarvestAllocator
+from repro.core import HarvestRuntime
 from repro.core.tiers import H100_NVLINK
 from repro.models import model as M
 from repro.serving.engine import HarvestServingEngine
@@ -26,11 +26,11 @@ def build():
     return cfg, params
 
 
-def serve(cfg, params, *, slots, alloc=None, scheduler="fcfs"):
+def serve(cfg, params, *, slots, peer_budgets=None, scheduler="fcfs"):
+    runtime = HarvestRuntime(peer_budgets or {}, hardware=H100_NVLINK)
     eng = HarvestServingEngine(
         cfg, params, max_batch=2, block_size=8, num_local_slots=slots,
-        max_seq_len=128, allocator=alloc, hardware=H100_NVLINK,
-        scheduler=scheduler)
+        max_seq_len=128, runtime=runtime, scheduler=scheduler)
     prompts = [[3 + i, 141, 59, 26, 5 + i, 35] for i in range(6)]
     reqs = [eng.submit(p, max_new_tokens=24) for p in prompts]
     stats = eng.run(max_steps=2000)
@@ -49,8 +49,8 @@ def main():
           f"reload time {s0.reload_s * 1e3:.2f} ms\n")
 
     print("2) Harvest: same pool + fair scheduler, peer tier enabled")
-    alloc = HarvestAllocator({1: 256 * MiB})
-    eng, out, s1 = serve(cfg, params, slots=12, alloc=alloc, scheduler="fair")
+    eng, out, s1 = serve(cfg, params, slots=12,
+                         peer_budgets={1: 256 * MiB}, scheduler="fair")
     kv = eng.kv_mgr.stats
     print(f"   preemptions          : {s1.preemptions}")
     print(f"   blocks evicted->peer : {kv['evict_to_peer']}")

@@ -13,9 +13,8 @@ import argparse
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.allocator import HarvestAllocator
-from repro.core.monitor import ClusterTrace, ClusterTraceConfig, PeerMonitor
-from repro.core.rebalancer import ExpertRebalancer
+from repro.core import HarvestRuntime
+from repro.core.monitor import ClusterTraceConfig
 from repro.core.simulator import AccessModelConfig, ExpertAccessModel, \
     simulate_moe_decode
 from repro.core.tiers import H100_NVLINK, Tier, expert_bytes
@@ -35,21 +34,23 @@ def main():
     print(f"{cfg.name}: {cfg.moe.num_experts} experts x {eb / 2**20:.0f} MiB, "
           f"top-{cfg.moe.top_k}, {args.offload:.0%} offloaded\n")
 
+    # -- one runtime composes allocator + monitor + transfer accounting --
+    runtime = HarvestRuntime(
+        {0: 8 * GiB, 1: 8 * GiB}, hardware=hw,
+        trace_config=ClusterTraceConfig(num_devices=2,
+                                        capacity_bytes=8 * GiB, seed=1))
+
     # -- throughput: host offload vs Harvest peer offload -----------------
     host = simulate_moe_decode(cfg, hw, args.offload, use_peer=False,
-                               decode_steps=8)
+                               decode_steps=8, runtime=runtime)
     peer = simulate_moe_decode(cfg, hw, args.offload, use_peer=True,
-                               decode_steps=8)
+                               decode_steps=8, runtime=runtime)
     print(f"CPU offload   : {host.tokens_per_s:8.1f} tok/s")
     print(f"Harvest (peer): {peer.tokens_per_s:8.1f} tok/s  "
           f"(+{(peer.tokens_per_s / host.tokens_per_s - 1) * 100:.0f}%)\n")
 
     # -- the rebalancer reacting to live peer availability ----------------
-    alloc = HarvestAllocator({0: 8 * GiB, 1: 8 * GiB})
-    reb = ExpertRebalancer(cfg, alloc, hw, local_fraction=1 - args.offload)
-    trace = ClusterTrace(ClusterTraceConfig(num_devices=2,
-                                            capacity_bytes=8 * GiB, seed=1))
-    mon = PeerMonitor(alloc, trace, capacity_bytes=8 * GiB)
+    reb = runtime.rebalancer(cfg, local_fraction=1 - args.offload)
     am = ExpertAccessModel(cfg.moe.num_experts, cfg.moe.top_k,
                            AccessModelConfig(seed=0))
 
@@ -58,7 +59,7 @@ def main():
         for li in range(min(cfg.num_moe_layers, 4)):
             reb.record_access(li, experts)
         migrated = reb.rebalance(max_migrations=8)
-        mon.tick()
+        runtime.tick()
         frac = reb.residency_fractions()
         print(f"step {step:2d}: migrated {migrated:2d}  residency "
               f"local={frac[Tier.LOCAL_HBM.value]:.2f} "
@@ -66,7 +67,9 @@ def main():
               f"host={frac[Tier.HOST_DRAM.value]:.2f}  "
               f"revocations={reb.stats['revocations']}")
 
-    print("\nrebalancer stats:", reb.stats)
+    print("\nrebalancer stats:", dict(reb.stats))
+    print("unified metrics :", {k: v for k, v in runtime.stats().items()
+                                if k in ("moe", "allocator")})
 
 
 if __name__ == "__main__":

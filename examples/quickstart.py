@@ -1,21 +1,30 @@
-"""Quickstart: the Harvest API in 60 lines.
+"""Quickstart: the Harvest public API in ~70 lines.
 
-Allocates peer memory opportunistically, registers a revocation callback,
-watches the cluster trace shrink a peer's budget, and shows the fallback.
+One :class:`HarvestRuntime` composes the allocator, the availability
+monitor and the transfer engine; a :class:`HarvestStore` client places
+tiered objects with a durability class.  The trace shrinks a peer's
+budget, revocation fires, and the two durability classes diverge: BACKED
+objects fall back to host, RECONSTRUCTIBLE objects become LOST.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core.allocator import HarvestAllocator
-from repro.core.monitor import ClusterTrace, ClusterTraceConfig, PeerMonitor
+from repro.core import (ClusterTraceConfig, Durability, HarvestRuntime,
+                        Residency)
 
 GiB = 2**30
 
 
 def main():
-    # Four peer devices with 16 GiB of harvestable HBM each.
-    alloc = HarvestAllocator({d: 16 * GiB for d in range(4)})
+    # Four peer devices with 16 GiB of harvestable HBM each, pressured by
+    # the Fig-2-calibrated cluster trace.
+    runtime = HarvestRuntime(
+        {d: 16 * GiB for d in range(4)},
+        trace_config=ClusterTraceConfig(num_devices=4,
+                                        capacity_bytes=16 * GiB, seed=42),
+        reserve_bytes=1 * GiB)
+    alloc = runtime.allocator
 
-    # --- harvest_alloc: opportunistic peer allocation --------------------
+    # --- harvest_alloc: the paper's §3.2 API, still the floor -----------
     handles = []
     for i in range(6):
         h = alloc.harvest_alloc(3 * GiB, hints={"purpose": f"kv-shard-{i}"})
@@ -25,30 +34,42 @@ def main():
         print(f"alloc {i}: device={h.device} offset={h.offset >> 30}GiB "
               f"size={h.size >> 30}GiB")
         handles.append(h)
+    for h in list(alloc.live_handles()):
+        alloc.harvest_free(h)
 
-    # --- harvest_register_cb: revocation notification --------------------
-    def on_revoked(handle):
-        print(f"  -> REVOKED device={handle.device} size={handle.size >> 30}GiB"
-              f" (falling back to host DRAM copy)")
+    # --- HarvestStore: tiered objects with a durability class -----------
+    # Any object class plugs into the same seam — here, LoRA adapters.
+    store = runtime.create_store("lora", object_nbytes=2 * GiB)
+    for i in range(4):
+        store.register(("adapter", i), state=Residency.HOST,
+                       durability=(Durability.BACKED if i % 2 == 0
+                                   else Durability.RECONSTRUCTIBLE))
+        store.touch_hotness(("adapter", i), float(i), alpha=0.0)
 
-    for h in handles:
-        alloc.harvest_register_cb(h, on_revoked)
+    migrated = sum(store.promote_to_peer(key)
+                   for key, _ in store.hottest(Residency.HOST))
+    print(f"\npromoted {migrated} adapters to peer HBM; "
+          f"tiers={store.tier_counts()}")
 
-    # --- external pressure: a cluster trace shrinks peer budgets ---------
-    trace = ClusterTrace(ClusterTraceConfig(num_devices=4,
-                                            capacity_bytes=16 * GiB, seed=42))
-    mon = PeerMonitor(alloc, trace, capacity_bytes=16 * GiB,
-                      reserve_bytes=1 * GiB)
+    # --- external pressure: the trace shrinks peer budgets --------------
     for t in range(12):
-        budgets = mon.tick()
+        budgets = runtime.tick()
         live = len(alloc.live_handles())
         print(f"t={t:2d} budgets(GiB)="
               f"{[round(b / GiB, 1) for b in budgets.values()]} live={live}")
 
-    # --- harvest_free: explicit release ----------------------------------
-    for h in list(alloc.live_handles()):
-        alloc.harvest_free(h)
-    print("stats:", alloc.stats)
+    # --- durability under revocation: BACKED -> host, else -> LOST ------
+    # a sudden external job fills every peer device: all budgets -> 0
+    for d in range(4):
+        alloc.update_budget(d, 0)
+    tiers = store.tier_counts()
+    print(f"\nafter full memory crunch: tiers={tiers}")
+    for i in range(4):
+        ent = store.table[("adapter", i)]
+        print(f"  adapter {i}: {ent.durability.value:15s} -> "
+              f"{ent.state.value}")
+
+    print("\nunified metrics:", runtime.stats())
 
 
 if __name__ == "__main__":

@@ -1,22 +1,33 @@
 """Harvest core: the paper's contribution as a composable JAX-side runtime.
 
+Public API (construct these):
+  runtime     — HarvestRuntime: the facade composing allocator + monitor +
+                policy + store; every entry point builds one of these
+  store       — HarvestStore: generic tiered-object residency (local/peer/
+                host/LOST), durability classes, TransferEngine, metrics
+
+Components (the runtime wires these for you):
   allocator   — harvest_alloc / harvest_free / harvest_register_cb + revocation
   policy      — best-fit (paper default), locality, fairness, stability
   monitor     — peer-availability monitor + Fig-2-calibrated cluster trace
   tiers       — local HBM / peer HBM / host DRAM cost model (H100+NVLink, v5e+ICI)
-  rebalancer  — MoE expert residency (paper §4)
-  kv_manager  — paged KV unified block table (paper §5)
+  rebalancer  — MoE expert residency, a thin store client (paper §4)
+  kv_manager  — paged KV unified block table, a thin store client (paper §5)
   paged_attention — tier-aware flash-decode partials + LSE merge
   simulator   — CGOPipe pipeline model reproducing Fig 5/6
 """
 from repro.core.allocator import HarvestAllocator, HarvestHandle, RevokedError
-from repro.core.kv_manager import KVOffloadManager
+from repro.core.kv_manager import BlockEntry, KVOffloadManager, ReloadOp
 from repro.core.monitor import ClusterTrace, ClusterTraceConfig, PeerMonitor
 from repro.core.policy import (BestFitPolicy, FairnessPolicy, LocalityPolicy,
                                PlacementRequest, StabilityPolicy, WorstFitPolicy)
 from repro.core.rebalancer import ExpertRebalancer
+from repro.core.runtime import HarvestRuntime
 from repro.core.simulator import (AccessModelConfig, ExpertAccessModel,
                                   SimResult, simulate_moe_decode)
+from repro.core.store import (Durability, HarvestStore, LostObjectError,
+                              MetricsRegistry, ObjectEntry, Residency,
+                              Transfer, TransferEngine)
 from repro.core.tiers import (HARDWARE, H100_NVLINK, TPU_V5E, HardwareModel,
                               LinkSpec, Tier, expert_bytes, kv_block_bytes,
                               kv_entry_bytes)

@@ -107,8 +107,12 @@ class _Device:
 class HarvestAllocator:
     """Controller for opportunistic peer HBM allocation."""
 
+    #: stats counter names (one namespace in the runtime's MetricsRegistry)
+    STAT_KEYS = ("allocs", "failed", "revocations", "frees")
+
     def __init__(self, device_budgets: Dict[int, int],
-                 policy: Optional[PlacementPolicy] = None):
+                 policy: Optional[PlacementPolicy] = None,
+                 metrics=None):
         self._devices: Dict[int, _Device] = {
             d: _Device(d, b) for d, b in device_budgets.items()}
         self._policy = policy or BestFitPolicy()
@@ -117,7 +121,12 @@ class HarvestAllocator:
         self._alloc_order: List[int] = []        # handle ids, oldest first
         self._inflight: Dict[int, int] = {}      # handle -> outstanding DMA ops
         self._ids = itertools.count(1)
-        self.stats = {"allocs": 0, "failed": 0, "revocations": 0, "frees": 0}
+        # `metrics` is a MetricsRegistry (duck-typed to avoid an import cycle
+        # with repro.core.store); standalone allocators keep a plain dict
+        if metrics is not None:
+            self.stats = metrics.counters("allocator", keys=self.STAT_KEYS)
+        else:
+            self.stats = {k: 0 for k in self.STAT_KEYS}
 
     # ---------------------------------------------------------------- API
     def harvest_alloc(self, size: int, hints: Optional[dict] = None,

@@ -1,16 +1,18 @@
-"""KVOffloadManager — Harvest applied to the paged KV cache (paper §5).
+"""KVOffloadManager — the paged-KV client of :class:`HarvestStore` (§5).
 
 Extends the vLLM-style paged KV manager with a *unified block table*: every
 logical block maps to a residency entry in {local HBM, peer HBM, host DRAM}.
-Under local-pool pressure, blocks evict to peer HBM when `harvest_alloc`
-succeeds, else to host DRAM.  A reload brings a non-local block back before
-(fetch mode) or during (in-place mode) the decode step.  Durability is an
+All residency mechanics — the LRU eviction ladder (peer first, host
+fallback), revocation fallback, transfer-time accounting — live in the
+generic store; this client only adds block-table semantics (per-request
+block keys, fill tracking, payload shape) on top.  Durability is an
 application choice:
 
   host_backed — eviction to peer ALSO materialises a host copy; revocation
                 falls back to host transparently (paper's durable mode).
-  lossy       — peer-only; revocation drops the block and the request must
-                recompute it (paper's reconstructible mode).
+  lossy       — peer-only; revocation moves the block to the explicit LOST
+                residency state and the request must recompute it (paper's
+                reconstructible mode).
 
 The manager tracks both the *placement* (bytes, any scale — used by the
 dry-run and the simulator) and optionally the *payload* (real numpy block
@@ -18,34 +20,37 @@ arrays — used by the serving engine and tests).
 """
 from __future__ import annotations
 
-import collections
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.allocator import HarvestAllocator, HarvestHandle
+from repro.core.allocator import HarvestAllocator
+from repro.core.store import (Durability, HarvestStore, MetricsRegistry,
+                              ObjectEntry, Transfer, TransferEngine)
 from repro.core.tiers import HardwareModel, Tier, kv_block_bytes
 
 BlockId = Tuple[int, int]    # (request_id, block_index_within_request)
 
+#: back-compat alias — a reload op IS a store transfer
+ReloadOp = Transfer
+
+DURABILITY = {
+    "host_backed": Durability.BACKED,
+    "lossy": Durability.RECONSTRUCTIBLE,
+}
+
+KV_STAT_KEYS = ("evict_to_peer", "evict_to_host", "reload_peer",
+                "reload_host", "revocations", "recomputes", "allocated",
+                "freed")
+
 
 @dataclass
-class BlockEntry:
-    tier: Tier
-    local_slot: Optional[int] = None
-    handle: Optional[HarvestHandle] = None     # peer tier
-    host_copy: bool = False
+class BlockEntry(ObjectEntry):
+    """Store entry + the block-table fields the decode path reads/writes."""
     base_pos: int = 0
     filled: int = 0                            # tokens written
-
-
-@dataclass
-class ReloadOp:
-    block: BlockId
-    src: Tier
-    seconds: float
 
 
 class KVOffloadManager:
@@ -53,7 +58,9 @@ class KVOffloadManager:
                  hardware: HardwareModel, block_size: int,
                  num_local_slots: int, durability: str = "host_backed",
                  store_payload: bool = False, num_kv_layers: int = 0,
-                 client: str = "kv"):
+                 client: str = "kv",
+                 transfers: Optional[TransferEngine] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.cfg = cfg
         self.allocator = allocator
         self.hw = hardware
@@ -62,182 +69,87 @@ class KVOffloadManager:
         self.durability = durability
         self.client = client
         self.num_local_slots = num_local_slots
-        self.free_slots = list(range(num_local_slots))
-        self.lru = collections.OrderedDict()   # block -> None, LRU order
-        self.table: Dict[BlockId, BlockEntry] = {}
-        # requests whose blocks must not be evicted this step (the decode
-        # working set — vLLM pins the active batch the same way)
-        self.pinned: set = set()
-        self.stats = {"evict_to_peer": 0, "evict_to_host": 0, "reload_peer": 0,
-                      "reload_host": 0, "revocations": 0, "recomputes": 0,
-                      "allocated": 0, "freed": 0}
-        # optional real payload stores (small-scale tests / serving engine)
-        self.store_payload = store_payload
         self.n_kv_layers = num_kv_layers
-        self._payload: Dict[BlockId, np.ndarray] = {}   # (L,2,bs,nkv,hd) per block
-        # engine hooks: called with (block_id, local_slot) so the serving
-        # engine can move the actual pool payload alongside the placement
-        self.evict_hook = None     # before a local slot is released
-        self.reload_hook = None    # after a local slot is (re)assigned
+        self.store = HarvestStore(
+            allocator, transfers or TransferEngine(hardware, metrics),
+            client=client, object_nbytes=self.block_nbytes,
+            num_local_slots=num_local_slots,
+            durability=DURABILITY[durability], store_payload=store_payload,
+            entry_factory=BlockEntry, stat_keys=KV_STAT_KEYS)
+
+    # ------------------------------------------------------- store views
+    @property
+    def stats(self) -> Dict[str, int]:
+        return self.store.stats
+
+    @property
+    def table(self) -> Dict[BlockId, BlockEntry]:
+        return self.store.table
+
+    @property
+    def free_slots(self) -> List[int]:
+        return self.store.free_slots
+
+    @property
+    def pinned(self) -> set:
+        """Requests whose blocks must not be evicted this step (the decode
+        working set — vLLM pins the active batch the same way)."""
+        return self.store.pinned_owners
+
+    @pinned.setter
+    def pinned(self, owners) -> None:
+        self.store.pinned_owners = set(owners)
+
+    @property
+    def evict_hook(self):
+        return self.store.evict_hook
+
+    @evict_hook.setter
+    def evict_hook(self, fn) -> None:
+        self.store.evict_hook = fn
+
+    @property
+    def reload_hook(self):
+        return self.store.reload_hook
+
+    @reload_hook.setter
+    def reload_hook(self, fn) -> None:
+        self.store.reload_hook = fn
 
     # ------------------------------------------------------------- alloc
     def allocate_block(self, req: int, block_idx: int, base_pos: int
                        ) -> Tuple[int, List[ReloadOp]]:
         """Get a local slot for a new block, evicting if necessary."""
-        bid = (req, block_idx)
-        assert bid not in self.table, f"block {bid} already allocated"
-        ops = []
-        if not self.free_slots:
-            ops.extend(self._evict_one(exclude_req=req))
-        slot = self.free_slots.pop()
-        self.table[bid] = BlockEntry(tier=Tier.LOCAL_HBM, local_slot=slot,
-                                     base_pos=base_pos)
-        self.lru[bid] = None
-        self.stats["allocated"] += 1
-        return slot, ops
+        return self.store.allocate_local((req, block_idx), base_pos=base_pos)
 
     def free_request(self, req: int) -> None:
-        for bid in [b for b in self.table if b[0] == req]:
-            self._drop(bid)
-            self.stats["freed"] += 1
-
-    def _drop(self, bid: BlockId) -> None:
-        ent = self.table.pop(bid)
-        if ent.tier == Tier.LOCAL_HBM:
-            self.free_slots.append(ent.local_slot)
-        elif ent.tier == Tier.PEER_HBM and ent.handle is not None:
-            self.allocator.harvest_free(ent.handle)
-        self.lru.pop(bid, None)
-        self._payload.pop(bid, None)
+        self.store.release_owner(req)
 
     # ----------------------------------------------------------- evict
-    def _evict_one(self, exclude_req: Optional[int] = None,
-                   victim: Optional[BlockId] = None,
-                   exclude_block: Optional[BlockId] = None) -> List[ReloadOp]:
-        """Evict the LRU local block: peer first, host fallback.
-
-        Victims from other requests are preferred; when only the excluded
-        request's own blocks remain local (single-request long-context), its
-        LRU block other than ``exclude_block`` is evicted instead.
-        """
-        if victim is None:
-            fallback = None
-            for bid in self.lru:
-                ent = self.table[bid]
-                if ent.tier != Tier.LOCAL_HBM or bid[0] in self.pinned:
-                    continue
-                if exclude_req is None or bid[0] != exclude_req:
-                    victim = bid
-                    break
-                if fallback is None and bid != exclude_block:
-                    fallback = bid
-            if victim is None:
-                victim = fallback
-        if victim is None:
-            raise RuntimeError("KV pool exhausted: no evictable block")
-        ent = self.table[victim]
-        if self.evict_hook is not None:
-            self.evict_hook(victim, ent.local_slot)
-        self.free_slots.append(ent.local_slot)
-        ent.local_slot = None
-        self.lru.pop(victim)
-
-        h = self.allocator.harvest_alloc(self.block_nbytes, client=self.client)
-        ops = []
-        if h is not None:
-            ent.tier = Tier.PEER_HBM
-            ent.handle = h
-            self.allocator.harvest_register_cb(
-                h, lambda handle, bid=victim: self._on_revoked(bid))
-            ops.append(ReloadOp(victim, Tier.PEER_HBM, self.hw.transfer_time(
-                self.block_nbytes, Tier.LOCAL_HBM, Tier.PEER_HBM)))
-            self.stats["evict_to_peer"] += 1
-            if self.durability == "host_backed":
-                ent.host_copy = True   # written back asynchronously
-        else:
-            ent.tier = Tier.HOST_DRAM
-            ent.host_copy = True
-            ops.append(ReloadOp(victim, Tier.HOST_DRAM, self.hw.transfer_time(
-                self.block_nbytes, Tier.LOCAL_HBM, Tier.HOST_DRAM)))
-            self.stats["evict_to_host"] += 1
-        return ops
+    def evict_request(self, req: int) -> List[ReloadOp]:
+        """Preemption support (paper §6.3): push ALL of a request's local
+        blocks out to the peer/host tiers."""
+        return self.store.evict_owner(req)
 
     # ----------------------------------------------------------- reload
     def ensure_resident(self, req: int, block_idx: int) -> List[ReloadOp]:
         """Fetch-mode reload: make a block local before the step."""
-        bid = (req, block_idx)
-        ent = self.table[bid]
-        self.lru.pop(bid, None)
-        self.lru[bid] = None     # touch
-        if ent.tier == Tier.LOCAL_HBM:
-            return []
-        ops = []
-        if not self.free_slots:
-            ops.extend(self._evict_one(exclude_req=req, exclude_block=bid))
-        slot = self.free_slots.pop()
-        src = ent.tier
-        seconds = self.hw.transfer_time(self.block_nbytes, src, Tier.LOCAL_HBM)
-        if src == Tier.PEER_HBM:
-            self.stats["reload_peer"] += 1
-            if ent.handle is not None:
-                self.allocator.harvest_free(ent.handle)
-                ent.handle = None
-        else:
-            self.stats["reload_host"] += 1
-        ent.tier = Tier.LOCAL_HBM
-        ent.local_slot = slot
-        if self.reload_hook is not None:
-            self.reload_hook(bid, slot)
-        ops.append(ReloadOp(bid, src, seconds))
-        return ops
-
-    def evict_request(self, req: int) -> List[ReloadOp]:
-        """Preemption support (paper §6.3): push ALL of a request's local
-        blocks out to the peer/host tiers."""
-        ops = []
-        self.pinned.discard(req)
-        for bid in sorted(b for b in self.table if b[0] == req):
-            if self.table[bid].tier == Tier.LOCAL_HBM:
-                ops.extend(self._evict_one(victim=bid))
-        return ops
+        return self.store.ensure_local((req, block_idx))
 
     def is_lost(self, req: int, block_idx: int) -> bool:
-        """True if a lossy revocation dropped this block's payload."""
-        ent = self.table.get((req, block_idx))
-        return ent is not None and ent.filled == 0 and ent.tier != Tier.LOCAL_HBM \
-            and not ent.host_copy
-
-    # -------------------------------------------------------- revocation
-    def _on_revoked(self, bid: BlockId) -> None:
-        ent = self.table.get(bid)
-        if ent is None or ent.tier != Tier.PEER_HBM:
-            return
-        ent.handle = None
-        self.stats["revocations"] += 1
-        if ent.host_copy:
-            ent.tier = Tier.HOST_DRAM      # transparent fallback (durable)
-        else:
-            # lossy: block is gone; the request re-materialises it
-            ent.tier = Tier.HOST_DRAM
-            ent.filled = 0
-            self.stats["recomputes"] += 1
-            self._payload.pop(bid, None)
+        """True iff a lossy revocation dropped this block's payload."""
+        return self.store.is_lost((req, block_idx))
 
     # ------------------------------------------------------------ queries
-    def residency(self, req: int) -> List[Tier]:
-        blocks = sorted(b for b in self.table if b[0] == req)
-        return [self.table[b].tier for b in blocks]
+    def residency(self, req: int) -> List[Optional[Tier]]:
+        return self.store.residency_of(req)
 
     def tier_counts(self) -> Dict[str, int]:
-        out = {t.value: 0 for t in Tier}
-        for ent in self.table.values():
-            out[ent.tier.value] += 1
-        return out
+        return self.store.tier_counts()
 
     # --------------------------------------------------------- payloads
     def write_payload(self, req: int, block_idx: int, data: np.ndarray) -> None:
-        if self.store_payload:
-            self._payload[(req, block_idx)] = np.asarray(data)
+        self.store.write_payload((req, block_idx), data)
 
     def read_payload(self, req: int, block_idx: int) -> Optional[np.ndarray]:
-        return self._payload.get((req, block_idx))
+        return self.store.read_payload((req, block_idx))

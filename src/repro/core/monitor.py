@@ -13,7 +13,7 @@ harvestable = capacity - external_usage - reserve.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -36,8 +36,8 @@ class ClusterTraceConfig:
     mean_revert: float = 0.2       # OU pull toward the base level
     noise: float = 0.008           # fraction-of-capacity per step
     job_arrival_p: float = 0.015   # per device per step
-    job_size_frac: (float, float) = (0.02, 0.12)
-    job_lifetime: (int, int) = (5, 30)
+    job_size_frac: Tuple[float, float] = (0.02, 0.12)
+    job_lifetime: Tuple[int, int] = (5, 30)
 
 
 class ClusterTrace:

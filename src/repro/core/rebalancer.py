@@ -1,40 +1,48 @@
-"""Expert Rebalancer — Harvest applied to MoE expert weights (paper §4).
+"""Expert Rebalancer — the MoE-weights client of :class:`HarvestStore` (§4).
 
 At server start a user-defined subset of experts is resident in local HBM;
 the rest live in host DRAM (authoritative copy, always kept — expert weights
-are the "backed" durability class).  As peer memory becomes available the
-rebalancer migrates the *hottest* non-local experts into peer HBM via
-``harvest_alloc``; on revocation the residency entry falls back to host and
-future fetches take the slow path again.  Routing, batching and the FFN math
-are untouched (the paper's "no model code changes" property) — residency only
-changes *where a miss is served from*.
+are the BACKED durability class).  As peer memory becomes available the
+rebalancer migrates the *hottest* non-local experts into peer HBM via the
+store's promote primitive; on revocation the store falls the entry back to
+host and future fetches take the slow path again.  Routing, batching and the
+FFN math are untouched (the paper's "no model code changes" property) —
+residency only changes *where a miss is served from*.
+
+Hotness-ranked migration is a policy loop over the generic store, not a
+parallel residency implementation: the store owns the table, revocation
+wiring and transfer accounting.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.allocator import HarvestAllocator, HarvestHandle
+from repro.core.allocator import HarvestAllocator
+from repro.core.store import (Durability, HarvestStore, MetricsRegistry,
+                              ObjectEntry, Residency, TransferEngine)
 from repro.core.tiers import HardwareModel, Tier, expert_bytes
 
 ExpertId = Tuple[int, int]   # (moe_layer_index, expert_index)
 
+MOE_STAT_KEYS = ("peer_hits", "host_hits", "local_hits", "migrations",
+                 "revocations")
 
-@dataclass
-class ExpertEntry:
-    tier: Tier
-    handle: Optional[HarvestHandle] = None
-    hotness: float = 0.0      # EWMA of per-step activation count
-    pinned_local: bool = False
+_HIT_STAT = {
+    Residency.LOCAL: "local_hits",
+    Residency.PEER: "peer_hits",
+    Residency.HOST: "host_hits",
+}
 
 
 class ExpertRebalancer:
     def __init__(self, cfg: ModelConfig, allocator: HarvestAllocator,
                  hardware: HardwareModel, local_fraction: float = 0.5,
-                 ewma: float = 0.8, client: str = "moe"):
+                 ewma: float = 0.8, client: str = "moe",
+                 transfers: Optional[TransferEngine] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         assert cfg.moe is not None
         self.cfg = cfg
         self.allocator = allocator
@@ -42,19 +50,31 @@ class ExpertRebalancer:
         self.ewma = ewma
         self.client = client
         self.expert_nbytes = expert_bytes(cfg)
-        self.residency: Dict[ExpertId, ExpertEntry] = {}
-        self.stats = {"peer_hits": 0, "host_hits": 0, "local_hits": 0,
-                      "migrations": 0, "revocations": 0}
+        # expert weights: no managed local slot pool (the local set is pinned
+        # at startup), BACKED durability (host copy is always authoritative)
+        self.store = HarvestStore(
+            allocator, transfers or TransferEngine(hardware, metrics),
+            client=client, object_nbytes=self.expert_nbytes,
+            num_local_slots=None, durability=Durability.BACKED,
+            stat_keys=MOE_STAT_KEYS)
 
-        n_moe = cfg.num_moe_layers
-        E = cfg.moe.num_experts
-        n_local = int(E * local_fraction)
-        for li in range(n_moe):
-            for e in range(E):
+        n_local = int(cfg.moe.num_experts * local_fraction)
+        for li in range(cfg.num_moe_layers):
+            for e in range(cfg.moe.num_experts):
                 local = e < n_local
-                self.residency[(li, e)] = ExpertEntry(
-                    tier=Tier.LOCAL_HBM if local else Tier.HOST_DRAM,
-                    pinned_local=local)
+                self.store.register(
+                    (li, e),
+                    state=Residency.LOCAL if local else Residency.HOST,
+                    pinned=local)
+
+    # ------------------------------------------------------- store views
+    @property
+    def stats(self) -> Dict[str, int]:
+        return self.store.stats
+
+    @property
+    def residency(self) -> Dict[ExpertId, ObjectEntry]:
+        return self.store.table
 
     # ------------------------------------------------------------- access
     def record_access(self, layer: int, experts: np.ndarray) -> None:
@@ -62,68 +82,39 @@ class ExpertRebalancer:
         counts = np.bincount(np.asarray(experts).reshape(-1),
                              minlength=self.cfg.moe.num_experts)
         for e, c in enumerate(counts):
-            ent = self.residency[(layer, e)]
-            ent.hotness = self.ewma * ent.hotness + (1 - self.ewma) * float(c)
+            self.store.touch_hotness((layer, e), float(c), self.ewma)
 
     def fetch(self, layer: int, expert: int) -> Tuple[Tier, float]:
         """Resolve one expert fetch; returns (tier served from, seconds)."""
-        ent = self.residency[(layer, expert)]
-        if ent.tier == Tier.LOCAL_HBM:
-            self.stats["local_hits"] += 1
-            return ent.tier, self.hw.transfer_time(
-                self.expert_nbytes, Tier.LOCAL_HBM, Tier.LOCAL_HBM)
-        if ent.tier == Tier.PEER_HBM:
-            self.stats["peer_hits"] += 1
-            return ent.tier, self.hw.transfer_time(
-                self.expert_nbytes, Tier.PEER_HBM, Tier.LOCAL_HBM)
-        self.stats["host_hits"] += 1
-        return ent.tier, self.hw.transfer_time(
-            self.expert_nbytes, Tier.HOST_DRAM, Tier.LOCAL_HBM)
+        ent = self.store.table[(layer, expert)]
+        self.stats[_HIT_STAT[ent.state]] += 1
+        op = self.store.transfers.transfer(
+            (layer, expert), self.expert_nbytes, ent.tier, Tier.LOCAL_HBM,
+            client=self.client)
+        return ent.tier, op.seconds
 
     # --------------------------------------------------------- rebalance
     def rebalance(self, max_migrations: int = 16) -> int:
         """Migrate hottest host-resident experts into available peer HBM."""
-        host_resident = [(eid, ent) for eid, ent in self.residency.items()
-                         if ent.tier == Tier.HOST_DRAM]
-        host_resident.sort(key=lambda kv: -kv[1].hotness)
         done = 0
-        for eid, ent in host_resident[:max_migrations * 4]:
+        for eid, _ent in self.store.hottest(Residency.HOST,
+                                            limit=max_migrations * 4):
             if done >= max_migrations:
                 break
-            h = self.allocator.harvest_alloc(self.expert_nbytes,
-                                             client=self.client)
-            if h is None:
+            if not self.store.promote_to_peer(eid):
                 break
-            self.allocator.harvest_register_cb(
-                h, lambda handle, eid=eid: self._on_revoked(eid))
-            ent.tier = Tier.PEER_HBM
-            ent.handle = h
-            self.stats["migrations"] += 1
             done += 1
         return done
 
-    def _on_revoked(self, eid: ExpertId) -> None:
-        """Revocation callback: invalidate, fall back to host (authoritative)."""
-        ent = self.residency[eid]
-        ent.tier = Tier.HOST_DRAM
-        ent.handle = None
-        self.stats["revocations"] += 1
-
     def demote(self, layer: int, expert: int) -> None:
         """Voluntarily release a peer-resident expert (policy-driven)."""
-        ent = self.residency[(layer, expert)]
-        if ent.tier == Tier.PEER_HBM and ent.handle is not None:
-            self.allocator.harvest_free(ent.handle)
-            ent.tier = Tier.HOST_DRAM
-            ent.handle = None
+        self.store.demote((layer, expert))
 
     # ------------------------------------------------------------ queries
     def tier_of(self, layer: int, expert: int) -> Tier:
-        return self.residency[(layer, expert)].tier
+        return self.store.table[(layer, expert)].tier
 
     def residency_fractions(self) -> Dict[str, float]:
-        n = len(self.residency)
-        out = {t.value: 0 for t in Tier}
-        for ent in self.residency.values():
-            out[ent.tier.value] += 1
-        return {k: v / n for k, v in out.items()}
+        counts = self.store.tier_counts()
+        n = max(len(self.store.table), 1)
+        return {k: v / n for k, v in counts.items()}

@@ -1,0 +1,121 @@
+"""HarvestRuntime — the facade composing allocator + monitor + policy + store.
+
+Every entry point (serving engine, pipeline simulator, launchers,
+benchmarks, examples) constructs ONE of these instead of hand-wiring the
+four components.  The runtime owns:
+
+  * the :class:`HarvestAllocator` (peer budgets + placement policy),
+  * the :class:`TransferEngine` (all simulated transfer accounting),
+  * the :class:`MetricsRegistry` (one namespaced counter store for the
+    allocator, every client store, and the transfer engine),
+  * optionally a :class:`PeerMonitor` driving revocations from a cluster
+    trace,
+  * a registry of per-client :class:`HarvestStore` instances.
+
+Clients are factories on the runtime: ``runtime.kv_manager(...)`` and
+``runtime.rebalancer(...)`` return the paper's two applications already
+wired into the shared allocator / transfer engine / metrics; new object
+classes (SSM states, prefix caches, LoRA adapters) use
+``runtime.create_store(...)`` directly and get the same residency ladder,
+revocation handling and accounting for free.
+
+    runtime = HarvestRuntime(device_budgets={0: 8 << 30, 1: 8 << 30},
+                             hardware=H100_NVLINK,
+                             trace_config=ClusterTraceConfig(num_devices=2))
+    kv = runtime.kv_manager(cfg, block_size=16, num_local_slots=64)
+    reb = runtime.rebalancer(cfg, local_fraction=0.5)
+    runtime.tick()                      # external pressure -> revocations
+    print(runtime.stats())              # unified metrics snapshot
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig
+from repro.core.allocator import HarvestAllocator
+from repro.core.kv_manager import KVOffloadManager
+from repro.core.monitor import ClusterTrace, ClusterTraceConfig, PeerMonitor
+from repro.core.policy import PlacementPolicy
+from repro.core.rebalancer import ExpertRebalancer
+from repro.core.store import HarvestStore, MetricsRegistry, TransferEngine
+from repro.core.tiers import H100_NVLINK, HardwareModel
+
+
+class HarvestRuntime:
+    def __init__(self, device_budgets: Optional[Dict[int, int]] = None, *,
+                 hardware: HardwareModel = H100_NVLINK,
+                 policy: Optional[PlacementPolicy] = None,
+                 allocator: Optional[HarvestAllocator] = None,
+                 trace: Optional[ClusterTrace] = None,
+                 trace_config: Optional[ClusterTraceConfig] = None,
+                 monitor: Optional[PeerMonitor] = None,
+                 reserve_bytes: int = 0,
+                 metrics: Optional[MetricsRegistry] = None):
+        self.metrics = metrics or MetricsRegistry()
+        self.hardware = hardware
+        self.allocator = allocator or HarvestAllocator(
+            dict(device_budgets or {}), policy=policy, metrics=self.metrics)
+        self.transfers = TransferEngine(hardware, self.metrics)
+        if monitor is None and (trace is not None or trace_config is not None):
+            trace = trace or ClusterTrace(trace_config)
+            monitor = PeerMonitor(self.allocator, trace,
+                                  capacity_bytes=trace.cfg.capacity_bytes,
+                                  reserve_bytes=reserve_bytes)
+        self.monitor = monitor
+        self.stores: Dict[str, HarvestStore] = {}
+        self.clients: Dict[str, object] = {}
+
+    # ----------------------------------------------------------- factories
+    def create_store(self, client: str, **kwargs) -> HarvestStore:
+        """A tiered store for a NEW object class — the extension seam."""
+        store = HarvestStore(self.allocator, self.transfers, client=client,
+                             metrics=self.metrics, **kwargs)
+        self.stores[client] = store
+        return store
+
+    def kv_manager(self, cfg: ModelConfig, *, block_size: int,
+                   num_local_slots: int, durability: str = "host_backed",
+                   store_payload: bool = False, num_kv_layers: int = 0,
+                   client: str = "kv") -> KVOffloadManager:
+        """The paper's §5 application: paged KV cache entries."""
+        mgr = KVOffloadManager(
+            cfg, self.allocator, self.hardware, block_size, num_local_slots,
+            durability=durability, store_payload=store_payload,
+            num_kv_layers=num_kv_layers, client=client,
+            transfers=self.transfers, metrics=self.metrics)
+        self.stores[client] = mgr.store
+        self.clients[client] = mgr
+        return mgr
+
+    def rebalancer(self, cfg: ModelConfig, *, local_fraction: float = 0.5,
+                   ewma: float = 0.8, client: str = "moe"
+                   ) -> ExpertRebalancer:
+        """The paper's §4 application: MoE expert weights."""
+        reb = ExpertRebalancer(
+            cfg, self.allocator, self.hardware, local_fraction=local_fraction,
+            ewma=ewma, client=client, transfers=self.transfers,
+            metrics=self.metrics)
+        self.stores[client] = reb.store
+        self.clients[client] = reb
+        return reb
+
+    # ------------------------------------------------------------- control
+    def tick(self, steps: int = 1) -> Optional[Dict[int, int]]:
+        """Advance the availability monitor (external pressure -> budget
+        updates -> revocations).  No-op without a monitor."""
+        budgets = None
+        if self.monitor is not None:
+            for _ in range(steps):
+                budgets = self.monitor.tick()
+        return budgets
+
+    # ------------------------------------------------------------- queries
+    def stats(self) -> Dict[str, dict]:
+        """One snapshot of every component's counters."""
+        out = self.metrics.snapshot()
+        out.setdefault("allocator", dict(self.allocator.stats))
+        return out
+
+    def tier_counts(self) -> Dict[str, Dict[str, int]]:
+        return {name: store.tier_counts()
+                for name, store in self.stores.items()}

@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.rebalancer import ExpertRebalancer
+from repro.core.store import TransferEngine
 from repro.core.tiers import HardwareModel, Tier, expert_bytes
 
 
@@ -105,14 +106,23 @@ def simulate_moe_decode(cfg: ModelConfig, hw: HardwareModel,
                         rebalancer: Optional[ExpertRebalancer] = None,
                         peer_capacity_fraction: float = 1.0,
                         ctx_len: int = DEFAULT_CTX_LEN,
-                        cpu_mem_bw: float = CPU_MEM_BW) -> SimResult:
+                        cpu_mem_bw: float = CPU_MEM_BW,
+                        runtime=None) -> SimResult:
     """Simulate decode throughput (tokens/s) for one configuration.
 
     offload_fraction of the experts are NOT local; with ``use_peer`` the
     offloaded set is served from peer HBM (up to ``peer_capacity_fraction``
     of it), else from host DRAM over the slow link.
+
+    ``runtime`` (a :class:`repro.core.runtime.HarvestRuntime`) supplies the
+    TransferEngine so peer-fetch accounting lands in the caller's unified
+    metrics; a live rebalancer (e.g. ``runtime.clients["moe"]``) overrides
+    the static residency split.
     """
     mc = cfg.moe
+    te = runtime.transfers if runtime is not None else TransferEngine(hw)
+    if rebalancer is None and runtime is not None:
+        rebalancer = runtime.clients.get("moe")
     am = ExpertAccessModel(mc.num_experts, mc.top_k,
                            access or AccessModelConfig())
     e_bytes = expert_bytes(cfg)
@@ -173,7 +183,10 @@ def simulate_moe_decode(cfg: ModelConfig, hw: HardwareModel,
                 if tier == Tier.LOCAL_HBM:
                     continue
                 if tier == Tier.PEER_HBM:
-                    dt = hw.peer_link.transfer_time(e_bytes) + PEER_XFER_LAT
+                    dt = te.transfer(int(e), e_bytes, Tier.PEER_HBM,
+                                     Tier.LOCAL_HBM,
+                                     extra_latency=PEER_XFER_LAT,
+                                     client="sim").seconds
                     peer_t += dt
                     fetch_by_tier[tier.value] += dt
                 else:

@@ -1,0 +1,492 @@
+"""HarvestStore — the generic tiered-object layer every Harvest client shares.
+
+The paper's two applications — expert weights (§4) and KV cache entries
+(§5) — are both "objects with a durability class placed across
+{local, peer, host} tiers".  This module is the single implementation of
+that shape:
+
+  * :class:`HarvestStore` owns the residency table
+    (``ObjectKey -> ObjectEntry``), the peer-then-host eviction ladder,
+    revocation handling for both durability classes, and the
+    promote / demote / pin primitives.  Clients (the KV block table, the
+    expert rebalancer, or any future object class — SSM states, prefix
+    caches, LoRA adapters) register objects and policy hooks instead of
+    re-implementing residency bookkeeping.
+  * :class:`Durability` is the application's contract with revocation:
+    ``BACKED`` objects have (or get, on eviction) an authoritative host
+    copy and fall back to host transparently; ``RECONSTRUCTIBLE`` objects
+    are peer-only and transition to the explicit ``LOST`` residency state,
+    so a dropped object can never be confused with a freshly allocated one.
+  * :class:`TransferEngine` centralises all simulated transfer-time
+    accounting (previously scattered across ``ReloadOp.seconds``,
+    ``ExpertRebalancer.fetch`` and the engine's ``_apply_ops``) with
+    batched, link-aware scheduling and CGOPipe-style compute overlap.
+  * :class:`MetricsRegistry` is the unified, namespaced counter store that
+    replaces the per-component ad-hoc ``stats`` dicts.
+
+All times are seconds, sizes bytes.
+"""
+from __future__ import annotations
+
+import collections
+import enum
+from dataclasses import dataclass
+from typing import Callable, Dict, Hashable, Iterable, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.core.allocator import HarvestAllocator, HarvestHandle
+from repro.core.tiers import HardwareModel, Tier
+
+ObjectKey = Hashable
+
+
+class Durability(enum.Enum):
+    """What revocation is allowed to cost the application (paper §3.2)."""
+    BACKED = "backed"                    # host copy authoritative; revocation
+                                         # falls back to host transparently
+    RECONSTRUCTIBLE = "reconstructible"  # peer-only; revocation loses the
+                                         # payload and the client recomputes
+
+
+class Residency(enum.Enum):
+    """Where an object currently lives.  LOST is an explicit terminal state
+    for revoked RECONSTRUCTIBLE objects — not a sentinel encoded in other
+    fields."""
+    LOCAL = "local"
+    PEER = "peer"
+    HOST = "host"
+    LOST = "lost"
+
+
+_RESIDENCY_TIER = {
+    Residency.LOCAL: Tier.LOCAL_HBM,
+    Residency.PEER: Tier.PEER_HBM,
+    Residency.HOST: Tier.HOST_DRAM,
+}
+_TIER_RESIDENCY = {v: k for k, v in _RESIDENCY_TIER.items()}
+
+
+class LostObjectError(RuntimeError):
+    """Raised when a client touches an object whose payload was revoked."""
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+
+class Counters(dict):
+    """A dict of counters: reading a missing key yields 0, so ``c[k] += v``
+    needs no setdefault dance and pre-seeded keys keep stable print order."""
+
+    def __missing__(self, key):
+        return 0
+
+
+class MetricsRegistry:
+    """Namespaced counters shared by every component of one runtime.
+
+    ``counters("kv")`` always returns the same live dict, so a client's
+    ``stats`` attribute and the registry's snapshot view the same numbers.
+    """
+
+    def __init__(self):
+        self._namespaces: Dict[str, Counters] = {}
+
+    def counters(self, namespace: str, keys: Iterable[str] = ()) -> Counters:
+        ns = self._namespaces.setdefault(namespace, Counters())
+        for k in keys:
+            ns.setdefault(k, 0)
+        return ns
+
+    def namespaces(self) -> List[str]:
+        return list(self._namespaces)
+
+    def snapshot(self) -> Dict[str, dict]:
+        return {name: dict(ns) for name, ns in self._namespaces.items()}
+
+
+# ---------------------------------------------------------------------------
+# transfers
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Transfer:
+    """One simulated tier-to-tier move (the unit the engine's clock sums)."""
+    key: ObjectKey
+    src: Tier
+    dst: Tier
+    nbytes: int
+    seconds: float
+
+
+def _link_name(src: Tier, dst: Tier) -> str:
+    pair = {src, dst}
+    if pair == {Tier.LOCAL_HBM}:
+        return "hbm"
+    if Tier.HOST_DRAM in pair:
+        return "host"
+    return "peer"
+
+
+class TransferEngine:
+    """Single source of truth for simulated transfer times.
+
+    Every tier move in the system is minted here, so per-link byte/time
+    accounting lands in one metrics namespace instead of three stats dicts.
+    """
+
+    def __init__(self, hardware: HardwareModel,
+                 metrics: Optional[MetricsRegistry] = None):
+        self.hw = hardware
+        self.metrics = metrics or MetricsRegistry()
+        self._stats = self.metrics.counters("transfer")
+
+    def transfer(self, key: ObjectKey, nbytes: int, src: Tier, dst: Tier,
+                 extra_latency: float = 0.0, client: str = "default"
+                 ) -> Transfer:
+        seconds = self.hw.transfer_time(nbytes, src, dst) + extra_latency
+        link = _link_name(src, dst)
+        self._stats[f"{client}.{link}_s"] += seconds
+        self._stats[f"{client}.{link}_n"] += 1
+        self._stats[f"{client}.{link}_bytes"] += nbytes
+        return Transfer(key, src, dst, nbytes, seconds)
+
+    def schedule(self, transfers: Iterable[Transfer],
+                 overlap_links: bool = False) -> float:
+        """Total wall time for a batch of transfers.
+
+        Default is serial issue (one DMA queue — matches the engine's
+        original accounting).  With ``overlap_links`` the batch is grouped
+        by physical link (peer ICI/NVLink vs host PCIe): each link
+        serialises its own transfers, distinct links run concurrently.
+        """
+        if not overlap_links:
+            return float(sum(t.seconds for t in transfers))
+        per_link: Dict[str, float] = {}
+        for t in transfers:
+            link = _link_name(t.src, t.dst)
+            per_link[link] = per_link.get(link, 0.0) + t.seconds
+        return max(per_link.values(), default=0.0)
+
+    def overlap(self, compute_s: float, transfer_s: float,
+                enabled: bool = True) -> float:
+        """CGOPipe-style overlap: transfers hide under compute when enabled."""
+        return max(compute_s, transfer_s) if enabled else compute_s + transfer_s
+
+
+# ---------------------------------------------------------------------------
+# residency table
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ObjectEntry:
+    """One object's placement.  Clients may subclass to carry domain fields
+    (the KV block table adds ``base_pos``/``filled``)."""
+    state: Residency = Residency.HOST
+    durability: Durability = Durability.BACKED
+    local_slot: Optional[int] = None
+    handle: Optional[HarvestHandle] = None   # live only while state is PEER
+    host_copy: bool = False                  # an authoritative host copy exists
+    hotness: float = 0.0                     # EWMA of client-defined heat
+    pinned: bool = False                     # never evicted from local
+    nbytes: int = 0
+
+    @property
+    def tier(self) -> Optional[Tier]:
+        return _RESIDENCY_TIER.get(self.state)
+
+
+class HarvestStore:
+    """Residency table + tier ladder for one client's object class.
+
+    A store is parameterised by the client name (metrics namespace and
+    allocator fairness tag), the default object size, an optional local
+    slot pool (``num_local_slots=None`` means the local tier is unmanaged —
+    e.g. pinned expert weights), and the default durability class.
+    """
+
+    #: every counter the store itself may bump — clients pre-seed a subset
+    EVENTS = ("allocated", "freed", "evict_to_peer", "evict_to_host",
+              "reload_peer", "reload_host", "revocations", "recomputes",
+              "migrations", "demotions")
+
+    def __init__(self, allocator: HarvestAllocator, transfers: TransferEngine,
+                 *, client: str = "default", object_nbytes: int = 0,
+                 num_local_slots: Optional[int] = None,
+                 durability: Durability = Durability.BACKED,
+                 store_payload: bool = False,
+                 metrics: Optional[MetricsRegistry] = None,
+                 owner_fn: Optional[Callable[[ObjectKey], Hashable]] = None,
+                 entry_factory: Callable[..., ObjectEntry] = ObjectEntry,
+                 stat_keys: Iterable[str] = ()):
+        self.allocator = allocator
+        self.transfers = transfers
+        self.client = client
+        self.object_nbytes = object_nbytes
+        self.durability = durability
+        self.entry_factory = entry_factory
+        # owners group keys for pinning / bulk eviction / bulk release; the
+        # default matches (request_id, block_idx)-style composite keys
+        self.owner_fn = owner_fn or (
+            lambda k: k[0] if isinstance(k, tuple) else k)
+        self.stats = (metrics or transfers.metrics).counters(
+            client, keys=stat_keys)
+
+        self.table: Dict[ObjectKey, ObjectEntry] = {}
+        self.lru: "collections.OrderedDict[ObjectKey, None]" = \
+            collections.OrderedDict()
+        self.num_local_slots = num_local_slots
+        self.free_slots: List[int] = (
+            list(range(num_local_slots)) if num_local_slots is not None else [])
+        self.pinned_owners: Set = set()
+
+        self.store_payload = store_payload
+        self._payload: Dict[ObjectKey, np.ndarray] = {}
+        # policy hooks: called with (key, local_slot) so the embedding layer
+        # (e.g. the serving engine's pool arrays) can move real payloads
+        # alongside the placement
+        self.evict_hook: Optional[Callable[[ObjectKey, int], None]] = None
+        self.reload_hook: Optional[Callable[[ObjectKey, int], None]] = None
+
+    # ------------------------------------------------------------ lifecycle
+    def register(self, key: ObjectKey, *, state: Residency = Residency.HOST,
+                 durability: Optional[Durability] = None,
+                 nbytes: Optional[int] = None, pinned: bool = False,
+                 **extra) -> ObjectEntry:
+        """Track an object that already exists in some tier (no transfer)."""
+        assert key not in self.table, f"object {key} already registered"
+        durability = durability or self.durability
+        ent = self.entry_factory(
+            state=state, durability=durability,
+            nbytes=self.object_nbytes if nbytes is None else nbytes,
+            pinned=pinned,
+            host_copy=(durability is Durability.BACKED
+                       or state is Residency.HOST),
+            **extra)
+        self.table[key] = ent
+        return ent
+
+    def allocate_local(self, key: ObjectKey, *, nbytes: Optional[int] = None,
+                       **extra) -> Tuple[int, List[Transfer]]:
+        """Place a NEW object in a local slot, evicting LRU if needed."""
+        assert key not in self.table, f"object {key} already allocated"
+        assert self.num_local_slots is not None, \
+            f"{self.client}: store has no managed local pool"
+        ops: List[Transfer] = []
+        if not self.free_slots:
+            ops.extend(self._evict_one(exclude_owner=self.owner_fn(key)))
+        slot = self.free_slots.pop()
+        self.table[key] = self.entry_factory(
+            state=Residency.LOCAL, durability=self.durability,
+            nbytes=self.object_nbytes if nbytes is None else nbytes,
+            local_slot=slot, **extra)
+        self.lru[key] = None
+        self.stats["allocated"] += 1
+        return slot, ops
+
+    def release(self, key: ObjectKey) -> None:
+        """Stop tracking an object, freeing its slot / peer segment."""
+        ent = self.table.pop(key)
+        if ent.state is Residency.LOCAL and self.num_local_slots is not None:
+            self.free_slots.append(ent.local_slot)
+        elif ent.state is Residency.PEER and ent.handle is not None:
+            self.allocator.harvest_free(ent.handle)
+        self.lru.pop(key, None)
+        self._payload.pop(key, None)
+        self.stats["freed"] += 1
+
+    def release_owner(self, owner) -> None:
+        for key in [k for k in self.table if self.owner_fn(k) == owner]:
+            self.release(key)
+
+    # ------------------------------------------------------------- eviction
+    def _evict_one(self, exclude_owner=None,
+                   victim: Optional[ObjectKey] = None,
+                   exclude_key: Optional[ObjectKey] = None) -> List[Transfer]:
+        """Evict one local object down the ladder: peer first, host fallback.
+
+        Victims from other owners are preferred; when only the excluded
+        owner's objects remain local (single-request long-context), its LRU
+        object other than ``exclude_key`` is evicted instead.
+        """
+        if victim is None:
+            fallback = None
+            for key in self.lru:
+                ent = self.table[key]
+                if (ent.state is not Residency.LOCAL or ent.pinned
+                        or self.owner_fn(key) in self.pinned_owners):
+                    continue
+                if exclude_owner is None or self.owner_fn(key) != exclude_owner:
+                    victim = key
+                    break
+                if fallback is None and key != exclude_key:
+                    fallback = key
+            if victim is None:
+                victim = fallback
+        if victim is None:
+            raise RuntimeError(
+                f"{self.client}: local pool exhausted — no evictable object")
+        ent = self.table[victim]
+        if self.evict_hook is not None:
+            self.evict_hook(victim, ent.local_slot)
+        if self.num_local_slots is not None:
+            self.free_slots.append(ent.local_slot)
+        ent.local_slot = None
+        self.lru.pop(victim, None)
+
+        ops: List[Transfer] = []
+        h = self.allocator.harvest_alloc(ent.nbytes, client=self.client)
+        if h is not None:
+            ent.state = Residency.PEER
+            ent.handle = h
+            self.allocator.harvest_register_cb(
+                h, lambda handle, key=victim: self._on_revoked(key))
+            ops.append(self.transfers.transfer(
+                victim, ent.nbytes, Tier.LOCAL_HBM, Tier.PEER_HBM,
+                client=self.client))
+            self.stats["evict_to_peer"] += 1
+            if ent.durability is Durability.BACKED:
+                ent.host_copy = True   # written back asynchronously
+        else:
+            ent.state = Residency.HOST
+            ent.host_copy = True       # the host write IS the eviction
+            ops.append(self.transfers.transfer(
+                victim, ent.nbytes, Tier.LOCAL_HBM, Tier.HOST_DRAM,
+                client=self.client))
+            self.stats["evict_to_host"] += 1
+        return ops
+
+    def evict_owner(self, owner) -> List[Transfer]:
+        """Preemption support (paper §6.3): push ALL of an owner's local
+        objects out to the peer/host tiers."""
+        ops: List[Transfer] = []
+        self.pinned_owners.discard(owner)
+        for key in sorted(k for k in self.table if self.owner_fn(k) == owner):
+            if self.table[key].state is Residency.LOCAL:
+                ops.extend(self._evict_one(victim=key))
+        return ops
+
+    # --------------------------------------------------------------- reload
+    def ensure_local(self, key: ObjectKey) -> List[Transfer]:
+        """Fetch-mode reload: make an object local (LRU-touch it either way)."""
+        ent = self.table[key]
+        self.lru.pop(key, None)
+        self.lru[key] = None     # touch
+        if ent.state is Residency.LOCAL:
+            return []
+        if ent.state is Residency.LOST:
+            raise LostObjectError(
+                f"{self.client}: object {key} was revoked without a host "
+                "copy — the client must reconstruct it")
+        ops: List[Transfer] = []
+        slot = None
+        if self.num_local_slots is not None:
+            if not self.free_slots:
+                ops.extend(self._evict_one(
+                    exclude_owner=self.owner_fn(key), exclude_key=key))
+            slot = self.free_slots.pop()
+        src = ent.tier
+        if ent.state is Residency.PEER:
+            self.stats["reload_peer"] += 1
+            if ent.handle is not None:
+                self.allocator.harvest_free(ent.handle)
+                ent.handle = None
+        else:
+            self.stats["reload_host"] += 1
+        ent.state = Residency.LOCAL
+        ent.local_slot = slot
+        if self.reload_hook is not None:
+            self.reload_hook(key, slot)
+        ops.append(self.transfers.transfer(
+            key, ent.nbytes, src, Tier.LOCAL_HBM, client=self.client))
+        return ops
+
+    # ------------------------------------------------------ promote / demote
+    def promote_to_peer(self, key: ObjectKey) -> bool:
+        """Migrate a host-resident object into peer HBM (background path —
+        the move is not charged to any request's critical path)."""
+        ent = self.table[key]
+        if ent.state is not Residency.HOST:
+            return False
+        h = self.allocator.harvest_alloc(ent.nbytes, client=self.client)
+        if h is None:
+            return False
+        self.allocator.harvest_register_cb(
+            h, lambda handle, key=key: self._on_revoked(key))
+        ent.state = Residency.PEER
+        ent.handle = h
+        if ent.durability is Durability.RECONSTRUCTIBLE:
+            ent.host_copy = False   # the class does not pay for host backing
+        self.transfers.transfer(key, ent.nbytes, Tier.HOST_DRAM,
+                                Tier.PEER_HBM, client=self.client)
+        self.stats["migrations"] += 1
+        return True
+
+    def demote(self, key: ObjectKey) -> None:
+        """Voluntarily release a peer-resident object back to host."""
+        ent = self.table[key]
+        if ent.state is Residency.PEER and ent.handle is not None:
+            self.allocator.harvest_free(ent.handle)
+            ent.state = Residency.HOST
+            ent.handle = None
+            ent.host_copy = True    # the demotion write re-materialises it
+            self.stats["demotions"] += 1
+
+    def pin(self, key: ObjectKey, pinned: bool = True) -> None:
+        self.table[key].pinned = pinned
+
+    # ------------------------------------------------------------ revocation
+    def _on_revoked(self, key: ObjectKey) -> None:
+        ent = self.table.get(key)
+        if ent is None or ent.state is not Residency.PEER:
+            return
+        ent.handle = None
+        self.stats["revocations"] += 1
+        if ent.host_copy:
+            ent.state = Residency.HOST    # transparent fallback (BACKED)
+        else:
+            ent.state = Residency.LOST    # explicit loss (RECONSTRUCTIBLE)
+            self.stats["recomputes"] += 1
+            self._payload.pop(key, None)
+
+    # -------------------------------------------------------------- hotness
+    def touch_hotness(self, key: ObjectKey, sample: float,
+                      alpha: float) -> None:
+        """EWMA-update an object's heat: h <- alpha*h + (1-alpha)*sample."""
+        ent = self.table[key]
+        ent.hotness = alpha * ent.hotness + (1 - alpha) * sample
+
+    def hottest(self, state: Residency, limit: Optional[int] = None
+                ) -> List[Tuple[ObjectKey, ObjectEntry]]:
+        cand = [(k, e) for k, e in self.table.items() if e.state is state]
+        cand.sort(key=lambda kv: -kv[1].hotness)
+        return cand if limit is None else cand[:limit]
+
+    # -------------------------------------------------------------- queries
+    def is_lost(self, key: ObjectKey) -> bool:
+        ent = self.table.get(key)
+        return ent is not None and ent.state is Residency.LOST
+
+    def tier_counts(self) -> Dict[str, int]:
+        out = {r.value: 0 for r in Residency}
+        for ent in self.table.values():
+            out[ent.state.value] += 1
+        return out
+
+    def owner_keys(self, owner) -> List[ObjectKey]:
+        return sorted(k for k in self.table if self.owner_fn(k) == owner)
+
+    def residency_of(self, owner) -> List[Optional[Tier]]:
+        return [self.table[k].tier for k in self.owner_keys(owner)]
+
+    # -------------------------------------------------------------- payloads
+    def write_payload(self, key: ObjectKey, data: np.ndarray) -> None:
+        if self.store_payload:
+            self._payload[key] = np.asarray(data)
+
+    def read_payload(self, key: ObjectKey) -> Optional[np.ndarray]:
+        return self._payload.get(key)

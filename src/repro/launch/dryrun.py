@@ -98,6 +98,33 @@ def model_flops(cfg, shape) -> float:
     return 2.0 * n * shape.global_batch          # decode: one token/request
 
 
+def harvest_record(cfg, peer_fraction: float) -> dict:
+    """Tier-link context for a dry-run record, via the HarvestRuntime facade.
+
+    Uses the runtime's TransferEngine (the single source of transfer-time
+    truth) to report what one expert / one KV block costs to reload from
+    each non-local tier on the production hardware model.
+    """
+    from repro.core.runtime import HarvestRuntime
+    from repro.core.tiers import TPU_V5E, Tier, expert_bytes, kv_block_bytes
+
+    rt = HarvestRuntime(hardware=TPU_V5E)
+    out = {"hardware": TPU_V5E.name, "peer_fraction": peer_fraction}
+    units = {}
+    if cfg.moe is not None:
+        units["expert"] = expert_bytes(cfg)
+    if cfg.has_kv_cache:
+        units["kv_block_16"] = kv_block_bytes(cfg, 16)
+    for name, nbytes in units.items():
+        peer = rt.transfers.transfer(name, nbytes, Tier.PEER_HBM,
+                                     Tier.LOCAL_HBM, client="dryrun").seconds
+        host = rt.transfers.transfer(name, nbytes, Tier.HOST_DRAM,
+                                     Tier.LOCAL_HBM, client="dryrun").seconds
+        out[name] = {"bytes": nbytes, "peer_reload_s": peer,
+                     "host_reload_s": host, "peer_speedup": host / peer}
+    return out
+
+
 def run_one(arch: str, shape_name: str, mesh_kind: str,
             harvest_inplace: bool = False, peer_fraction: float = 0.0) -> dict:
     import jax
@@ -120,7 +147,8 @@ def run_one(arch: str, shape_name: str, mesh_kind: str,
 
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
            "devices": n_dev, "harvest_inplace": harvest_inplace,
-           "peer_fraction": peer_fraction, "ok": False}
+           "peer_fraction": peer_fraction, "ok": False,
+           "harvest": harvest_record(cfg, peer_fraction)}
     # donation mirrors production: train updates (params, opt) in place,
     # decode updates the KV/state pools in place
     donate = {"train": (0, 1), "decode": (1,), "prefill": ()}[shape.kind]

@@ -29,25 +29,23 @@ def main():
     args = ap.parse_args()
 
     from repro.configs import get_config
-    from repro.core import (ClusterTrace, ClusterTraceConfig,
-                            HarvestAllocator, PeerMonitor)
+    from repro.core import ClusterTrace, ClusterTraceConfig, HarvestRuntime
     from repro.models import model as M
     from repro.serving import HarvestServingEngine
 
     cfg = get_config(args.arch).reduced()
     params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
     budget = int(args.peer_budget_mb * 2**20)
-    alloc = HarvestAllocator({0: budget, 1: budget})
-    monitor = None
+    trace = None
     if args.with_churn:
         trace = ClusterTrace(ClusterTraceConfig(
             num_devices=2, capacity_bytes=2 * budget, seed=args.seed,
             job_arrival_p=0.3, job_size_frac=(0.2, 0.6)))
-        monitor = PeerMonitor(alloc, trace, capacity_bytes=2 * budget)
+    runtime = HarvestRuntime({0: budget, 1: budget}, trace=trace)
 
     eng = HarvestServingEngine(
         cfg, params, max_batch=args.max_batch, block_size=args.block_size,
-        num_local_slots=args.local_slots, allocator=alloc, monitor=monitor,
+        num_local_slots=args.local_slots, runtime=runtime,
         scheduler=args.scheduler, durability=args.durability, seed=args.seed)
 
     rng = np.random.default_rng(args.seed)
@@ -62,8 +60,9 @@ def main():
     print(f"simulated throughput: {stats.throughput():.0f} tok/s "
           f"(clock {stats.clock_s*1e3:.2f} ms, compute {stats.compute_s*1e3:.2f} ms, "
           f"reload {stats.reload_s*1e3:.2f} ms)")
-    print(f"kv manager: {eng.kv_mgr.stats}")
-    print(f"allocator:  {eng.allocator.stats}")
+    print(f"kv manager: {dict(eng.kv_mgr.stats)}")
+    print(f"allocator:  {dict(eng.allocator.stats)}")
+    print(f"tiers:      {runtime.tier_counts()}")
     for r in eng.finished[:4]:
         print(f"  req {r.req_id}: {len(r.prompt)} prompt -> {r.output[:8]}…")
 

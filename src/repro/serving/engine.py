@@ -25,9 +25,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.allocator import HarvestAllocator
-from repro.core.kv_manager import KVOffloadManager
 from repro.core.monitor import PeerMonitor
-from repro.core.tiers import H100_NVLINK, HardwareModel, Tier
+from repro.core.runtime import HarvestRuntime
+from repro.core.tiers import H100_NVLINK, HardwareModel
 from repro.models import model as M
 from repro.serving.scheduler import SCHEDULERS, Request
 
@@ -50,6 +50,7 @@ class HarvestServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
                  block_size: int = 16, num_local_slots: int = 24,
                  max_seq_len: int = 256,
+                 runtime: Optional[HarvestRuntime] = None,
                  allocator: Optional[HarvestAllocator] = None,
                  monitor: Optional[PeerMonitor] = None,
                  hardware: HardwareModel = H100_NVLINK,
@@ -57,24 +58,33 @@ class HarvestServingEngine:
                  temperature: float = 0.0, seed: int = 0,
                  overlap_reloads: bool = True):
         assert cfg.has_kv_cache or cfg.family == "ssm"
+        # the engine runs over ONE HarvestRuntime; the allocator/monitor/
+        # hardware kwargs are a shorthand that wraps them into a fresh one
+        if runtime is None:
+            runtime = HarvestRuntime(hardware=hardware, allocator=allocator,
+                                     monitor=monitor)
+        else:
+            assert allocator is None and monitor is None, \
+                "pass either runtime= or allocator=/monitor=, not both"
+        self.runtime = runtime
         self.cfg = cfg
         self.params = params
         self.B = max_batch
         self.bs = block_size
-        self.hw = hardware
+        self.hw = runtime.hardware
         self.temperature = temperature
         self.rng = np.random.default_rng(seed)
         self.overlap = overlap_reloads
-        self.monitor = monitor
+        self.monitor = runtime.monitor
         self.scheduler = SCHEDULERS[scheduler]() if isinstance(scheduler, str) \
             else scheduler
 
         self.L_kv = M.num_kv_layers(cfg)
         nkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
         self.n_slots = num_local_slots
-        self.allocator = allocator or HarvestAllocator({})
-        self.kv_mgr = KVOffloadManager(
-            cfg, self.allocator, hardware, block_size, num_local_slots,
+        self.allocator = runtime.allocator
+        self.kv_mgr = runtime.kv_manager(
+            cfg, block_size=block_size, num_local_slots=num_local_slots,
             durability=durability, store_payload=True,
             num_kv_layers=self.L_kv)
         self.kv_mgr.evict_hook = self._on_evict
@@ -234,7 +244,7 @@ class HarvestServingEngine:
         return int(self.rng.choice(len(p), p=p))
 
     def _apply_ops(self, ops) -> float:
-        t = sum(op.seconds for op in ops)
+        t = self.runtime.transfers.schedule(ops)
         self.stats.reload_s += t
         return t
 
@@ -286,12 +296,23 @@ class HarvestServingEngine:
             else:   # resuming a preempted request: reload its blocks
                 nb = math.ceil((r.pos + 1) / self.bs)
                 t = 0.0
+                lost = False
                 for j in range(nb):
-                    if (r.req_id, j) in self.kv_mgr.table:
-                        t += self._apply_ops(
-                            self.kv_mgr.ensure_resident(r.req_id, j))
-                self.row_tokens[r.row] = r.output[-1]
-                self.row_pos[r.row] = r.pos
+                    if (r.req_id, j) not in self.kv_mgr.table:
+                        continue
+                    if self.kv_mgr.is_lost(r.req_id, j):
+                        lost = True
+                        break
+                    t += self._apply_ops(
+                        self.kv_mgr.ensure_resident(r.req_id, j))
+                if lost:
+                    # lossy revocation while preempted: rebuild the prefix
+                    self.stats.recomputes += 1
+                    self.kv_mgr.free_request(r.req_id)
+                    self._prefill(r)
+                else:
+                    self.row_tokens[r.row] = r.output[-1]
+                    self.row_pos[r.row] = r.pos
                 self.stats.clock_s += t
 
         if not self.running:
@@ -311,9 +332,8 @@ class HarvestServingEngine:
                 if self.kv_mgr.is_lost(r.req_id, j):
                     lost = True
                     break
-                for op in self.kv_mgr.ensure_resident(r.req_id, j):
-                    reload_t += op.seconds
-                    self.stats.reload_s += op.seconds
+                reload_t += self._apply_ops(
+                    self.kv_mgr.ensure_resident(r.req_id, j))
             if lost:
                 # lossy revocation: rebuild the whole prefix (recompute)
                 self.stats.recomputes += 1
@@ -360,8 +380,8 @@ class HarvestServingEngine:
         n_active = len(self.running)
         compute_t = max(n_active * self._t_flop_tok, self._t_weights)
         self.stats.compute_s += compute_t
-        self.stats.clock_s += max(compute_t, reload_t) if self.overlap \
-            else compute_t + reload_t
+        self.stats.clock_s += self.runtime.transfers.overlap(
+            compute_t, reload_t, enabled=self.overlap)
 
         logits_np = np.asarray(logits)
         for r in list(self.running):
@@ -383,7 +403,7 @@ class HarvestServingEngine:
                 r.row = None
 
         if self.monitor is not None and sched_step % 4 == 0:
-            self.monitor.tick()
+            self.runtime.tick()
         self.stats.steps += 1
         return True
 

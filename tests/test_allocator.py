@@ -1,5 +1,8 @@
 """Harvest allocator: unit + hypothesis property tests."""
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the optional hypothesis dep")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (BestFitPolicy, FairnessPolicy, HarvestAllocator,

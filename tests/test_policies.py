@@ -1,0 +1,119 @@
+"""Placement-policy rankers and allocator drain-ordering tests.
+
+These run without hypothesis (the property suites skip when it is absent),
+and cover the two previously-untested rankers — FairnessPolicy and
+StabilityPolicy — plus the begin_io/end_io drain contract around
+revocation.
+"""
+import pytest
+
+from repro.core import (BestFitPolicy, FairnessPolicy, HarvestAllocator,
+                        StabilityPolicy, WorstFitPolicy)
+from repro.core.policy import PlacementRequest
+
+
+# ---------------------------------------------------------------------------
+# FairnessPolicy
+# ---------------------------------------------------------------------------
+
+
+def test_fairness_caps_per_client_and_releases_on_free():
+    pol = FairnessPolicy(BestFitPolicy(), per_client_bytes=500)
+    a = HarvestAllocator({0: 10_000}, policy=pol)
+    h1 = a.harvest_alloc(400, client="tenant-a")
+    assert h1 is not None
+    assert a.harvest_alloc(200, client="tenant-a") is None, \
+        "over-cap request must be refused"
+    # another client is unaffected by tenant-a's usage
+    assert a.harvest_alloc(400, client="tenant-b") is not None
+    # releasing budget reopens capacity for the capped client
+    a.harvest_free(h1)
+    pol.on_free("tenant-a", 400)
+    assert a.harvest_alloc(200, client="tenant-a") is not None
+
+
+def test_fairness_rank_empty_when_over_cap():
+    pol = FairnessPolicy(BestFitPolicy(), per_client_bytes=100)
+    req = PlacementRequest(size=200, client="kv")
+    assert pol.rank({0: {"largest_free": 10_000}}, req) == []
+
+
+def test_fairness_wraps_inner_policy_order():
+    pol = FairnessPolicy(WorstFitPolicy(), per_client_bytes=10_000)
+    a = HarvestAllocator({0: 1000, 1: 500}, policy=pol)
+    h = a.harvest_alloc(100, client="kv")
+    assert h.device == 0, "worst-fit inner policy must pick the roomier device"
+
+
+# ---------------------------------------------------------------------------
+# StabilityPolicy
+# ---------------------------------------------------------------------------
+
+
+def test_stability_prefers_low_churn_device():
+    a = HarvestAllocator({0: 1000, 1: 1000}, policy=StabilityPolicy())
+    # device 0's budget thrashes; device 1 is quiet.  (update_budget feeds
+    # the churn EWMA the policy ranks by.)
+    for b in (500, 1000, 300, 1000, 400, 1000):
+        a.update_budget(0, b)
+    h = a.harvest_alloc(100)
+    assert h.device == 1, "placement must avoid the churny device"
+
+
+def test_stability_ties_break_best_fit():
+    pol = StabilityPolicy()
+    devices = {
+        0: {"largest_free": 800, "churn": 0.0},
+        1: {"largest_free": 300, "churn": 0.0},
+    }
+    order = pol.rank(devices, PlacementRequest(size=100))
+    assert order == [1, 0], "equal churn falls back to tightest fit"
+
+
+# ---------------------------------------------------------------------------
+# allocator drain ordering (begin_io / end_io vs revocation)
+# ---------------------------------------------------------------------------
+
+
+def test_revocation_waits_for_drain_then_proceeds_newest_first():
+    a = HarvestAllocator({0: 1000})
+    h1 = a.harvest_alloc(300)
+    h2 = a.harvest_alloc(300)
+    h3 = a.harvest_alloc(300)
+    a.begin_io(h1)                      # oldest allocation has in-flight DMA
+
+    # newest-first revocation reaches h1 and must refuse to complete
+    with pytest.raises(RuntimeError, match="in-flight"):
+        a.update_budget(0, 0)
+    # h3 and h2 (no IO) were revoked before the drain stopped at h1
+    assert not a.is_live(h3) and not a.is_live(h2)
+    assert a.is_live(h1), "a draining region must survive the pass"
+
+    a.end_io(h1)                        # stream-sync completes
+    revoked = a.update_budget(0, 0)
+    assert [h.handle_id for h in revoked] == [h1.handle_id]
+    assert not a.live_handles()
+
+
+def test_nested_io_blocks_until_fully_drained():
+    a = HarvestAllocator({0: 100})
+    h = a.harvest_alloc(100)
+    a.begin_io(h)
+    a.begin_io(h)                       # two outstanding ops on the region
+    a.end_io(h)
+    with pytest.raises(RuntimeError):
+        a.update_budget(0, 0)
+    a.end_io(h)
+    assert a.update_budget(0, 0)[0].handle_id == h.handle_id
+
+
+def test_io_on_untouched_device_does_not_block_other_revocations():
+    a = HarvestAllocator({0: 100, 1: 100})
+    h0 = a.harvest_alloc(100)           # best-fit: both fit equally; pin by device
+    h1 = a.harvest_alloc(100)
+    busy, idle = (h0, h1) if h0.device == 0 else (h1, h0)
+    a.begin_io(busy)
+    # shrinking the OTHER device only touches the idle handle
+    revoked = a.update_budget(idle.device, 0)
+    assert [h.handle_id for h in revoked] == [idle.handle_id]
+    a.end_io(busy)

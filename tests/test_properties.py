@@ -14,6 +14,10 @@ Invariants under arbitrary alloc/free/budget-update interleavings:
 from __future__ import annotations
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the optional hypothesis dep")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config

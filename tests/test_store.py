@@ -1,0 +1,212 @@
+"""Unit tests for the HarvestStore tiered-object layer.
+
+Covers the pieces the tentpole refactor introduced: the explicit LOST
+residency state (vs the old filled==0 sentinel), durability semantics
+under revocation, the promote/demote/pin primitives, the TransferEngine's
+batched/overlap scheduling, and the unified MetricsRegistry.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (Durability, HarvestAllocator, HarvestRuntime,
+                        KVOffloadManager, LostObjectError, MetricsRegistry,
+                        Residency, Tier, TransferEngine)
+from repro.core.tiers import TPU_V5E
+
+MiB = 2**20
+
+
+def _kv(durability, slots=2, budget_mib=64):
+    cfg = get_config("yi-6b").reduced()
+    alloc = HarvestAllocator({0: budget_mib * MiB})
+    kv = KVOffloadManager(cfg, alloc, TPU_V5E, block_size=16,
+                          num_local_slots=slots, durability=durability)
+    return kv, alloc
+
+
+# ---------------------------------------------------------------------------
+# explicit LOST state
+# ---------------------------------------------------------------------------
+
+
+def test_fresh_block_is_not_lost():
+    """The old sentinel (tier=HOST, filled=0, no host copy) could mistake a
+    freshly evicted-but-unfilled block for a dropped one; the explicit
+    LOST state cannot."""
+    kv, alloc = _kv("lossy", slots=1)
+    kv.allocate_block(0, 0, 0)          # filled stays 0 — not yet written
+    kv.allocate_block(1, 0, 0)          # evicts (0,0) to peer
+    ent = kv.table[(0, 0)]
+    assert ent.state is Residency.PEER and ent.filled == 0
+    assert not kv.is_lost(0, 0), \
+        "an unfilled but live peer block must not read as lost"
+
+
+def test_lossy_revocation_is_explicit_lost():
+    kv, alloc = _kv("lossy", slots=1)
+    kv.allocate_block(0, 0, 0)
+    kv.write_payload(0, 0, np.ones((2, 2)))
+    kv.allocate_block(1, 0, 0)          # evicts (0,0) to peer
+    assert kv.table[(0, 0)].state is Residency.PEER
+    alloc.update_budget(0, 0)           # revoke everything
+    assert kv.is_lost(0, 0)
+    assert kv.table[(0, 0)].state is Residency.LOST
+    assert kv.table[(0, 0)].tier is None, "a lost block is in NO tier"
+    assert kv.stats["recomputes"] == 1
+    # touching a lost object is a programming error, not a silent reload
+    with pytest.raises(LostObjectError):
+        kv.ensure_resident(0, 0)
+    # the lost block stays tracked (the client decides how to rebuild)
+    assert kv.tier_counts()["lost"] == 1
+    kv.free_request(0)
+    assert kv.tier_counts()["lost"] == 0
+
+
+def test_backed_revocation_falls_back_to_host():
+    kv, alloc = _kv("host_backed", slots=1)
+    kv.allocate_block(0, 0, 0)
+    kv.allocate_block(1, 0, 0)          # evicts (0,0) to peer + host copy
+    alloc.update_budget(0, 0)
+    ent = kv.table[(0, 0)]
+    assert ent.state is Residency.HOST and not kv.is_lost(0, 0)
+    # and it reloads over the host link
+    kv.free_request(1)
+    ops = kv.ensure_resident(0, 0)
+    assert kv.stats["reload_host"] == 1
+    assert ops[-1].src == Tier.HOST_DRAM and ops[-1].seconds > 0
+
+
+def test_lossy_block_evicted_to_host_survives_revocation():
+    """Host evictions write through, so even a lossy block that ONCE hit
+    host DRAM keeps that copy and survives a later peer revocation."""
+    kv, alloc = _kv("lossy", slots=1, budget_mib=0)
+    kv.allocate_block(0, 0, 0)
+    kv.allocate_block(1, 0, 0)          # no peer budget -> host eviction
+    assert kv.table[(0, 0)].state is Residency.HOST
+    assert kv.table[(0, 0)].host_copy
+    kv.free_request(1)
+    kv.ensure_resident(0, 0)            # back to local
+    alloc.update_budget(0, 64 * MiB)    # now peer capacity appears
+    kv.allocate_block(1, 0, 0)          # evicts (0,0) to peer this time
+    alloc.update_budget(0, 0)           # revoke
+    assert kv.table[(0, 0)].state is Residency.HOST, \
+        "a block with a host copy falls back instead of getting lost"
+
+
+# ---------------------------------------------------------------------------
+# store primitives via the runtime seam
+# ---------------------------------------------------------------------------
+
+
+def test_new_object_class_plugs_into_the_seam():
+    """A brand-new cacheable class (here: LoRA adapters) gets residency,
+    revocation and accounting without any new client code."""
+    rt = HarvestRuntime({0: 8 * MiB})
+    store = rt.create_store("lora", object_nbytes=1 * MiB)
+    for i in range(4):
+        store.register(("a", i), state=Residency.HOST,
+                       durability=Durability.RECONSTRUCTIBLE)
+        store.touch_hotness(("a", i), float(i), alpha=0.0)
+
+    # hotness-ranked promotion: hottest first
+    order = [k for k, _ in store.hottest(Residency.HOST)]
+    assert order[0] == ("a", 3)
+    assert all(store.promote_to_peer(k) for k in order)
+    assert store.tier_counts()["peer"] == 4
+    assert rt.allocator.stats["allocs"] == 4
+
+    # demote is voluntary and frees the peer segment
+    store.demote(("a", 0))
+    assert store.table[("a", 0)].state is Residency.HOST
+    assert rt.allocator.stats["frees"] == 1
+
+    # revocation: reconstructible objects promoted off-host are LOST
+    rt.allocator.update_budget(0, 0)
+    assert store.tier_counts()["lost"] == 3
+    assert store.stats["revocations"] == 3
+
+
+def test_pinned_entries_are_never_evicted():
+    rt = HarvestRuntime({0: 64 * MiB})
+    cfg = get_config("yi-6b").reduced()
+    kv = rt.kv_manager(cfg, block_size=16, num_local_slots=2)
+    kv.allocate_block(7, 0, 0)
+    kv.store.pin((7, 0))
+    kv.allocate_block(8, 0, 0)
+    kv.store.pin((8, 0))
+    with pytest.raises(RuntimeError):
+        kv.allocate_block(9, 0, 0)   # both slots pinned: nothing evictable
+
+
+# ---------------------------------------------------------------------------
+# TransferEngine
+# ---------------------------------------------------------------------------
+
+
+def test_transfer_engine_matches_hardware_model():
+    te = TransferEngine(TPU_V5E)
+    t = te.transfer("x", 4 * MiB, Tier.HOST_DRAM, Tier.LOCAL_HBM)
+    assert t.seconds == pytest.approx(
+        TPU_V5E.transfer_time(4 * MiB, Tier.HOST_DRAM, Tier.LOCAL_HBM))
+    t2 = te.transfer("y", 4 * MiB, Tier.PEER_HBM, Tier.LOCAL_HBM,
+                     extra_latency=1e-3)
+    assert t2.seconds == pytest.approx(
+        TPU_V5E.transfer_time(4 * MiB, Tier.PEER_HBM, Tier.LOCAL_HBM) + 1e-3)
+
+
+def test_transfer_engine_schedule_serial_vs_overlap():
+    te = TransferEngine(TPU_V5E)
+    ops = [te.transfer(i, 8 * MiB, Tier.PEER_HBM, Tier.LOCAL_HBM)
+           for i in range(3)]
+    ops += [te.transfer(9, 8 * MiB, Tier.HOST_DRAM, Tier.LOCAL_HBM)]
+    serial = te.schedule(ops)
+    assert serial == pytest.approx(sum(o.seconds for o in ops))
+    # link-aware: the host copy overlaps the peer batch — wall time is the
+    # busier link, strictly less than the serial sum
+    overlapped = te.schedule(ops, overlap_links=True)
+    peer_s = sum(o.seconds for o in ops[:3])
+    host_s = ops[3].seconds
+    assert overlapped == pytest.approx(max(peer_s, host_s))
+    assert overlapped < serial
+    # CGOPipe-style compute overlap
+    assert te.overlap(1.0, 0.25) == 1.0
+    assert te.overlap(1.0, 0.25, enabled=False) == 1.25
+
+
+def test_transfer_metrics_accumulate_per_link():
+    reg = MetricsRegistry()
+    te = TransferEngine(TPU_V5E, metrics=reg)
+    te.transfer("x", 2 * MiB, Tier.LOCAL_HBM, Tier.PEER_HBM, client="kv")
+    te.transfer("y", 2 * MiB, Tier.LOCAL_HBM, Tier.HOST_DRAM, client="kv")
+    snap = reg.snapshot()["transfer"]
+    assert snap["kv.peer_n"] == 1 and snap["kv.host_n"] == 1
+    assert snap["kv.peer_bytes"] == 2 * MiB
+
+
+# ---------------------------------------------------------------------------
+# unified metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_runtime_metrics_are_one_registry():
+    """Allocator, every client store and the transfer engine all land in
+    the runtime's single registry — no more parallel ad-hoc stats dicts."""
+    rt = HarvestRuntime({0: 64 * MiB, 1: 64 * MiB})
+    cfg = get_config("yi-6b").reduced()
+    kv = rt.kv_manager(cfg, block_size=16, num_local_slots=1)
+    moe = rt.rebalancer(get_config("qwen2-moe"), local_fraction=0.5)
+
+    kv.allocate_block(0, 0, 0)
+    kv.allocate_block(0, 1, 16)     # forces an eviction -> a transfer
+    moe.rebalance(max_migrations=2)
+
+    snap = rt.stats()
+    assert {"allocator", "kv", "moe", "transfer"} <= set(snap)
+    assert snap["kv"]["evict_to_peer"] == 1
+    assert snap["moe"]["migrations"] == 2
+    assert snap["allocator"]["allocs"] == 3
+    # the client-facing stats views ARE the registry namespaces
+    assert kv.stats is rt.metrics.counters("kv")
+    assert moe.stats is rt.metrics.counters("moe")
+    assert rt.tier_counts()["moe"]["peer"] == 2

@@ -137,6 +137,33 @@ def test_engine_revocation_falls_back(served_model):
         assert a.output == b.output, "revocation changed decoded tokens"
 
 
+def test_engine_lossy_revocation_while_preempted_recomputes(served_model):
+    """A preempted request whose peer blocks are revoked under LOSSY
+    durability hits the explicit LOST state on resume and must recompute
+    its prefix — not crash, not decode garbage."""
+    cfg, params = served_model
+    alloc = HarvestAllocator({1: 64 * MiB})
+    eng = _engine(cfg, params, slots=10, alloc=alloc, scheduler="fair",
+                  durability="lossy")
+    reqs = [eng.submit([2 + i, 5, 7, 11, 13 + i], max_new_tokens=12)
+            for i in range(4)]
+    # step until a preemption has pushed blocks to the peer tier…
+    for _ in range(400):
+        if eng.kv_mgr.stats["evict_to_peer"] > 0 or not eng.step():
+            break
+    assert eng.kv_mgr.stats["evict_to_peer"] > 0, \
+        "test must exercise the peer tier"
+    # …then a full memory crunch revokes them: lossy blocks become LOST
+    alloc.update_budget(1, 0)
+    assert eng.kv_mgr.stats["revocations"] > 0
+    assert eng.kv_mgr.tier_counts()["lost"] > 0
+    stats = eng.run(max_steps=800)
+    assert all(len(r.output) == 12 for r in reqs)
+    assert all(r.state == "done" for r in reqs)
+    assert eng.kv_mgr.stats["recomputes"] > 0
+    assert stats.recomputes > 0, "the engine must account the rebuild"
+
+
 def test_engine_fair_scheduler_preempts(served_model):
     cfg, params = served_model
     eng = _engine(cfg, params, slots=24, scheduler="fair")
