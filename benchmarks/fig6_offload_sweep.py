@@ -69,8 +69,10 @@ def run(out_dir: Path, decode_steps: int = 4) -> dict:
              for f, p, h in zip(FRACTIONS, peer_curve, host_curve)]))
         print()
 
+    snap = runtime.stats()
     payload = {"name": "fig6_offload_sweep", "rows": out_rows,
-               "transfer_metrics": runtime.stats().get("transfer", {}),
+               "metrics": snap,
+               "transfer_metrics": snap.get("transfer", {}),  # back-compat
                "checks": [c.to_dict() for c in checks]}
     save_result(out_dir, "fig6_offload_sweep", payload)
     return payload

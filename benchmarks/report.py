@@ -1,6 +1,7 @@
 """Render EXPERIMENTS.md tables from results/ artifacts.
 
-Usage:  PYTHONPATH=src python -m benchmarks.report [--section dryrun|roofline|claims]
+Usage:  PYTHONPATH=src python -m benchmarks.report \
+            [--section dryrun|roofline|claims|metrics]
 Prints markdown; EXPERIMENTS.md embeds the output.
 """
 from __future__ import annotations
@@ -74,6 +75,31 @@ def section_roofline():
                     "bottleneck", "6ND/HLO", "GiB/dev"], out_rows))
 
 
+def section_metrics():
+    """Unified MetricsRegistry snapshots recorded by the benchmarks:
+    per-client transfer totals, per-link queue occupancy (``q.<lane>.*``)
+    and prefetch hit/waste counters, replacing per-benchmark ad-hoc
+    stats printouts."""
+    rows = []
+    for p in sorted(RESULTS_DIR.glob("*.json")):
+        payload = json.loads(p.read_text())
+        snap = payload.get("metrics")
+        if not snap:
+            continue
+        for ns in sorted(snap):
+            counters = snap[ns]
+            if not counters:
+                continue
+            for k in sorted(counters):
+                v = counters[k]
+                rows.append([payload.get("name", p.stem), ns, k,
+                             f"{v:.6g}" if isinstance(v, float) else v])
+    if not rows:
+        print("_no metrics snapshots recorded yet — run the benchmarks_")
+        return
+    print(md_table(["artifact", "namespace", "counter", "value"], rows))
+
+
 def section_claims():
     names = ["fig2_cluster_cdf", "fig3_transfer_latency", "table1_model_zoo",
              "fig5_moe_throughput", "fig6_offload_sweep", "fig7_kv_latency",
@@ -109,3 +135,6 @@ if __name__ == "__main__":
     if a.section in ("claims", "all"):
         print("\n### Paper-claim checks\n")
         section_claims()
+    if a.section in ("metrics", "all"):
+        print("\n### Runtime metrics (transfer queues, prefetch)\n")
+        section_metrics()

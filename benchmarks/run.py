@@ -32,7 +32,7 @@ def _call(name: str, fast: bool):
     if name == "fig5":
         from benchmarks import fig5_moe_throughput as m
         return m.run(RESULTS_DIR, trials=2 if fast else 5,
-                     decode_steps=8 if fast else 32)
+                     decode_steps=8 if fast else 32, timeline=not fast)
     if name == "fig6":
         from benchmarks import fig6_offload_sweep as m
         return m.run(RESULTS_DIR, decode_steps=4 if fast else 8)

@@ -46,8 +46,8 @@ def main():
                                    else Durability.RECONSTRUCTIBLE))
         store.touch_hotness(("adapter", i), float(i), alpha=0.0)
 
-    migrated = sum(store.promote_to_peer(key)
-                   for key, _ in store.hottest(Residency.HOST))
+    migrated = sum(1 for key, _ in store.hottest(Residency.HOST)
+                   if store.promote_to_peer(key))
     print(f"\npromoted {migrated} adapters to peer HBM; "
           f"tiers={store.tier_counts()}")
 

@@ -13,6 +13,8 @@ Components (the runtime wires these for you):
   tiers       — local HBM / peer HBM / host DRAM cost model (H100+NVLink, v5e+ICI)
   rebalancer  — MoE expert residency, a thin store client (paper §4)
   kv_manager  — paged KV unified block table, a thin store client (paper §5)
+  prefetch    — cross-step speculative reloads issued under compute windows
+                on the TransferEngine's event timeline
   paged_attention — tier-aware flash-decode partials + LSE merge
   simulator   — CGOPipe pipeline model reproducing Fig 5/6
 """
@@ -21,13 +23,14 @@ from repro.core.kv_manager import BlockEntry, KVOffloadManager, ReloadOp
 from repro.core.monitor import ClusterTrace, ClusterTraceConfig, PeerMonitor
 from repro.core.policy import (BestFitPolicy, FairnessPolicy, LocalityPolicy,
                                PlacementRequest, StabilityPolicy, WorstFitPolicy)
+from repro.core.prefetch import Prefetcher, PrefetchConfig
 from repro.core.rebalancer import ExpertRebalancer
 from repro.core.runtime import HarvestRuntime
 from repro.core.simulator import (AccessModelConfig, ExpertAccessModel,
                                   SimResult, simulate_moe_decode)
 from repro.core.store import (Durability, HarvestStore, LostObjectError,
                               MetricsRegistry, ObjectEntry, Residency,
-                              Transfer, TransferEngine)
+                              Transfer, TransferEngine, channel_name)
 from repro.core.tiers import (HARDWARE, H100_NVLINK, TPU_V5E, HardwareModel,
                               LinkSpec, Tier, expert_bytes, kv_block_bytes,
                               kv_entry_bytes)

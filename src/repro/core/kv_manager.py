@@ -28,7 +28,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.allocator import HarvestAllocator
 from repro.core.store import (Durability, HarvestStore, MetricsRegistry,
-                              ObjectEntry, Transfer, TransferEngine)
+                              ObjectEntry, Residency, Transfer, TransferEngine)
 from repro.core.tiers import HardwareModel, Tier, kv_block_bytes
 
 BlockId = Tuple[int, int]    # (request_id, block_index_within_request)
@@ -139,6 +139,44 @@ class KVOffloadManager:
     def is_lost(self, req: int, block_idx: int) -> bool:
         """True iff a lossy revocation dropped this block's payload."""
         return self.store.is_lost((req, block_idx))
+
+    # --------------------------------------------------------- prefetch
+    def plan_prefetch(self, running, waiting=(), depth: int = 1
+                      ) -> List[BlockId]:
+        """Blocks the next steps will read that are not local yet.
+
+        ``running`` is an iterable of ``(req_id, pos)`` pairs: for each, the
+        candidates are the blocks covering the append boundary — block
+        ``pos // block_size`` through ``depth`` blocks ahead — that already
+        exist in the table (a resumed request may own non-local tail
+        blocks).  ``waiting`` is an iterable of request ids about to be
+        re-admitted (preempted requests next in scheduler order): their
+        whole resident prefix is a candidate.  LOST blocks are excluded —
+        they need recompute, not a transfer.  Candidates are ordered
+        running-first (nearest deadline) and deduplicated; the
+        :class:`~repro.core.prefetch.Prefetcher` applies slot and link
+        budgets on top.
+        """
+        out: List[BlockId] = []
+        seen: set = set()
+
+        def consider(bid: BlockId) -> None:
+            if bid in seen:
+                return
+            seen.add(bid)
+            ent = self.store.table.get(bid)
+            if ent is None or ent.state in (Residency.LOCAL, Residency.LOST):
+                return
+            out.append(bid)
+
+        for req, pos in running:
+            j0 = pos // self.block_size
+            for j in range(j0, j0 + depth + 1):
+                consider((req, j))
+        for req in waiting:
+            for bid in self.store.owner_keys(req):
+                consider(bid)
+        return out
 
     # ------------------------------------------------------------ queries
     def residency(self, req: int) -> List[Optional[Tier]]:

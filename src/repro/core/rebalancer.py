@@ -94,11 +94,20 @@ class ExpertRebalancer:
         return ent.tier, op.seconds
 
     # --------------------------------------------------------- rebalance
+    def plan_promotions(self, limit: int) -> list:
+        """Hottest host-resident experts, best promotion candidates first.
+
+        This is the rebalancer's prefetch hook: the
+        :class:`~repro.core.prefetch.Prefetcher` consumes the plan during
+        compute windows the same way ``rebalance`` does eagerly.
+        """
+        return [eid for eid, _ent in
+                self.store.hottest(Residency.HOST, limit=limit)]
+
     def rebalance(self, max_migrations: int = 16) -> int:
         """Migrate hottest host-resident experts into available peer HBM."""
         done = 0
-        for eid, _ent in self.store.hottest(Residency.HOST,
-                                            limit=max_migrations * 4):
+        for eid in self.plan_promotions(max_migrations * 4):
             if done >= max_migrations:
                 break
             if not self.store.promote_to_peer(eid):

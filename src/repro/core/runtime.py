@@ -99,7 +99,29 @@ class HarvestRuntime:
         self.clients[client] = reb
         return reb
 
+    def prefetcher(self, kv_client: str = "kv",
+                   moe_client: Optional[str] = None,
+                   config=None):
+        """A cross-step :class:`~repro.core.prefetch.Prefetcher` over this
+        runtime's transfer timeline, wired to an existing KV client (and
+        optionally the expert rebalancer for hot-expert promotion)."""
+        from repro.core.prefetch import Prefetcher
+        kv = self.clients[kv_client]
+        reb = self.clients.get(moe_client) if moe_client else None
+        return Prefetcher(kv, self.transfers, config, rebalancer=reb,
+                          metrics=self.metrics)
+
     # ------------------------------------------------------------- control
+    @property
+    def clock(self) -> float:
+        """The simulated time of this runtime's transfer timeline."""
+        return self.transfers.now
+
+    def drain(self, until: Optional[float] = None):
+        """Complete in-flight transfers up to ``until`` (default: now)."""
+        return self.transfers.drain_until(
+            self.transfers.now if until is None else until)
+
     def tick(self, steps: int = 1) -> Optional[Dict[int, int]]:
         """Advance the availability monitor (external pressure -> budget
         updates -> revocations).  No-op without a monitor."""

@@ -16,6 +16,12 @@ Expert access patterns follow the paper's observations: Zipf-skewed
 popularity with query-dependent drift (hotspots move), so small-fan-out
 models (Phi-3.5) reuse experts across micro-batches more than wide-fan-out
 models (Qwen2-MoE).
+
+Two overlap evaluators share every other code path: the analytic default
+(per micro-batch ``max``, golden-equivalent with the seed) and
+``use_timeline=True``, which plays the same fetch schedule through the
+:class:`~repro.core.store.TransferEngine`'s event-driven clock and FIFO
+link lanes (real queueing, cold-start fill).
 """
 from __future__ import annotations
 
@@ -107,7 +113,7 @@ def simulate_moe_decode(cfg: ModelConfig, hw: HardwareModel,
                         peer_capacity_fraction: float = 1.0,
                         ctx_len: int = DEFAULT_CTX_LEN,
                         cpu_mem_bw: float = CPU_MEM_BW,
-                        runtime=None) -> SimResult:
+                        runtime=None, use_timeline: bool = False) -> SimResult:
     """Simulate decode throughput (tokens/s) for one configuration.
 
     offload_fraction of the experts are NOT local; with ``use_peer`` the
@@ -118,6 +124,17 @@ def simulate_moe_decode(cfg: ModelConfig, hw: HardwareModel,
     TransferEngine so peer-fetch accounting lands in the caller's unified
     metrics; a live rebalancer (e.g. ``runtime.clients["moe"]``) overrides
     the static residency split.
+
+    ``use_timeline=False`` (default, golden-equivalent) evaluates the
+    CGOPipe overlap analytically: per micro-batch,
+    ``max(t_compute, t_fetch)``.  ``use_timeline=True`` runs the same
+    pipeline on the TransferEngine's event timeline instead: micro-batch
+    i+1's expert fetches are ``submit``-ted at the start of micro-batch
+    i's compute window and the pipeline stalls only when a micro-batch's
+    own fetches are not ready, so per-link FIFO queueing and cold-start
+    fill are modelled rather than assumed away.  (The host-side HRM
+    choice of CPU-FFN-vs-PCIe is an analytic-mode refinement; timeline
+    mode always fetches over the link.)
     """
     mc = cfg.moe
     te = runtime.transfers if runtime is not None else TransferEngine(hw)
@@ -176,52 +193,86 @@ def simulate_moe_decode(cfg: ModelConfig, hw: HardwareModel,
             return max(flop_t, hbm_t) + cpu_attn_ub_layer + ub_overhead
 
         def miss_split(experts: np.ndarray):
-            """(peer_missed_bytes+lat, host_missed_bytes, host_n)"""
+            """(peer_seconds, host_missed_bytes, host_n, transfer_ops)"""
             peer_t, host_b, host_n = 0.0, 0, 0
+            ops = []
             for e in experts:
                 tier = tier_of(int(e))
                 if tier == Tier.LOCAL_HBM:
                     continue
                 if tier == Tier.PEER_HBM:
-                    dt = te.transfer(int(e), e_bytes, Tier.PEER_HBM,
+                    op = te.transfer(int(e), e_bytes, Tier.PEER_HBM,
                                      Tier.LOCAL_HBM,
                                      extra_latency=PEER_XFER_LAT,
-                                     client="sim").seconds
-                    peer_t += dt
-                    fetch_by_tier[tier.value] += dt
+                                     client="sim")
+                    peer_t += op.seconds
+                    fetch_by_tier[tier.value] += op.seconds
+                    ops.append(op)
                 else:
                     host_b += e_bytes
                     host_n += 1
-            return peer_t, host_b, host_n
+                    if use_timeline:
+                        op = te.transfer(int(e), e_bytes, Tier.HOST_DRAM,
+                                         Tier.LOCAL_HBM,
+                                         extra_latency=HOST_XFER_LAT,
+                                         client="sim")
+                        fetch_by_tier[Tier.HOST_DRAM.value] += op.seconds
+                        ops.append(op)
+            return peer_t, host_b, host_n, ops
 
         step_t = 0.0
         for _layer in range(n_moe):
             comp = [t_compute_ub(u) for u in ub_experts]
             splits = [miss_split(u) for u in ub_experts]
-            # Host-resident misses: MoE-Lightning's HRM picks the cheaper of
-            #  (A) fetch over PCIe, overlapped with compute (CGOPipe), or
-            #  (B) compute the expert FFN on the CPU — DRAM-bound, serialised
-            #      with CPU attention on the same memory bus.
-            t = 0.0
-            for i in range(num_micro_batches):
-                peer_t, host_b, host_n = splits[i]
-                pcie_t = host_b / hw.host_link.bandwidth + host_n * HOST_XFER_LAT
-                cpu_ffn_t = host_b / cpu_mem_bw
-                opt_a = max(comp[i], pcie_t + peer_t)      # overlap transfers
-                opt_b = comp[i] + cpu_ffn_t if peer_t <= comp[i] \
-                    else max(comp[i] + cpu_ffn_t, peer_t)
-                t += min(opt_a, opt_b)
-                total_fetch += min(pcie_t, cpu_ffn_t) + peer_t
-                if pcie_t < cpu_ffn_t:
-                    fetch_by_tier[Tier.HOST_DRAM.value] += pcie_t
-                else:
-                    fetch_by_tier[Tier.HOST_DRAM.value] += cpu_ffn_t
+            if use_timeline:
+                # event-driven CGOPipe: µb i+1's fetches are issued at the
+                # start of µb i's compute window; µb i's compute starts
+                # only once its own fetches are ready.  µb 0 pays the
+                # cold-start fill.
+                ub_ops = [s[3] for s in splits]
+                t0 = te.now
+                for op in ub_ops[0]:
+                    te.submit(op)
+                te.wait_for(ub_ops[0])
+                for i in range(num_micro_batches):
+                    if i + 1 < num_micro_batches:
+                        for op in ub_ops[i + 1]:
+                            te.submit(op)
+                    te.advance(comp[i])
+                    if i + 1 < num_micro_batches:
+                        te.wait_for(ub_ops[i + 1])
+                t = te.now - t0
+                total_fetch += sum(op.seconds for ops in ub_ops for op in ops)
+            else:
+                # Host-resident misses: MoE-Lightning's HRM picks the
+                # cheaper of
+                #  (A) fetch over PCIe, overlapped with compute (CGOPipe), or
+                #  (B) compute the expert FFN on the CPU — DRAM-bound,
+                #      serialised with CPU attention on the same memory bus.
+                t = 0.0
+                for i in range(num_micro_batches):
+                    peer_t, host_b, host_n, _ops = splits[i]
+                    pcie_t = host_b / hw.host_link.bandwidth \
+                        + host_n * HOST_XFER_LAT
+                    cpu_ffn_t = host_b / cpu_mem_bw
+                    opt_a = max(comp[i], pcie_t + peer_t)  # overlap transfers
+                    opt_b = comp[i] + cpu_ffn_t if peer_t <= comp[i] \
+                        else max(comp[i] + cpu_ffn_t, peer_t)
+                    t += min(opt_a, opt_b)
+                    total_fetch += min(pcie_t, cpu_ffn_t) + peer_t
+                    if pcie_t < cpu_ffn_t:
+                        fetch_by_tier[Tier.HOST_DRAM.value] += pcie_t
+                    else:
+                        fetch_by_tier[Tier.HOST_DRAM.value] += cpu_ffn_t
             step_t += t
             total_compute += sum(comp)
         # dense layers: resident weights, but still CPU attention
-        step_t += n_dense * num_micro_batches * (
+        dense_t = n_dense * num_micro_batches * (
             max(micro_batch * active_flops_tok / cfg.num_layers / hw.peak_flops,
                 dense_bytes_layer / hw.hbm_bw) + cpu_attn_ub_layer + ub_overhead)
+        if use_timeline:
+            te.advance(dense_t)
+        step_t += dense_t
         total_time += step_t
 
     tokens = decode_steps * micro_batch * num_micro_batches

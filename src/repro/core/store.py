@@ -19,8 +19,13 @@ that shape:
     so a dropped object can never be confused with a freshly allocated one.
   * :class:`TransferEngine` centralises all simulated transfer-time
     accounting (previously scattered across ``ReloadOp.seconds``,
-    ``ExpertRebalancer.fetch`` and the engine's ``_apply_ops``) with
-    batched, link-aware scheduling and CGOPipe-style compute overlap.
+    ``ExpertRebalancer.fetch`` and the engine's ``_apply_ops``) and owns
+    the event-driven transfer timeline: a simulated clock plus one FIFO
+    queue per directional link lane (``peer_in``/``peer_out``/``host_in``/
+    ``host_out``), so issue order, per-link contention and transfer/compute
+    pipelining are explicit instead of a single ``max(compute, reload)``
+    approximation.  The legacy batched ``schedule`` reduction remains as
+    the sync-mode compat wrapper.
   * :class:`MetricsRegistry` is the unified, namespaced counter store that
     replaces the per-component ad-hoc ``stats`` dicts.
 
@@ -114,12 +119,26 @@ class MetricsRegistry:
 
 @dataclass
 class Transfer:
-    """One simulated tier-to-tier move (the unit the engine's clock sums)."""
+    """One simulated tier-to-tier move.
+
+    A freshly minted transfer is *pending*: it carries a size and a raw
+    link time (``seconds``) but no position on the timeline.  Sync clients
+    sum pending transfers with :meth:`TransferEngine.schedule`; async
+    clients :meth:`TransferEngine.submit` them onto the per-link FIFO
+    queues, which stamps ``issue_t``/``ready_t``, and later complete them
+    with :meth:`TransferEngine.drain_until`.
+    """
     key: ObjectKey
     src: Tier
     dst: Tier
     nbytes: int
     seconds: float
+    client: str = "default"
+    # --- timeline fields (live only once submitted) ---
+    issue_t: float = 0.0     # simulated time the transfer was enqueued
+    ready_t: float = 0.0     # simulated time the payload is usable at dst
+    channel: str = ""        # directional link lane the transfer occupies
+    done: bool = True        # un-submitted transfers count as complete
 
 
 def _link_name(src: Tier, dst: Tier) -> str:
@@ -131,11 +150,34 @@ def _link_name(src: Tier, dst: Tier) -> str:
     return "peer"
 
 
+def channel_name(src: Tier, dst: Tier) -> str:
+    """Directional lane of a physical link.
+
+    NVLink / ICI / PCIe are full duplex: writes out of local HBM
+    (evictions) and reads into local HBM (reloads) move on opposite
+    directions of the same link and do not contend with each other.  Each
+    direction serialises its own FIFO queue.
+    """
+    base = _link_name(src, dst)
+    if base == "hbm":
+        return base
+    return f"{base}_in" if dst is Tier.LOCAL_HBM else f"{base}_out"
+
+
 class TransferEngine:
     """Single source of truth for simulated transfer times.
 
     Every tier move in the system is minted here, so per-link byte/time
     accounting lands in one metrics namespace instead of three stats dicts.
+
+    The engine also owns the *simulated transfer timeline*: a clock
+    (``now``) plus one FIFO queue per directional link lane.  ``submit``
+    enqueues a minted transfer (stamping ``issue_t``/``ready_t`` from the
+    lane's busy-until time and any in-flight transfer of the same key) and
+    ``drain_until`` advances the clock, completing everything whose
+    ``ready_t`` has passed.  The legacy :meth:`schedule` — a pure
+    pre-summed-seconds reduction — is kept as the sync-mode compat wrapper
+    and is what the seed-equivalence goldens exercise.
     """
 
     def __init__(self, hardware: HardwareModel,
@@ -143,6 +185,10 @@ class TransferEngine:
         self.hw = hardware
         self.metrics = metrics or MetricsRegistry()
         self._stats = self.metrics.counters("transfer")
+        self.now: float = 0.0
+        self._channel_busy: Dict[str, float] = {}
+        self._inflight: Dict[str, "collections.deque[Transfer]"] = {}
+        self._key_busy: Dict[ObjectKey, Transfer] = {}
 
     def transfer(self, key: ObjectKey, nbytes: int, src: Tier, dst: Tier,
                  extra_latency: float = 0.0, client: str = "default"
@@ -152,16 +198,18 @@ class TransferEngine:
         self._stats[f"{client}.{link}_s"] += seconds
         self._stats[f"{client}.{link}_n"] += 1
         self._stats[f"{client}.{link}_bytes"] += nbytes
-        return Transfer(key, src, dst, nbytes, seconds)
+        return Transfer(key, src, dst, nbytes, seconds, client=client)
 
     def schedule(self, transfers: Iterable[Transfer],
                  overlap_links: bool = False) -> float:
-        """Total wall time for a batch of transfers.
+        """Total wall time for a batch of transfers (sync compat path).
 
         Default is serial issue (one DMA queue — matches the engine's
         original accounting).  With ``overlap_links`` the batch is grouped
         by physical link (peer ICI/NVLink vs host PCIe): each link
         serialises its own transfers, distinct links run concurrently.
+        The event-driven path (:meth:`submit` + :meth:`drain_until`)
+        supersedes this for async clients.
         """
         if not overlap_links:
             return float(sum(t.seconds for t in transfers))
@@ -175,6 +223,80 @@ class TransferEngine:
                 enabled: bool = True) -> float:
         """CGOPipe-style overlap: transfers hide under compute when enabled."""
         return max(compute_s, transfer_s) if enabled else compute_s + transfer_s
+
+    # ------------------------------------------------------------- timeline
+    def submit(self, t: Transfer) -> Transfer:
+        """Enqueue a pending transfer on its directional link lane.
+
+        The transfer starts once the lane is free AND any in-flight
+        transfer of the same key has completed (a reload of a block whose
+        eviction write-back is still on the wire must wait for it), and
+        becomes ready ``seconds`` later.  Per-lane FIFO order is preserved
+        by construction: ``ready_t`` is non-decreasing within a lane.
+        """
+        ch = channel_name(t.src, t.dst)
+        t.channel = ch
+        t.issue_t = self.now
+        start = max(self.now, self._channel_busy.get(ch, 0.0))
+        dep = self._key_busy.get(t.key)
+        if dep is not None and not dep.done:
+            start = max(start, dep.ready_t)
+        t.ready_t = start + t.seconds
+        t.done = False
+        self._channel_busy[ch] = t.ready_t
+        self._key_busy[t.key] = t
+        q = self._inflight.setdefault(ch, collections.deque())
+        q.append(t)
+        self._stats[f"q.{ch}.submitted"] += 1
+        self._stats[f"q.{ch}.busy_s"] += t.seconds
+        self._stats[f"q.{ch}.depth"] = len(q)
+        if len(q) > self._stats[f"q.{ch}.peak"]:
+            self._stats[f"q.{ch}.peak"] = len(q)
+        return t
+
+    def drain_until(self, t: float) -> List[Transfer]:
+        """Advance the clock to ``t`` (never backwards) and complete every
+        in-flight transfer whose ``ready_t`` has passed.  Returns the
+        completed transfers."""
+        if t > self.now:
+            self.now = t
+        done: List[Transfer] = []
+        for ch, q in self._inflight.items():
+            while q and q[0].ready_t <= self.now:
+                tr = q.popleft()
+                tr.done = True
+                if self._key_busy.get(tr.key) is tr:
+                    del self._key_busy[tr.key]
+                self._stats[f"q.{ch}.completed"] += 1
+                self._stats[f"q.{ch}.depth"] = len(q)
+                done.append(tr)
+        return done
+
+    def advance(self, seconds: float) -> List[Transfer]:
+        """Let simulated time pass (a compute window) and drain."""
+        return self.drain_until(self.now + seconds)
+
+    def wait_for(self, transfers: Iterable[Transfer]) -> float:
+        """Block the clock until every given transfer has completed;
+        returns the new ``now``.  Already-complete transfers are free."""
+        target = max((t.ready_t for t in transfers if not t.done),
+                     default=self.now)
+        if target > self.now:
+            self.drain_until(target)
+        return self.now
+
+    def pending(self, channel: Optional[str] = None) -> int:
+        """Number of in-flight transfers (optionally on one lane)."""
+        if channel is not None:
+            return len(self._inflight.get(channel, ()))
+        return sum(len(q) for q in self._inflight.values())
+
+    def channel_busy_until(self, channel: str) -> float:
+        """Simulated time the lane's queue runs dry (>= ``now``)."""
+        return max(self.now, self._channel_busy.get(channel, 0.0))
+
+    def queue_depths(self) -> Dict[str, int]:
+        return {ch: len(q) for ch, q in self._inflight.items() if q}
 
 
 # ---------------------------------------------------------------------------
@@ -406,25 +528,27 @@ class HarvestStore:
         return ops
 
     # ------------------------------------------------------ promote / demote
-    def promote_to_peer(self, key: ObjectKey) -> bool:
+    def promote_to_peer(self, key: ObjectKey) -> Optional[Transfer]:
         """Migrate a host-resident object into peer HBM (background path —
-        the move is not charged to any request's critical path)."""
+        the move is not charged to any request's critical path).  Returns
+        the pending transfer (truthy) so timeline clients can ``submit``
+        it, or None when the object is not promotable."""
         ent = self.table[key]
         if ent.state is not Residency.HOST:
-            return False
+            return None
         h = self.allocator.harvest_alloc(ent.nbytes, client=self.client)
         if h is None:
-            return False
+            return None
         self.allocator.harvest_register_cb(
             h, lambda handle, key=key: self._on_revoked(key))
         ent.state = Residency.PEER
         ent.handle = h
         if ent.durability is Durability.RECONSTRUCTIBLE:
             ent.host_copy = False   # the class does not pay for host backing
-        self.transfers.transfer(key, ent.nbytes, Tier.HOST_DRAM,
-                                Tier.PEER_HBM, client=self.client)
+        op = self.transfers.transfer(key, ent.nbytes, Tier.HOST_DRAM,
+                                     Tier.PEER_HBM, client=self.client)
         self.stats["migrations"] += 1
-        return True
+        return op
 
     def demote(self, key: ObjectKey) -> None:
         """Voluntarily release a peer-resident object back to host."""

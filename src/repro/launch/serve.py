@@ -25,11 +25,16 @@ def main():
                     default="host_backed")
     ap.add_argument("--with-churn", action="store_true",
                     help="drive revocations from the cluster trace monitor")
+    ap.add_argument("--mode", choices=["sync", "async"], default="sync",
+                    help="clock mode: legacy pre-summed vs event timeline")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="cross-step prefetch (implies --mode async)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     from repro.configs import get_config
-    from repro.core import ClusterTrace, ClusterTraceConfig, HarvestRuntime
+    from repro.core import (ClusterTrace, ClusterTraceConfig, HarvestRuntime,
+                            PrefetchConfig)
     from repro.models import model as M
     from repro.serving import HarvestServingEngine
 
@@ -43,10 +48,12 @@ def main():
             job_arrival_p=0.3, job_size_frac=(0.2, 0.6)))
     runtime = HarvestRuntime({0: budget, 1: budget}, trace=trace)
 
+    mode = "async" if args.prefetch else args.mode
     eng = HarvestServingEngine(
         cfg, params, max_batch=args.max_batch, block_size=args.block_size,
         num_local_slots=args.local_slots, runtime=runtime,
-        scheduler=args.scheduler, durability=args.durability, seed=args.seed)
+        scheduler=args.scheduler, durability=args.durability, seed=args.seed,
+        mode=mode, prefetch=PrefetchConfig() if args.prefetch else None)
 
     rng = np.random.default_rng(args.seed)
     reqs = []
@@ -57,9 +64,7 @@ def main():
                                args.max_new_tokens))
     stats = eng.run()
     print(f"\n{len(eng.finished)}/{len(reqs)} requests finished")
-    print(f"simulated throughput: {stats.throughput():.0f} tok/s "
-          f"(clock {stats.clock_s*1e3:.2f} ms, compute {stats.compute_s*1e3:.2f} ms, "
-          f"reload {stats.reload_s*1e3:.2f} ms)")
+    print(stats.summary())
     print(f"kv manager: {dict(eng.kv_mgr.stats)}")
     print(f"allocator:  {dict(eng.allocator.stats)}")
     print(f"tiers:      {runtime.tier_counts()}")

@@ -8,16 +8,52 @@ fall back per the durability mode, and the cluster-trace monitor injects
 the external memory pressure that drives revocations.
 
 Wall-time on this CPU host is meaningless for the paper's claims, so the
-engine keeps a *simulated clock*: per decode step,
-    t_step = max(t_compute, t_reload)   (CGOPipe-style overlap)
-with t_compute from the hardware model and t_reload from the tier links.
-Generated tokens are REAL (greedy/temperature over the model's logits).
+engine keeps a *simulated clock* driven by the runtime's
+:class:`~repro.core.store.TransferEngine`.  Each iteration runs the same
+staged pipeline::
+
+    _preempt -> _admit -> _plan_fetches -> _launch_transfers
+            -> [prefetch window] -> _compute -> _commit_and_sample -> _retire
+
+and the two clock modes differ only in how the stages charge time:
+
+  * ``mode="sync"`` (default, seed-equivalent): transfers are pre-summed
+    with the legacy ``TransferEngine.schedule`` and one decode step costs
+    ``overlap(t_compute, t_reload)`` — the original single-``max``
+    approximation.
+  * ``mode="async"``: transfers are ``submit``-ted onto the event-driven
+    timeline (per-direction FIFO link lanes), the step's compute window
+    advances the clock, and the step then waits ONLY on the transfers
+    whose blocks it actually reads.  Eviction write-backs ride the
+    outbound lanes without blocking compute, and a :class:`Prefetcher`
+    fills idle inbound-lane time with next-step reloads.
+
+Timing diagram for one async decode step (peer_in carries reloads,
+peer_out carries eviction write-backs; ``c`` = compute window)::
+
+    clock      t0                            t0+c      t_end
+    compute    |========= decode ============|
+    peer_in    |--resume reload r1--|--prefetch r2-->  (r2 ready before
+    peer_out   |--preempt writeback----|                next step reads it)
+    step       |<------------- max(compute, reads-ready) ------------->|
+
+Generated tokens are REAL (greedy/temperature over the model's logits)
+and identical across modes: the pipeline changes *when* bytes move, never
+*where* a read is served from.
+
+Accounting identity (asserted by ``EngineStats.check_clock_identity``)::
+
+    clock_s == prefill_s + compute_s + (reload_s - writeback_s) - hidden_s
+
+``reload_s`` is every simulated transfer second; ``writeback_s`` the
+subset charged off the critical path (eviction write-outs); ``hidden_s``
+the critical-path transfer seconds absorbed under compute windows.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +62,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.allocator import HarvestAllocator
 from repro.core.monitor import PeerMonitor
+from repro.core.prefetch import Prefetcher, PrefetchConfig
 from repro.core.runtime import HarvestRuntime
 from repro.core.tiers import H100_NVLINK, HardwareModel
 from repro.models import model as M
@@ -34,16 +71,73 @@ from repro.serving.scheduler import SCHEDULERS, Request
 
 @dataclass
 class EngineStats:
-    clock_s: float = 0.0
-    compute_s: float = 0.0
-    reload_s: float = 0.0
+    clock_s: float = 0.0      # simulated wall time
+    compute_s: float = 0.0    # decode compute windows
+    prefill_s: float = 0.0    # prefill compute windows
+    reload_s: float = 0.0     # ALL simulated transfer seconds
+    writeback_s: float = 0.0  # subset of reload_s off the critical path
+    hidden_s: float = 0.0     # critical transfer seconds hidden under compute
+    stall_s: float = 0.0      # async: time the step waited on its reads
     steps: int = 0
     tokens_out: int = 0
     recomputes: int = 0
     preemptions: int = 0
+    #: unified MetricsRegistry snapshot (transfer queues, kv, prefetch, …),
+    #: populated by ``HarvestServingEngine.run``
+    metrics: Dict[str, dict] = field(default_factory=dict)
 
     def throughput(self) -> float:
         return self.tokens_out / max(self.clock_s, 1e-12)
+
+    @property
+    def critical_reload_s(self) -> float:
+        """Transfer seconds that were on some step's critical path."""
+        return self.reload_s - self.writeback_s
+
+    def check_clock_identity(self, rel: float = 1e-6,
+                             abs_tol: float = 1e-12) -> bool:
+        """The engine's clock identity: every simulated second is accounted
+        exactly once.  (The pre-refactor engine silently dropped prefill- and
+        preemption-time eviction transfers from the clock; they are now the
+        explicit ``writeback_s`` class.)"""
+        expect = (self.prefill_s + self.compute_s
+                  + self.reload_s - self.writeback_s - self.hidden_s)
+        if not math.isclose(self.clock_s, expect, rel_tol=rel,
+                            abs_tol=abs_tol):
+            raise AssertionError(
+                f"clock identity broken: clock_s={self.clock_s!r} != "
+                f"prefill {self.prefill_s!r} + compute {self.compute_s!r} + "
+                f"reload {self.reload_s!r} - writeback {self.writeback_s!r} "
+                f"- hidden {self.hidden_s!r} = {expect!r}")
+        return True
+
+    def summary(self) -> str:
+        """Human-readable report (replaces the launchers' hand-rolled
+        clock/compute/reload printouts) including the unified metrics."""
+        ms = 1e3
+        lines = [
+            f"simulated throughput: {self.throughput():.0f} tok/s "
+            f"({self.tokens_out} tokens / {self.steps} steps)",
+            f"  clock   {self.clock_s * ms:9.3f} ms   "
+            f"compute {self.compute_s * ms:9.3f} ms   "
+            f"prefill {self.prefill_s * ms:9.3f} ms",
+            f"  reload  {self.reload_s * ms:9.3f} ms   "
+            f"writeback {self.writeback_s * ms:7.3f} ms   "
+            f"hidden {self.hidden_s * ms:10.3f} ms   "
+            f"stall {self.stall_s * ms:8.3f} ms",
+            f"  preemptions {self.preemptions}   recomputes {self.recomputes}",
+        ]
+        for ns in ("prefetch", "transfer"):
+            counters = self.metrics.get(ns)
+            if not counters:
+                continue
+            shown = {k: v for k, v in counters.items()
+                     if ns != "transfer" or k.startswith("q.")}
+            if shown:
+                body = "  ".join(f"{k}={v:.4g}" if isinstance(v, float)
+                                 else f"{k}={v}" for k, v in shown.items())
+                lines.append(f"  {ns}: {body}")
+        return "\n".join(lines)
 
 
 class HarvestServingEngine:
@@ -53,19 +147,22 @@ class HarvestServingEngine:
                  runtime: Optional[HarvestRuntime] = None,
                  allocator: Optional[HarvestAllocator] = None,
                  monitor: Optional[PeerMonitor] = None,
-                 hardware: HardwareModel = H100_NVLINK,
+                 hardware: Optional[HardwareModel] = None,
                  scheduler: str = "fcfs", durability: str = "host_backed",
                  temperature: float = 0.0, seed: int = 0,
-                 overlap_reloads: bool = True):
+                 overlap_reloads: bool = True, mode: str = "sync",
+                 prefetch: Optional[PrefetchConfig] = None):
         assert cfg.has_kv_cache or cfg.family == "ssm"
+        assert mode in ("sync", "async"), f"unknown clock mode {mode!r}"
         # the engine runs over ONE HarvestRuntime; the allocator/monitor/
         # hardware kwargs are a shorthand that wraps them into a fresh one
         if runtime is None:
-            runtime = HarvestRuntime(hardware=hardware, allocator=allocator,
-                                     monitor=monitor)
+            runtime = HarvestRuntime(hardware=hardware or H100_NVLINK,
+                                     allocator=allocator, monitor=monitor)
         else:
-            assert allocator is None and monitor is None, \
-                "pass either runtime= or allocator=/monitor=, not both"
+            assert allocator is None and monitor is None and hardware is None, \
+                "pass either runtime= or allocator=/monitor=/hardware=, " \
+                "not both"
         self.runtime = runtime
         self.cfg = cfg
         self.params = params
@@ -74,6 +171,7 @@ class HarvestServingEngine:
         self.hw = runtime.hardware
         self.temperature = temperature
         self.rng = np.random.default_rng(seed)
+        self.mode = mode
         self.overlap = overlap_reloads
         self.monitor = runtime.monitor
         self.scheduler = SCHEDULERS[scheduler]() if isinstance(scheduler, str) \
@@ -89,6 +187,14 @@ class HarvestServingEngine:
             num_kv_layers=self.L_kv)
         self.kv_mgr.evict_hook = self._on_evict
         self.kv_mgr.reload_hook = self._on_reload
+
+        self.prefetcher: Optional[Prefetcher] = None
+        if prefetch is not None:
+            assert mode == "async", \
+                "prefetch needs the event timeline: pass mode='async'"
+            self.prefetcher = Prefetcher(
+                self.kv_mgr, runtime.transfers, prefetch,
+                metrics=runtime.metrics)
 
         if self.L_kv:
             self.pool_k = jnp.zeros((self.L_kv, self.n_slots, block_size,
@@ -116,11 +222,22 @@ class HarvestServingEngine:
 
         # per-token decode compute estimate (weight-read bound)
         pc = cfg.param_counts()
-        self._t_flop_tok = 2 * pc["active"] / hardware.peak_flops
-        self._t_weights = 2 * pc["active"] / hardware.hbm_bw
+        self._t_flop_tok = 2 * pc["active"] / self.hw.peak_flops
+        self._t_weights = 2 * pc["active"] / self.hw.hbm_bw
+
+        # async-mode clock base: the engine may share a timeline that has
+        # already advanced (another engine / simulator on the same runtime)
+        self._clock0 = runtime.transfers.now
+        # transfers the CURRENT step's reads block on, + their seconds
+        self._step_waits: List = []
+        self._step_critical_s = 0.0
+        self._append_slot = np.full((self.B,), self.n_slots, np.int32)
+        self._append_off = np.zeros((self.B,), np.int32)
 
     # ----------------------------------------------------------- payload
     def _on_evict(self, bid, slot):
+        if self.prefetcher is not None:
+            self.prefetcher.on_evict(bid)
         if self.pool_k is None:
             return
         data = np.stack([np.asarray(self.pool_k[:, slot]),
@@ -205,7 +322,13 @@ class HarvestServingEngine:
         logits, out = self._prefill_fn(self.params, batch)
         row = r.row
         # simulated prefill cost: read weights once + prefix compute
-        self.stats.clock_s += max(n * self._t_flop_tok, self._t_weights)
+        prefill_t = max(n * self._t_flop_tok, self._t_weights)
+        self.stats.prefill_s += prefill_t
+        if self.mode == "sync":
+            self.stats.clock_s += prefill_t
+        else:
+            self.runtime.transfers.advance(prefill_t)
+            self._sync_clock()
 
         if self.L_kv:
             k, v = out.kv
@@ -214,7 +337,7 @@ class HarvestServingEngine:
             nb = math.ceil(n / self.bs)
             for j in range(nb):
                 slot, ops = self.kv_mgr.allocate_block(r.req_id, j, j * self.bs)
-                self._apply_ops(ops)
+                self._charge_writeback(ops)
                 lo, hi = j * self.bs, min((j + 1) * self.bs, n_pad)
                 self.pool_k = self.pool_k.at[:, slot, :hi - lo].set(
                     k[:, 0, lo:hi].astype(jnp.float32))
@@ -243,42 +366,76 @@ class HarvestServingEngine:
         p /= p.sum()
         return int(self.rng.choice(len(p), p=p))
 
-    def _apply_ops(self, ops) -> float:
+    # --------------------------------------------------------- accounting
+    def _sync_clock(self) -> None:
+        self.stats.clock_s = self.runtime.transfers.now - self._clock0
+
+    def _charge_writeback(self, ops) -> float:
+        """Eviction write-outs: charged to reload_s but off the critical
+        path — in async mode they occupy the outbound link lanes."""
         t = self.runtime.transfers.schedule(ops)
         self.stats.reload_s += t
+        self.stats.writeback_s += t
+        if self.mode == "async":
+            for op in ops:
+                self.runtime.transfers.submit(op)
         return t
 
-    # -------------------------------------------------------------- step
-    def step(self) -> bool:
-        """One engine iteration. Returns False when all work is done."""
-        if not (self.waiting or self.running):
-            return False
-        sched_step = self.stats.steps
-        self.kv_mgr.pinned = {r.req_id for r in self.running}
+    def _charge_critical(self, ops) -> float:
+        """Transfers some read of the CURRENT step depends on.  Sync mode
+        pre-sums them; async mode queues them and the step waits at the end
+        of its compute window."""
+        t = self.runtime.transfers.schedule(ops)
+        self.stats.reload_s += t
+        if self.mode == "async":
+            for op in ops:
+                self.runtime.transfers.submit(op)
+            self._step_waits.extend(ops)
+            self._step_critical_s += t
+        return t
 
-        # preemption (fair scheduling, §6.3)
+    def _claim_prefetch(self, bid) -> None:
+        """If an in-flight prefetch covers this read, wait on it instead of
+        issuing a new transfer (its seconds were charged at issue)."""
+        if self.prefetcher is None:
+            return
+        tr = self.prefetcher.claim(bid)
+        if tr is not None and not tr.done:
+            self._step_waits.append(tr)
+
+    # ------------------------------------------------------------- stages
+    def _preempt(self, sched_step: int) -> None:
+        """Fair-scheduling preemption (§6.3): push the victim's blocks out
+        to the Harvest tiers as write-backs."""
         victim = self.scheduler.pick_preemption(self.running, self.waiting,
                                                 sched_step)
-        if victim is not None and self.L_kv:
-            ops = self.kv_mgr.evict_request(victim.req_id)
-            self._apply_ops(ops)
-            victim.state = "preempted"
-            self.running.remove(victim)
-            self.free_rows.append(victim.row)
-            self.row_of.pop(victim.req_id, None)
-            victim.row = None
-            self.waiting.append(victim)
-            self.stats.preemptions += 1
+        if victim is None or not self.L_kv:
+            return
+        ops = self.kv_mgr.evict_request(victim.req_id)
+        self._charge_writeback(ops)
+        victim.state = "preempted"
+        self.running.remove(victim)
+        self.free_rows.append(victim.row)
+        self.row_of.pop(victim.req_id, None)
+        victim.row = None
+        self.waiting.append(victim)
+        self.stats.preemptions += 1
 
-        # admission (capacity-aware: the pinned working sets must fit the
-        # local pool, with one append-headroom block per request)
-        def blocks_needed(req):
-            return math.ceil((len(req.prompt) + len(req.output) + 1) / self.bs) + 1
+    def _blocks_needed(self, req: Request) -> int:
+        """Local-pool working set of one request: its prefix blocks plus
+        one append-headroom block.  Used by admission capacity control AND
+        as the prefetcher's slot floor, so the two can never diverge."""
+        return math.ceil((len(req.prompt) + len(req.output) + 1) / self.bs) + 1
 
-        pinned_blocks = sum(blocks_needed(r) for r in self.running)
+    def _admit(self) -> None:
+        """Capacity-aware admission: the pinned working sets must fit the
+        local pool, with one append-headroom block per request.  Admitted
+        requests are prefilled (new / rolled back) or resumed (reload their
+        evicted prefix)."""
+        pinned_blocks = sum(self._blocks_needed(r) for r in self.running)
         admissible = []
         for cand in list(self.waiting):
-            need = blocks_needed(cand)
+            need = self._blocks_needed(cand)
             if pinned_blocks + need > self.n_slots or not self.free_rows:
                 break
             pinned_blocks += need
@@ -293,56 +450,86 @@ class HarvestServingEngine:
             self.kv_mgr.pinned.add(r.req_id)
             if r.needs_prefill:
                 self._prefill(r)
-            else:   # resuming a preempted request: reload its blocks
-                nb = math.ceil((r.pos + 1) / self.bs)
-                t = 0.0
-                lost = False
-                for j in range(nb):
-                    if (r.req_id, j) not in self.kv_mgr.table:
-                        continue
-                    if self.kv_mgr.is_lost(r.req_id, j):
-                        lost = True
-                        break
-                    t += self._apply_ops(
-                        self.kv_mgr.ensure_resident(r.req_id, j))
-                if lost:
-                    # lossy revocation while preempted: rebuild the prefix
-                    self.stats.recomputes += 1
-                    self.kv_mgr.free_request(r.req_id)
-                    self._prefill(r)
-                else:
-                    self.row_tokens[r.row] = r.output[-1]
-                    self.row_pos[r.row] = r.pos
-                self.stats.clock_s += t
+            else:
+                self._resume(r)
 
-        if not self.running:
-            self.stats.steps += 1
-            return bool(self.waiting)
-
-        # fetch mode: every running request's blocks must be local
-        reload_t = 0.0
-        for r in list(self.running):
-            if not self.L_kv:
+    def _resume(self, r: Request) -> None:
+        """Resuming a preempted request: reload its blocks.  The reloads
+        are critical for THIS step (the request decodes immediately); a
+        lossy revocation while preempted forces a prefix rebuild."""
+        nb = math.ceil((r.pos + 1) / self.bs)
+        t = 0.0
+        lost = False
+        for j in range(nb):
+            if (r.req_id, j) not in self.kv_mgr.table:
                 continue
-            nb = math.ceil((r.pos + 1) / self.bs)
+            if self.kv_mgr.is_lost(r.req_id, j):
+                lost = True
+                break
+            ops = self.kv_mgr.ensure_resident(r.req_id, j)
+            self._claim_prefetch((r.req_id, j))
+            t += self._charge_critical(ops)
+        if lost:
+            # lossy revocation while preempted: rebuild the prefix
+            self.stats.recomputes += 1
+            if self.prefetcher is not None:
+                self.prefetcher.cancel_owner(r.req_id)
+            self.kv_mgr.free_request(r.req_id)
+            self._prefill(r)
+        else:
+            self.row_tokens[r.row] = r.output[-1]
+            self.row_pos[r.row] = r.pos
+        if self.mode == "sync":
+            self.stats.clock_s += t
+
+    def _plan_fetches(self) -> List[Tuple[Request, List[Tuple[int, int]]]]:
+        """The read set of the CURRENT step: every running request's blocks
+        up to its decode position.  Only transfers for these blocks may
+        stall the step — everything else (write-backs, prefetches) rides
+        the link lanes in the background."""
+        if not self.L_kv:
+            return []
+        return [(r, [(r.req_id, j)
+                     for j in range(math.ceil((r.pos + 1) / self.bs))])
+                for r in list(self.running)]
+
+    def _launch_transfers(self, plan) -> float:
+        """Make the planned blocks resident (fetch mode), allocate the
+        append blocks the step writes, and charge/queue the transfers."""
+        reload_t = 0.0
+        for r, bids in plan:
             lost = False
-            for j in range(nb):
-                if (r.req_id, j) not in self.kv_mgr.table:
+            for bid in bids:
+                if bid not in self.kv_mgr.table:
                     continue
-                if self.kv_mgr.is_lost(r.req_id, j):
+                if self.kv_mgr.is_lost(*bid):
                     lost = True
                     break
-                reload_t += self._apply_ops(
-                    self.kv_mgr.ensure_resident(r.req_id, j))
+                ops = self.kv_mgr.ensure_resident(*bid)
+                self._claim_prefetch(bid)
+                reload_t += self._charge_critical(ops)
+                # keep the pool->row mapping fresh (prefetched blocks were
+                # reloaded before their request had a batch row)
+                ent = self.kv_mgr.table[bid]
+                self.slot_req[ent.local_slot] = r.row
+                self.slot_base[ent.local_slot] = ent.base_pos
             if lost:
                 # lossy revocation: rebuild the whole prefix (recompute)
                 self.stats.recomputes += 1
+                if self.prefetcher is not None:
+                    self.prefetcher.cancel_owner(r.req_id)
                 self.kv_mgr.free_request(r.req_id)
                 self._prefill(r)
+        reload_t += self._allocate_append_blocks()
+        return reload_t
 
-        # allocate append blocks where the position crosses a boundary
-        append_slot = np.full((self.B,), self.n_slots, np.int32)
-        append_off = np.zeros((self.B,), np.int32)
+    def _allocate_append_blocks(self) -> float:
+        """Allocate a block wherever a position crosses an append boundary.
+        The slot must be free before the decode kernel writes, so any
+        eviction it forces is on the critical path."""
+        self._append_slot = np.full((self.B,), self.n_slots, np.int32)
+        self._append_off = np.zeros((self.B,), np.int32)
+        t_total = 0.0
         for r in self.running:
             pos = r.pos
             j = pos // self.bs
@@ -350,14 +537,21 @@ class HarvestServingEngine:
                 if (r.req_id, j) not in self.kv_mgr.table:
                     slot, ops = self.kv_mgr.allocate_block(r.req_id, j,
                                                            j * self.bs)
-                    reload_t += self._apply_ops(ops)
+                    t_total += self._charge_critical(ops)
                     self.slot_req[slot] = r.row
                     self.slot_base[slot] = j * self.bs
                 ent = self.kv_mgr.table[(r.req_id, j)]
-                append_slot[r.row] = ent.local_slot
-                append_off[r.row] = pos % self.bs
+                self._append_slot[r.row] = ent.local_slot
+                self._append_off[r.row] = pos % self.bs
                 ent.filled = max(ent.filled, pos % self.bs + 1)
+        return t_total
 
+    def _estimate_compute(self) -> float:
+        """Decode window: weight-read bound below the batch crossover."""
+        return max(len(self.running) * self._t_flop_tok, self._t_weights)
+
+    def _compute(self):
+        """Run the real decode kernel over the batch; returns logits."""
         state = M.DecodeState(
             tokens=jnp.asarray(self.row_tokens),
             pos=jnp.asarray(self.row_pos),
@@ -365,8 +559,8 @@ class HarvestServingEngine:
                 pool_k=self.pool_k, pool_v=self.pool_v,
                 slot_req=jnp.asarray(self.slot_req),
                 slot_base=jnp.asarray(self.slot_base),
-                append_slot=jnp.asarray(append_slot),
-                append_off=jnp.asarray(append_off)),
+                append_slot=jnp.asarray(self._append_slot),
+                append_off=jnp.asarray(self._append_off)),
             peer=None, states=self.states,
             positions_3d=(jnp.stack([jnp.asarray(self.row_pos)] * 3, -1)
                           if self.cfg.rope_style == "mrope" else None))
@@ -376,31 +570,94 @@ class HarvestServingEngine:
             self.pool_v = new_state.kv.pool_v
         if self.states is not None:
             self.states = new_state.states
+        return logits
 
-        n_active = len(self.running)
-        compute_t = max(n_active * self._t_flop_tok, self._t_weights)
+    def _account_step(self, compute_t: float, reload_t: float) -> None:
+        """Advance the simulated clock by one decode step."""
         self.stats.compute_s += compute_t
-        self.stats.clock_s += self.runtime.transfers.overlap(
-            compute_t, reload_t, enabled=self.overlap)
+        te = self.runtime.transfers
+        if self.mode == "sync":
+            step_t = te.overlap(compute_t, reload_t, enabled=self.overlap)
+            self.stats.clock_s += step_t
+            self.stats.hidden_s += compute_t + reload_t - step_t
+            return
+        compute_end = te.now + compute_t
+        ready = max((tr.ready_t for tr in self._step_waits if not tr.done),
+                    default=compute_end)
+        end = max(compute_end, ready)
+        stall = end - compute_end
+        te.drain_until(end)
+        self.stats.stall_s += stall
+        self.stats.hidden_s += self._step_critical_s - stall
+        self._sync_clock()
 
+    def _commit_and_sample(self, logits) -> None:
+        """Sample one token per running request and commit it."""
         logits_np = np.asarray(logits)
-        for r in list(self.running):
+        for r in self.running:
             tok = self._sample(logits_np[r.row])
             r.output.append(tok)
             r.decode_steps += 1
             self.stats.tokens_out += 1
             self.row_tokens[r.row] = tok
             self.row_pos[r.row] = r.pos
-            if r.done:
-                r.state = "done"
-                self.running.remove(r)
-                self.finished.append(r)
-                self.free_rows.append(r.row)
-                for slot in np.nonzero(self.slot_req == r.row)[0]:
-                    self.slot_req[slot] = -1
-                self.kv_mgr.free_request(r.req_id)
-                self.row_of.pop(r.req_id, None)
-                r.row = None
+
+    def _retire(self) -> None:
+        """Release finished requests: batch row, KV blocks, prefetches."""
+        for r in list(self.running):
+            if not r.done:
+                continue
+            r.state = "done"
+            self.running.remove(r)
+            self.finished.append(r)
+            self.free_rows.append(r.row)
+            for slot in np.nonzero(self.slot_req == r.row)[0]:
+                self.slot_req[slot] = -1
+            self.kv_mgr.free_request(r.req_id)
+            if self.prefetcher is not None:
+                self.prefetcher.cancel_owner(r.req_id)
+            self.row_of.pop(r.req_id, None)
+            r.row = None
+
+    # -------------------------------------------------------------- step
+    def step(self) -> bool:
+        """One engine iteration through the staged pipeline.  Returns False
+        when all work is done."""
+        if not (self.waiting or self.running):
+            return False
+        sched_step = self.stats.steps
+        self.kv_mgr.pinned = {r.req_id for r in self.running}
+        self._step_waits = []
+        self._step_critical_s = 0.0
+
+        self._preempt(sched_step)
+        self._admit()
+        if not self.running:
+            self.stats.steps += 1
+            return bool(self.waiting)
+
+        plan = self._plan_fetches()
+        reload_t = self._launch_transfers(plan)
+        compute_t = self._estimate_compute()
+        if self.prefetcher is not None:
+            # worst-case slots the next allocations may claim: one append
+            # block per running request + the head-of-line waiter's whole
+            # working set (prefill allocations OR resume reloads of blocks
+            # the prefetcher did not cover) — so a prefetch can never be
+            # the reason a later allocation evicts
+            floor = len(self.running) + (
+                self._blocks_needed(self.waiting[0]) if self.waiting else 0)
+            for op in self.prefetcher.run(compute_t, running=self.running,
+                                          waiting=self.waiting,
+                                          slot_floor=floor):
+                # speculative seconds: accounted as hidden at issue; any
+                # residual wait surfaces as stall in a later step
+                self.stats.reload_s += op.seconds
+                self.stats.hidden_s += op.seconds
+        logits = self._compute()
+        self._account_step(compute_t, reload_t)
+        self._commit_and_sample(logits)
+        self._retire()
 
         if self.monitor is not None and sched_step % 4 == 0:
             self.runtime.tick()
@@ -411,4 +668,6 @@ class HarvestServingEngine:
         for _ in range(max_steps):
             if not self.step():
                 break
+        self.stats.metrics = self.runtime.stats()
+        self.stats.check_clock_identity()
         return self.stats

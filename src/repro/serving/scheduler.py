@@ -12,8 +12,17 @@ from dataclasses import dataclass, field
 from typing import List, Optional
 
 
-@dataclass
+@dataclass(eq=False)
 class Request:
+    """One inference request.
+
+    ``eq=False``: requests are mutable scheduler state with identity
+    semantics.  The generated field-based ``__eq__`` made membership
+    checks (``req in admissible``) compare prompts and outputs, which can
+    alias two distinct requests with identical contents; identity (and the
+    default ``object`` hash) is the correct notion everywhere the engine
+    and schedulers use containment.
+    """
     req_id: int
     prompt: List[int]
     max_new_tokens: int
@@ -64,6 +73,10 @@ class CompletelyFairScheduler(FCFSScheduler):
     preemptive = True
 
     def __init__(self, quantum: int = 8):
+        if quantum <= 0:
+            raise ValueError(
+                f"quantum must be a positive number of decode steps, "
+                f"got {quantum}")
         self.quantum = quantum
 
     def pick_preemption(self, running, waiting, step):

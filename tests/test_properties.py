@@ -10,6 +10,14 @@ Invariants under arbitrary alloc/free/budget-update interleavings:
   * freeing or re-registering a revoked handle raises;
   * the KV block table never maps a block to two tiers at once, and lost
     blocks are reported lost until rewritten.
+
+Transfer-timeline invariants under random submit batches:
+  * no transfer completes before it was issued (ready >= issue + seconds);
+  * per-lane FIFO order holds (ready times non-decreasing in submit order);
+  * each lane drains in exactly the legacy ``schedule()`` serial sum of
+    its transfers, and the batch makespan is the busiest lane — the
+    event-driven clock and the sync-mode reduction agree;
+  * ``drain_until(t)`` completes exactly the transfers with ready <= t.
 """
 from __future__ import annotations
 
@@ -26,6 +34,7 @@ from repro.core.kv_manager import KVOffloadManager
 from repro.core.monitor import ClusterTrace, ClusterTraceConfig, PeerMonitor
 from repro.core.policy import (BestFitPolicy, LocalityPolicy, StabilityPolicy,
                                WorstFitPolicy)
+from repro.core.store import TransferEngine
 from repro.core.tiers import TPU_V5E, Tier
 
 MiB = 2**20
@@ -147,6 +156,71 @@ def test_monitor_budgets_track_trace(steps, seed):
             assert b >= 0
             assert alloc._devices[d].used <= max(b, 0) or b == 0
         _check_invariants(alloc)
+
+
+# ---------------------------------------------------------------------------
+# transfer timeline
+# ---------------------------------------------------------------------------
+
+# (src, dst) pairs covering all four duplex lanes
+_ROUTES = [(Tier.PEER_HBM, Tier.LOCAL_HBM), (Tier.LOCAL_HBM, Tier.PEER_HBM),
+           (Tier.HOST_DRAM, Tier.LOCAL_HBM), (Tier.LOCAL_HBM, Tier.HOST_DRAM)]
+
+batch_strategy = st.lists(
+    st.tuples(st.integers(0, 3), st.integers(1, 64)),   # route, size MiB
+    min_size=1, max_size=40)
+
+
+@settings(max_examples=60, deadline=None)
+@given(batch=batch_strategy)
+def test_timeline_fifo_and_sync_equivalence(batch):
+    te = TransferEngine(TPU_V5E)
+    ops = []
+    for i, (route, mib) in enumerate(batch):
+        src, dst = _ROUTES[route]
+        ops.append(te.submit(te.transfer(i, mib * MiB, src, dst)))
+
+    by_lane = {}
+    for op in ops:
+        # no transfer completes before issue (+ its own link time)
+        assert op.ready_t >= op.issue_t + op.seconds - 1e-15
+        by_lane.setdefault(op.channel, []).append(op)
+
+    for lane_ops in by_lane.values():
+        # per-lane FIFO: ready times non-decreasing in submit order
+        for a, b in zip(lane_ops, lane_ops[1:]):
+            assert a.ready_t <= b.ready_t + 1e-15
+        # each lane drains in exactly the legacy schedule() serial sum
+        assert lane_ops[-1].ready_t == pytest.approx(
+            te.schedule(lane_ops), rel=1e-12)
+
+    # batch makespan == busiest lane == link-overlapped legacy schedule
+    makespan = max(op.ready_t for op in ops)
+    assert makespan == pytest.approx(
+        max(te.schedule(v) for v in by_lane.values()), rel=1e-12)
+    # and the serial legacy total is the sum over lanes
+    assert te.schedule(ops) == pytest.approx(
+        sum(te.schedule(v) for v in by_lane.values()), rel=1e-12)
+
+    done = te.drain_until(makespan)
+    assert len(done) == len(ops) and all(op.done for op in ops)
+    assert te.pending() == 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(batch=batch_strategy, cut=st.floats(0.0, 1.0))
+def test_timeline_partial_drain(batch, cut):
+    te = TransferEngine(TPU_V5E)
+    ops = []
+    for i, (route, mib) in enumerate(batch):
+        src, dst = _ROUTES[route]
+        ops.append(te.submit(te.transfer(i, mib * MiB, src, dst)))
+    t = cut * max(op.ready_t for op in ops)
+    done = {op.key for op in te.drain_until(t)}
+    for op in ops:
+        assert (op.key in done) == (op.ready_t <= t)
+        assert op.done == (op.ready_t <= t)
+    assert te.pending() == len(ops) - len(done)
 
 
 @settings(max_examples=20, deadline=None)
