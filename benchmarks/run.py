@@ -16,10 +16,11 @@ import time
 
 from benchmarks.common import RESULTS_DIR, Check, summarize_checks
 
-BENCHES = ["fig2", "fig3", "table1", "fig5", "fig6", "fig7", "roofline"]
+BENCHES = ["fig2", "fig3", "table1", "fig5", "fig6", "fig7", "fig8",
+           "roofline"]
 
 
-def _call(name: str, fast: bool):
+def _call(name: str, fast: bool, hw: str):
     if name == "fig2":
         from benchmarks import fig2_cluster_cdf as m
         return m.run(RESULTS_DIR)
@@ -39,6 +40,9 @@ def _call(name: str, fast: bool):
     if name == "fig7":
         from benchmarks import fig7_kv_latency as m
         return m.run(RESULTS_DIR)
+    if name == "fig8":
+        from benchmarks import fig8_peer_scaling as m
+        return m.run(RESULTS_DIR, hw=hw, fast=fast)
     if name == "roofline":
         from benchmarks import roofline as m
         return m.run(RESULTS_DIR)
@@ -50,6 +54,10 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of " + ",".join(BENCHES))
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--hw", default="h100-nvlink-2gpu",
+                    choices=["h100-nvlink-2gpu", "tpu-v5e"],
+                    help="hardware family for the topology-sweep benchmarks "
+                         "(fig8): NVLink mesh vs TPU v5e ICI torus")
     args = ap.parse_args(argv)
 
     names = args.only.split(",") if args.only else BENCHES
@@ -59,7 +67,7 @@ def main(argv=None) -> int:
         print(f"== {name}")
         print("=" * 78)
         t0 = time.time()
-        payload = _call(name, args.fast)
+        payload = _call(name, args.fast, args.hw)
         checks = [Check(**{k: v for k, v in c.items() if k != "ok"})
                   for c in payload.get("checks", [])]
         all_checks += checks

@@ -10,7 +10,9 @@ Components (the runtime wires these for you):
   allocator   — harvest_alloc / harvest_free / harvest_register_cb + revocation
   policy      — best-fit (paper default), locality, fairness, stability
   monitor     — peer-availability monitor + Fig-2-calibrated cluster trace
-  tiers       — local HBM / peer HBM / host DRAM cost model (H100+NVLink, v5e+ICI)
+  tiers       — local HBM / peer HBM / host DRAM cost model + interconnect
+                Topology presets (2-GPU NVLink, NVLink mesh, PCIe switch,
+                v5e 2D-torus ICI) with per-peer-device LinkSpecs
   rebalancer  — MoE expert residency, a thin store client (paper §4)
   kv_manager  — paged KV unified block table, a thin store client (paper §5)
   prefetch    — cross-step speculative reloads issued under compute windows
@@ -22,7 +24,8 @@ from repro.core.allocator import HarvestAllocator, HarvestHandle, RevokedError
 from repro.core.kv_manager import BlockEntry, KVOffloadManager, ReloadOp
 from repro.core.monitor import ClusterTrace, ClusterTraceConfig, PeerMonitor
 from repro.core.policy import (BestFitPolicy, FairnessPolicy, LocalityPolicy,
-                               PlacementRequest, StabilityPolicy, WorstFitPolicy)
+                               PlacementRequest, StabilityPolicy,
+                               TopologyAwarePolicy, WorstFitPolicy)
 from repro.core.prefetch import Prefetcher, PrefetchConfig
 from repro.core.rebalancer import ExpertRebalancer
 from repro.core.runtime import HarvestRuntime
@@ -31,6 +34,8 @@ from repro.core.simulator import (AccessModelConfig, ExpertAccessModel,
 from repro.core.store import (Durability, HarvestStore, LostObjectError,
                               MetricsRegistry, ObjectEntry, Residency,
                               Transfer, TransferEngine, channel_name)
-from repro.core.tiers import (HARDWARE, H100_NVLINK, TPU_V5E, HardwareModel,
-                              LinkSpec, Tier, expert_bytes, kv_block_bytes,
-                              kv_entry_bytes)
+from repro.core.tiers import (HARDWARE, H100_NVLINK, TOPOLOGIES, TPU_V5E,
+                              HardwareModel, LinkSpec, Tier, Topology,
+                              expert_bytes, get_topology, kv_block_bytes,
+                              kv_entry_bytes, nvlink_2gpu, nvlink_mesh,
+                              pcie_switch, tpu_v5e_torus)

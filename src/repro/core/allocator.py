@@ -68,6 +68,22 @@ class _FreeList:
         return off
 
     def release(self, off: int, size: int) -> None:
+        """Return ``[off, off+size)`` to the free list.
+
+        A release that overlaps an already-free segment is a double free
+        (or a size/offset corruption): silently coalescing it would
+        fabricate free bytes and let a later allocation alias a live
+        segment, so it is rejected loudly instead.
+        """
+        if size <= 0 or off < 0 or off + size > self.capacity:
+            raise ValueError(
+                f"release of [{off}, {off + size}) outside freelist "
+                f"capacity {self.capacity}")
+        for o, s in self.segments:
+            if off < o + s and o < off + size:
+                raise ValueError(
+                    f"double free: released segment [{off}, {off + size}) "
+                    f"overlaps free segment [{o}, {o + s})")
         self.segments.append((off, size))
         self.segments.sort()
         merged: List[Tuple[int, int]] = []
@@ -204,9 +220,15 @@ class HarvestAllocator:
         cb = self._cbs.pop(handle.handle_id, None)
         self._release(handle)
         self.stats["revocations"] += 1
+        self._bump(f"dev{handle.device}.revocations")
         # 3. notify the application
         if cb is not None:
             cb(handle)
+
+    def _bump(self, key: str) -> None:
+        # per-device keys are open-ended; standalone allocators keep a plain
+        # dict, so seed on first use instead of relying on Counters
+        self.stats[key] = self.stats.get(key, 0) + 1
 
     def _drain(self, handle: HarvestHandle) -> None:
         # Functional stand-in for stream/event synchronisation: revocation is
@@ -229,6 +251,7 @@ class HarvestAllocator:
         return {
             d.device_id: {
                 "free": d.budget - d.used,
+                "used": d.used,
                 "largest_free": min(d.freelist.largest_free,
                                     max(d.budget - d.used, 0)),
                 "fragmentation": d.freelist.fragmentation(),

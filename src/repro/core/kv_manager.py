@@ -140,6 +140,10 @@ class KVOffloadManager:
         """True iff a lossy revocation dropped this block's payload."""
         return self.store.is_lost((req, block_idx))
 
+    def device_of(self, req: int, block_idx: int) -> Optional[int]:
+        """Peer device a PEER-resident block lives on (else None)."""
+        return self.store.device_of((req, block_idx))
+
     # --------------------------------------------------------- prefetch
     def plan_prefetch(self, running, waiting=(), depth: int = 1
                       ) -> List[BlockId]:

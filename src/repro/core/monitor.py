@@ -38,6 +38,13 @@ class ClusterTraceConfig:
     job_arrival_p: float = 0.015   # per device per step
     job_size_frac: Tuple[float, float] = (0.02, 0.12)
     job_lifetime: Tuple[int, int] = (5, 30)
+    # volatility scales BOTH the OU noise and the job-arrival rate (the
+    # fig8 sweep axis); correlation mixes a cluster-wide common shock into
+    # every device's noise — real clusters schedule jobs in waves, so peer
+    # budgets move together instead of independently.  Defaults reproduce
+    # the legacy trace draw-for-draw.
+    volatility: float = 1.0
+    correlation: float = 0.0
 
 
 class ClusterTrace:
@@ -56,7 +63,8 @@ class ClusterTrace:
         # on the Fig 2 band mixture (arrival_p x mean size x mean lifetime).
         mean_size = 0.5 * (cfg.job_size_frac[0] + cfg.job_size_frac[1])
         mean_life = 0.5 * (cfg.job_lifetime[0] + cfg.job_lifetime[1])
-        self._job_load = cfg.job_arrival_p * mean_size * mean_life
+        self._job_load = cfg.job_arrival_p * cfg.volatility \
+            * mean_size * mean_life
         self.base = np.clip(self.base - self._job_load, 0.01, 1.0)
         self.level = self.base.copy()
         self.jobs: List[List[tuple]] = [[] for _ in range(cfg.num_devices)]
@@ -66,13 +74,23 @@ class ClusterTrace:
         """Advance one tick; returns external usage in bytes per device."""
         c = self.cfg
         self.t += 1
-        # OU mean reversion + noise
+        # OU mean reversion + noise (optionally correlated across devices)
         self.level += c.mean_revert * (self.base - self.level)
-        self.level += self.rng.normal(0, c.noise, size=len(self.level))
+        sigma = c.noise * c.volatility
+        if c.correlation > 0.0:
+            rho = min(c.correlation, 1.0)
+            common = self.rng.normal(0.0, 1.0)
+            idio = self.rng.normal(0.0, 1.0, size=len(self.level))
+            self.level += sigma * (rho * common
+                                   + np.sqrt(1.0 - rho * rho) * idio)
+        else:
+            # legacy draw sequence — keeps seeded traces bit-exact
+            self.level += self.rng.normal(0, sigma, size=len(self.level))
         # job arrivals / departures (the revocation drivers)
+        arrival_p = min(c.job_arrival_p * c.volatility, 1.0)
         for d in range(c.num_devices):
             self.jobs[d] = [(sz, end) for sz, end in self.jobs[d] if end > self.t]
-            if self.rng.random() < c.job_arrival_p:
+            if self.rng.random() < arrival_p:
                 sz = self.rng.uniform(*c.job_size_frac)
                 life = self.rng.integers(*c.job_lifetime)
                 self.jobs[d].append((sz, self.t + int(life)))
@@ -92,23 +110,76 @@ class ClusterTrace:
 
 
 class PeerMonitor:
-    """Feeds trace ticks into the allocator as budget updates."""
+    """Feeds trace ticks into the allocator as budget updates.
+
+    Two drive modes:
+
+      * **stepwise** (legacy): the host calls :meth:`tick` whenever it
+        decides external pressure should advance — e.g. every N scheduler
+        iterations, or between benchmark runs.
+      * **timeline** (``tick_interval_s`` set): the host calls
+        :meth:`poll` with the TransferEngine's simulated ``now`` at stage
+        boundaries; the monitor fires one trace tick per elapsed interval.
+        Pressure then lands *mid-pipeline* — a revocation can hit while
+        the victim device's lanes still carry in-flight transfers, which
+        is exactly the failure mode the paper's drain -> invalidate ->
+        notify order exists for.
+    """
 
     def __init__(self, allocator: HarvestAllocator, trace: ClusterTrace,
-                 capacity_bytes: int, reserve_bytes: int = 0):
+                 capacity_bytes: int, reserve_bytes: int = 0,
+                 tick_interval_s: Optional[float] = None, metrics=None,
+                 devices: Optional[List[int]] = None):
         self.allocator = allocator
         self.trace = trace
         self.capacity = capacity_bytes
         self.reserve = reserve_bytes
+        self.tick_interval_s = tick_interval_s
+        # trace row i drives allocator device devices[i]; the default keeps
+        # the legacy identity mapping (devices 0..num_devices-1) — topology
+        # presets number peers 1..N, so their hosts pass topology.devices
+        self.devices = (list(devices) if devices is not None
+                        else list(range(trace.cfg.num_devices)))
+        if len(self.devices) != trace.cfg.num_devices:
+            raise ValueError(
+                f"device mapping ({len(self.devices)} devices: "
+                f"{self.devices}) does not match the trace width "
+                f"({trace.cfg.num_devices}) — a narrower trace would "
+                "silently leave peers unpressured")
         self.revocation_log: List[tuple] = []
+        self._last_poll: Optional[float] = None
+        # duck-typed MetricsRegistry (avoids an import cycle with store)
+        self.stats = (metrics.counters("monitor", keys=("ticks",
+                                                        "revocations"))
+                      if metrics is not None else None)
 
     def tick(self) -> Dict[int, int]:
         usage = self.trace.step()
         budgets = {}
-        for dev, used in enumerate(usage):
+        for dev, used in zip(self.devices, usage):
             budget = max(int(self.capacity - used - self.reserve), 0)
             revoked = self.allocator.update_budget(dev, budget)
             for h in revoked:
                 self.revocation_log.append((self.trace.t, h))
+            if self.stats is not None and revoked:
+                self.stats["revocations"] += len(revoked)
+                self.stats[f"dev{dev}.revocations"] += len(revoked)
             budgets[dev] = budget
+        if self.stats is not None:
+            self.stats["ticks"] += 1
         return budgets
+
+    def poll(self, now: float) -> int:
+        """Timeline drive: fire one tick per ``tick_interval_s`` of
+        simulated time elapsed since the previous poll.  Returns the
+        number of ticks fired.  No-op unless an interval is configured."""
+        if self.tick_interval_s is None:
+            return 0
+        if self._last_poll is None:
+            self._last_poll = now
+            return 0
+        n = int((now - self._last_poll) / self.tick_interval_s)
+        for _ in range(n):
+            self.tick()
+        self._last_poll += n * self.tick_interval_s
+        return n

@@ -79,6 +79,59 @@ class StabilityPolicy(PlacementPolicy):
         return [d for d, _ in fitting]
 
 
+class TopologyAwarePolicy(PlacementPolicy):
+    """Bandwidth-weighted best-fit that knows the interconnect (paper §8).
+
+    Candidate devices are scored by the *expected cost of using them*:
+
+      * the transfer time of this object over the device's own
+        :class:`~repro.core.tiers.LinkSpec` (a striped 4-link ICI peer
+        beats a distant single-path one; a PCIe-switch peer is a last
+        resort);
+      * a churn penalty — devices whose harvestable budget moves a lot
+        (high EWMA of ``|budget delta|``) are likely to revoke, so the
+        expected cost of placing there includes a re-fetch;
+      * a spread penalty — recently chosen devices are deprioritised so
+        concurrent placements fan out across link *lanes* instead of
+        serialising on one peer's FIFO; hot objects (``hints["hot"]``)
+        spread harder, because they are the ones whose reloads contend.
+
+    Ties resolve best-fit (tightest remaining segment), so on a
+    single-peer topology the ranking degenerates to the paper's default.
+    """
+
+    def __init__(self, topology, churn_weight: float = 4.0,
+                 spread_weight: float = 0.5, decay: float = 0.5):
+        self.topology = topology
+        self.churn_weight = churn_weight
+        self.spread_weight = spread_weight
+        self.decay = decay
+        self._recent: Dict[int, float] = {}   # EWMA of recent placements
+
+    def rank(self, devices, req):
+        from repro.core.tiers import Tier
+        fitting = [(d, v) for d, v in devices.items()
+                   if v["largest_free"] >= req.size]
+        hot = 1.0 + float(req.hints.get("hot", 0.0) or 0.0)
+
+        def score(d, v):
+            t = self.topology.transfer_time(req.size, Tier.PEER_HBM,
+                                            Tier.LOCAL_HBM, device=d)
+            churn = v["churn"] / max(v["budget"], 1)
+            lane = self._recent.get(d, 0.0)
+            return t * (1.0 + self.churn_weight * churn
+                        + self.spread_weight * hot * lane)
+
+        fitting.sort(key=lambda kv: (score(*kv),
+                                     kv[1]["largest_free"] - req.size))
+        return [d for d, _ in fitting]
+
+    def on_alloc(self, req, device_id):
+        for d in list(self._recent):
+            self._recent[d] *= self.decay
+        self._recent[device_id] = self._recent.get(device_id, 0.0) + 1.0
+
+
 class FairnessPolicy(PlacementPolicy):
     """Per-client byte budget wrapped around an inner policy."""
 
@@ -105,4 +158,5 @@ POLICIES = {
     "worst_fit": WorstFitPolicy,
     "locality": LocalityPolicy,
     "stability": StabilityPolicy,
+    "topology": TopologyAwarePolicy,     # requires a Topology argument
 }

@@ -112,9 +112,12 @@ class Prefetcher:
                 self.stats["skipped_slots"] += 1
                 break
             ent = self.kv.table[bid]
-            ch = channel_name(ent.tier, Tier.LOCAL_HBM)
-            est = self.te.hw.transfer_time(ent.nbytes, ent.tier,
-                                           Tier.LOCAL_HBM)
+            # link budgets are per *device* lane: a prefetch from peer 3
+            # only has to fit in peer3_in's window, regardless of how busy
+            # the other peers' lanes are
+            dev = ent.handle.device if ent.handle is not None else None
+            ch = self.te.lane_for(ent.tier, Tier.LOCAL_HBM, dev)
+            est = self.te.estimate(ent.nbytes, ent.tier, Tier.LOCAL_HBM, dev)
             if self.te.channel_busy_until(ch) + est > budget_end:
                 self.stats["skipped_budget"] += 1
                 continue
@@ -141,8 +144,8 @@ class Prefetcher:
                 self.cfg.expert_migrations * 4):
             if done >= self.cfg.expert_migrations:
                 break
-            est = self.te.hw.transfer_time(store.table[eid].nbytes,
-                                           Tier.HOST_DRAM, Tier.PEER_HBM)
+            est = self.te.estimate(store.table[eid].nbytes,
+                                   Tier.HOST_DRAM, Tier.PEER_HBM)
             if self.te.channel_busy_until(ch) + est > budget_end:
                 self.stats["skipped_budget"] += 1
                 break

@@ -90,7 +90,7 @@ class ExpertRebalancer:
         self.stats[_HIT_STAT[ent.state]] += 1
         op = self.store.transfers.transfer(
             (layer, expert), self.expert_nbytes, ent.tier, Tier.LOCAL_HBM,
-            client=self.client)
+            client=self.client, device=self.device_of(layer, expert))
         return ent.tier, op.seconds
 
     # --------------------------------------------------------- rebalance
@@ -122,6 +122,10 @@ class ExpertRebalancer:
     # ------------------------------------------------------------ queries
     def tier_of(self, layer: int, expert: int) -> Tier:
         return self.store.table[(layer, expert)].tier
+
+    def device_of(self, layer: int, expert: int):
+        """Peer device a PEER-resident expert lives on (else None)."""
+        return self.store.device_of((layer, expert))
 
     def residency_fractions(self) -> Dict[str, float]:
         counts = self.store.tier_counts()

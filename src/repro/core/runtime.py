@@ -38,29 +38,39 @@ from repro.core.monitor import ClusterTrace, ClusterTraceConfig, PeerMonitor
 from repro.core.policy import PlacementPolicy
 from repro.core.rebalancer import ExpertRebalancer
 from repro.core.store import HarvestStore, MetricsRegistry, TransferEngine
-from repro.core.tiers import H100_NVLINK, HardwareModel
+from repro.core.tiers import H100_NVLINK, HardwareModel, Topology
 
 
 class HarvestRuntime:
     def __init__(self, device_budgets: Optional[Dict[int, int]] = None, *,
-                 hardware: HardwareModel = H100_NVLINK,
+                 hardware: Optional[HardwareModel] = None,
+                 topology: Optional[Topology] = None,
                  policy: Optional[PlacementPolicy] = None,
                  allocator: Optional[HarvestAllocator] = None,
                  trace: Optional[ClusterTrace] = None,
                  trace_config: Optional[ClusterTraceConfig] = None,
                  monitor: Optional[PeerMonitor] = None,
                  reserve_bytes: int = 0,
+                 monitor_interval_s: Optional[float] = None,
                  metrics: Optional[MetricsRegistry] = None):
         self.metrics = metrics or MetricsRegistry()
+        if hardware is None:
+            hardware = topology.hardware if topology else H100_NVLINK
         self.hardware = hardware
+        self.topology = topology
         self.allocator = allocator or HarvestAllocator(
             dict(device_budgets or {}), policy=policy, metrics=self.metrics)
-        self.transfers = TransferEngine(hardware, self.metrics)
+        self.transfers = TransferEngine(hardware, self.metrics,
+                                        topology=topology)
         if monitor is None and (trace is not None or trace_config is not None):
             trace = trace or ClusterTrace(trace_config)
             monitor = PeerMonitor(self.allocator, trace,
                                   capacity_bytes=trace.cfg.capacity_bytes,
-                                  reserve_bytes=reserve_bytes)
+                                  reserve_bytes=reserve_bytes,
+                                  tick_interval_s=monitor_interval_s,
+                                  metrics=self.metrics,
+                                  devices=(list(topology.devices)
+                                           if topology else None))
         self.monitor = monitor
         self.stores: Dict[str, HarvestStore] = {}
         self.clients: Dict[str, object] = {}
@@ -131,11 +141,27 @@ class HarvestRuntime:
                 budgets = self.monitor.tick()
         return budgets
 
+    def poll_pressure(self) -> int:
+        """Timeline-driven pressure: let the monitor fire one trace tick
+        per configured interval of simulated transfer-clock time.  Called
+        by async-mode hosts at stage boundaries so revocations land
+        mid-pipeline.  Returns the number of ticks fired."""
+        if self.monitor is None:
+            return 0
+        return self.monitor.poll(self.transfers.now)
+
     # ------------------------------------------------------------- queries
     def stats(self) -> Dict[str, dict]:
-        """One snapshot of every component's counters."""
+        """One snapshot of every component's counters.  The ``device``
+        namespace is the allocator's live per-device view (occupancy,
+        budget, churn EWMA) flattened to ``dev{d}.{field}`` keys so it
+        rides the same reporting pipeline as the counters."""
         out = self.metrics.snapshot()
         out.setdefault("allocator", dict(self.allocator.stats))
+        out["device"] = {
+            f"dev{d}.{k}": v
+            for d, view in sorted(self.allocator.device_view().items())
+            for k, v in sorted(view.items())}
         return out
 
     def tier_counts(self) -> Dict[str, Dict[str, int]]:

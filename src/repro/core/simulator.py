@@ -160,6 +160,13 @@ def simulate_moe_decode(cfg: ModelConfig, hw: HardwareModel,
             return Tier.PEER_HBM
         return Tier.HOST_DRAM
 
+    def device_of(e: int):
+        # with a live rebalancer the fetch is charged to (and, in timeline
+        # mode, rides the lane of) the expert's actual peer device; the
+        # static split has no device identity — legacy single-lane path
+        return rebalancer.device_of(0, int(e)) if rebalancer is not None \
+            else None
+
     # per-token compute cost (active params) — decode is weight-read bound
     pc = cfg.param_counts()
     active_flops_tok = 2 * pc["active"] / 1  # 2 FLOP per param per token
@@ -204,7 +211,7 @@ def simulate_moe_decode(cfg: ModelConfig, hw: HardwareModel,
                     op = te.transfer(int(e), e_bytes, Tier.PEER_HBM,
                                      Tier.LOCAL_HBM,
                                      extra_latency=PEER_XFER_LAT,
-                                     client="sim")
+                                     client="sim", device=device_of(int(e)))
                     peer_t += op.seconds
                     fetch_by_tier[tier.value] += op.seconds
                     ops.append(op)

@@ -21,11 +21,16 @@ that shape:
     accounting (previously scattered across ``ReloadOp.seconds``,
     ``ExpertRebalancer.fetch`` and the engine's ``_apply_ops``) and owns
     the event-driven transfer timeline: a simulated clock plus one FIFO
-    queue per directional link lane (``peer_in``/``peer_out``/``host_in``/
-    ``host_out``), so issue order, per-link contention and transfer/compute
-    pipelining are explicit instead of a single ``max(compute, reload)``
-    approximation.  The legacy batched ``schedule`` reduction remains as
-    the sync-mode compat wrapper.
+    queue per directional link lane.  Lanes are *per peer device*: with an
+    interconnect :class:`~repro.core.tiers.Topology` attached, a transfer
+    that names peer device ``d`` rides ``peer{d}_in``/``peer{d}_out`` and
+    is charged that device's :class:`~repro.core.tiers.LinkSpec`, so
+    transfers to distinct peers pipeline in parallel while each pair
+    serialises FIFO.  Device 1 keeps the legacy ``peer_in``/``peer_out``
+    lane names (the 2-device compat mapping); ``host_in``/``host_out``
+    stay single-laned — there is one PCIe path to DRAM.  The legacy
+    batched ``schedule`` reduction remains as the sync-mode compat
+    wrapper.
   * :class:`MetricsRegistry` is the unified, namespaced counter store that
     replaces the per-component ad-hoc ``stats`` dicts.
 
@@ -41,7 +46,7 @@ from typing import Callable, Dict, Hashable, Iterable, List, Optional, Set, Tupl
 import numpy as np
 
 from repro.core.allocator import HarvestAllocator, HarvestHandle
-from repro.core.tiers import HardwareModel, Tier
+from repro.core.tiers import HardwareModel, Tier, Topology
 
 ObjectKey = Hashable
 
@@ -134,6 +139,7 @@ class Transfer:
     nbytes: int
     seconds: float
     client: str = "default"
+    device: Optional[int] = None   # peer device the payload lives on/moves to
     # --- timeline fields (live only once submitted) ---
     issue_t: float = 0.0     # simulated time the transfer was enqueued
     ready_t: float = 0.0     # simulated time the payload is usable at dst
@@ -150,17 +156,30 @@ def _link_name(src: Tier, dst: Tier) -> str:
     return "peer"
 
 
-def channel_name(src: Tier, dst: Tier) -> str:
-    """Directional lane of a physical link.
+#: the peer device whose lanes keep the legacy un-numbered names — the
+#: 2-device presets put their single peer at device 1, so pre-topology
+#: metrics keys (``q.peer_in.*``) and goldens stay stable
+LEGACY_PEER_DEVICE = 1
+
+
+def channel_name(src: Tier, dst: Tier, device: Optional[int] = None) -> str:
+    """Directional lane of a physical link, per peer device.
 
     NVLink / ICI / PCIe are full duplex: writes out of local HBM
     (evictions) and reads into local HBM (reloads) move on opposite
     directions of the same link and do not contend with each other.  Each
-    direction serialises its own FIFO queue.
+    direction serialises its own FIFO queue.  Peer links are additionally
+    *per device*: transfers touching peer device ``d`` ride
+    ``peer{d}_in``/``peer{d}_out`` so distinct peers never queue behind
+    each other; device :data:`LEGACY_PEER_DEVICE` (and transfers naming no
+    device) keep the legacy ``peer_in``/``peer_out`` names.  The host path
+    is one physical PCIe link regardless of which peer is involved.
     """
     base = _link_name(src, dst)
     if base == "hbm":
         return base
+    if base == "peer" and device is not None and device != LEGACY_PEER_DEVICE:
+        base = f"peer{device}"
     return f"{base}_in" if dst is Tier.LOCAL_HBM else f"{base}_out"
 
 
@@ -181,24 +200,54 @@ class TransferEngine:
     """
 
     def __init__(self, hardware: HardwareModel,
-                 metrics: Optional[MetricsRegistry] = None):
-        self.hw = hardware
+                 metrics: Optional[MetricsRegistry] = None,
+                 topology: Optional[Topology] = None):
+        self.hw = topology.hardware if (hardware is None and topology) \
+            else hardware
+        self.topology = topology
         self.metrics = metrics or MetricsRegistry()
         self._stats = self.metrics.counters("transfer")
         self.now: float = 0.0
         self._channel_busy: Dict[str, float] = {}
         self._inflight: Dict[str, "collections.deque[Transfer]"] = {}
         self._key_busy: Dict[ObjectKey, Transfer] = {}
+        # opt-in submit log (benchmarks reconstruct exact per-lane busy
+        # intervals from it; off by default — it grows without bound)
+        self.record_log: bool = False
+        self.log: List[Transfer] = []
+
+    def lane_for(self, src: Tier, dst: Tier,
+                 device: Optional[int] = None) -> str:
+        """The directional lane a (src, dst, device) transfer occupies.
+
+        Per-device peer lanes exist only when an interconnect topology is
+        attached AND the device is one of its peers: a flat
+        :class:`HardwareModel` declares ONE peer link, so every peer
+        transfer keeps the legacy single lane pair no matter how callers
+        number their devices.
+        """
+        if self.topology is None or device not in self.topology.peer_links:
+            device = None
+        return channel_name(src, dst, device)
+
+    def estimate(self, nbytes: int, src: Tier, dst: Tier,
+                 device: Optional[int] = None) -> float:
+        """Link time of a hypothetical transfer (no accounting) — the
+        topology's per-device link when one is attached and named."""
+        if self.topology is not None:
+            return self.topology.transfer_time(nbytes, src, dst, device)
+        return self.hw.transfer_time(nbytes, src, dst)
 
     def transfer(self, key: ObjectKey, nbytes: int, src: Tier, dst: Tier,
-                 extra_latency: float = 0.0, client: str = "default"
-                 ) -> Transfer:
-        seconds = self.hw.transfer_time(nbytes, src, dst) + extra_latency
+                 extra_latency: float = 0.0, client: str = "default",
+                 device: Optional[int] = None) -> Transfer:
+        seconds = self.estimate(nbytes, src, dst, device) + extra_latency
         link = _link_name(src, dst)
         self._stats[f"{client}.{link}_s"] += seconds
         self._stats[f"{client}.{link}_n"] += 1
         self._stats[f"{client}.{link}_bytes"] += nbytes
-        return Transfer(key, src, dst, nbytes, seconds, client=client)
+        return Transfer(key, src, dst, nbytes, seconds, client=client,
+                        device=device)
 
     def schedule(self, transfers: Iterable[Transfer],
                  overlap_links: bool = False) -> float:
@@ -234,7 +283,7 @@ class TransferEngine:
         becomes ready ``seconds`` later.  Per-lane FIFO order is preserved
         by construction: ``ready_t`` is non-decreasing within a lane.
         """
-        ch = channel_name(t.src, t.dst)
+        ch = self.lane_for(t.src, t.dst, t.device)
         t.channel = ch
         t.issue_t = self.now
         start = max(self.now, self._channel_busy.get(ch, 0.0))
@@ -247,8 +296,13 @@ class TransferEngine:
         self._key_busy[t.key] = t
         q = self._inflight.setdefault(ch, collections.deque())
         q.append(t)
+        if self.record_log:
+            self.log.append(t)
+        if not self._stats[f"q.{ch}.submitted"]:
+            self._stats[f"q.{ch}.first_issue_t"] = t.issue_t
         self._stats[f"q.{ch}.submitted"] += 1
         self._stats[f"q.{ch}.busy_s"] += t.seconds
+        self._stats[f"q.{ch}.last_ready_t"] = t.ready_t
         self._stats[f"q.{ch}.depth"] = len(q)
         if len(q) > self._stats[f"q.{ch}.peak"]:
             self._stats[f"q.{ch}.peak"] = len(q)
@@ -461,16 +515,19 @@ class HarvestStore:
         self.lru.pop(victim, None)
 
         ops: List[Transfer] = []
-        h = self.allocator.harvest_alloc(ent.nbytes, client=self.client)
+        h = self.allocator.harvest_alloc(
+            ent.nbytes, hints={"hot": ent.hotness}, client=self.client)
         if h is not None:
             ent.state = Residency.PEER
             ent.handle = h
             self.allocator.harvest_register_cb(
-                h, lambda handle, key=victim: self._on_revoked(key))
+                h, lambda handle, key=victim: self._on_revoked(
+                    key, handle.device))
             ops.append(self.transfers.transfer(
                 victim, ent.nbytes, Tier.LOCAL_HBM, Tier.PEER_HBM,
-                client=self.client))
+                client=self.client, device=h.device))
             self.stats["evict_to_peer"] += 1
+            self.stats[f"dev{h.device}.evictions"] += 1
             if ent.durability is Durability.BACKED:
                 ent.host_copy = True   # written back asynchronously
         else:
@@ -512,9 +569,12 @@ class HarvestStore:
                     exclude_owner=self.owner_fn(key), exclude_key=key))
             slot = self.free_slots.pop()
         src = ent.tier
+        device = None
         if ent.state is Residency.PEER:
             self.stats["reload_peer"] += 1
             if ent.handle is not None:
+                device = ent.handle.device
+                self.stats[f"dev{device}.reloads"] += 1
                 self.allocator.harvest_free(ent.handle)
                 ent.handle = None
         else:
@@ -524,7 +584,8 @@ class HarvestStore:
         if self.reload_hook is not None:
             self.reload_hook(key, slot)
         ops.append(self.transfers.transfer(
-            key, ent.nbytes, src, Tier.LOCAL_HBM, client=self.client))
+            key, ent.nbytes, src, Tier.LOCAL_HBM, client=self.client,
+            device=device))
         return ops
 
     # ------------------------------------------------------ promote / demote
@@ -536,18 +597,21 @@ class HarvestStore:
         ent = self.table[key]
         if ent.state is not Residency.HOST:
             return None
-        h = self.allocator.harvest_alloc(ent.nbytes, client=self.client)
+        h = self.allocator.harvest_alloc(
+            ent.nbytes, hints={"hot": ent.hotness}, client=self.client)
         if h is None:
             return None
         self.allocator.harvest_register_cb(
-            h, lambda handle, key=key: self._on_revoked(key))
+            h, lambda handle, key=key: self._on_revoked(key, handle.device))
         ent.state = Residency.PEER
         ent.handle = h
         if ent.durability is Durability.RECONSTRUCTIBLE:
             ent.host_copy = False   # the class does not pay for host backing
         op = self.transfers.transfer(key, ent.nbytes, Tier.HOST_DRAM,
-                                     Tier.PEER_HBM, client=self.client)
+                                     Tier.PEER_HBM, client=self.client,
+                                     device=h.device)
         self.stats["migrations"] += 1
+        self.stats[f"dev{h.device}.migrations"] += 1
         return op
 
     def demote(self, key: ObjectKey) -> None:
@@ -564,12 +628,15 @@ class HarvestStore:
         self.table[key].pinned = pinned
 
     # ------------------------------------------------------------ revocation
-    def _on_revoked(self, key: ObjectKey) -> None:
+    def _on_revoked(self, key: ObjectKey,
+                    device: Optional[int] = None) -> None:
         ent = self.table.get(key)
         if ent is None or ent.state is not Residency.PEER:
             return
         ent.handle = None
         self.stats["revocations"] += 1
+        if device is not None:
+            self.stats[f"dev{device}.revocations"] += 1
         if ent.host_copy:
             ent.state = Residency.HOST    # transparent fallback (BACKED)
         else:
@@ -591,6 +658,13 @@ class HarvestStore:
         return cand if limit is None else cand[:limit]
 
     # -------------------------------------------------------------- queries
+    def device_of(self, key: ObjectKey) -> Optional[int]:
+        """Peer device an object's payload lives on (None unless PEER)."""
+        ent = self.table.get(key)
+        if ent is None or ent.handle is None:
+            return None
+        return ent.handle.device
+
     def is_lost(self, key: ObjectKey) -> bool:
         ent = self.table.get(key)
         return ent is not None and ent.state is Residency.LOST

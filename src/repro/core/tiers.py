@@ -1,4 +1,4 @@
-"""Memory-tier model and transfer cost model.
+"""Memory-tier model, transfer cost model and interconnect topology.
 
 The paper's cost model (Figures 3 and 7) is a bandwidth/latency model over
 two links: host<->GPU over PCIe 5.0 and GPU<->GPU over 12 NVLink links.  Our
@@ -7,12 +7,21 @@ link — with v5e-class constants.  Both parameter sets ship here so the paper
 benchmarks (fig3/fig7) can run with the paper's hardware and the roofline
 with the TPU's.
 
+:class:`Topology` generalises the single fast/slow pair to an N-device
+interconnect: every peer device has its own :class:`LinkSpec` from the
+compute device, so transfers to distinct peers can ride distinct link
+lanes in parallel and placement can trade link bandwidth against device
+churn.  :class:`HardwareModel` (one anonymous peer) survives as the
+2-device compat surface — ``Topology.link(..., device=None)`` degrades to
+exactly ``HardwareModel.link``.
+
 All times are seconds, sizes bytes.
 """
 from __future__ import annotations
 
 import enum
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
 
 
 class Tier(enum.Enum):
@@ -81,6 +90,145 @@ TPU_V5E = HardwareModel(
 )
 
 HARDWARE = {m.name: m for m in (H100_NVLINK, TPU_V5E)}
+
+
+# ---------------------------------------------------------------------------
+# interconnect topology
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Topology:
+    """An N-device interconnect: per-peer-device links from the compute device.
+
+    ``hardware`` supplies the per-chip constants (local HBM, peak FLOPs,
+    host link) and the *default* peer link used when a transfer names no
+    device — the 2-device compat path, bit-exact with the flat
+    :class:`HardwareModel` cost model.  ``peer_links`` maps each harvestable
+    peer device id to the link it is reached over; distinct devices get
+    distinct directional lanes in the
+    :class:`~repro.core.store.TransferEngine`, so transfers to different
+    peers pipeline in parallel on the simulated clock.
+    """
+    name: str
+    hardware: HardwareModel
+    peer_links: Dict[int, LinkSpec] = field(default_factory=dict)
+
+    @property
+    def devices(self) -> Tuple[int, ...]:
+        """Harvestable peer device ids, ascending."""
+        return tuple(sorted(self.peer_links))
+
+    @property
+    def num_peers(self) -> int:
+        return len(self.peer_links)
+
+    def peer_link(self, device: Optional[int] = None) -> LinkSpec:
+        if device is None:
+            return self.hardware.peer_link
+        return self.peer_links.get(device, self.hardware.peer_link)
+
+    def link(self, src: Tier, dst: Tier,
+             device: Optional[int] = None) -> LinkSpec:
+        pair = {src, dst}
+        if pair == {Tier.LOCAL_HBM}:
+            return LinkSpec(self.hardware.hbm_bw, 0.0)
+        if Tier.HOST_DRAM in pair:
+            return self.hardware.host_link
+        return self.peer_link(device)
+
+    def transfer_time(self, nbytes: int, src: Tier, dst: Tier,
+                      device: Optional[int] = None) -> float:
+        return self.link(src, dst, device).transfer_time(nbytes)
+
+    def device_budgets(self, harvestable_bytes: int) -> Dict[int, int]:
+        """Uniform per-peer harvestable budget map (allocator constructor
+        shorthand for the presets)."""
+        return {d: int(harvestable_bytes) for d in self.devices}
+
+
+def nvlink_2gpu() -> Topology:
+    """The paper's testbed: 2x H100, all 12 NVLink links to the single peer.
+    This is the compat preset — one peer (device 1), the same link constants
+    as :data:`H100_NVLINK`, and the legacy ``peer_in``/``peer_out`` lane
+    names, so seed goldens stay bit-exact."""
+    return Topology("h100-nvlink-2gpu",
+                    H100_NVLINK, {1: H100_NVLINK.peer_link})
+
+
+def nvlink_mesh(num_peers: int) -> Topology:
+    """NVSwitch-fabric mesh (HGX board or NVLink-switched domain): every
+    peer reachable at full per-pair NVLink bandwidth, so the fabric's
+    parallelism is across *lanes*, not shared bandwidth.  ``num_peers=1``
+    coincides with the 2-GPU preset's link constants; 8 peers model one
+    compute GPU harvesting a 9-GPU NVLink domain (switched domains span
+    boards — NVL-class racks reach 72)."""
+    if not 1 <= num_peers <= 16:
+        raise ValueError(f"num_peers={num_peers}: cap one NVLink-switched "
+                         "domain at 16 peers here (NVL72-scale domains "
+                         "deserve their own calibrated preset)")
+    return Topology(f"h100-nvlink-mesh-{num_peers + 1}gpu", H100_NVLINK,
+                    {d: H100_NVLINK.peer_link
+                     for d in range(1, num_peers + 1)})
+
+
+# PCIe-switch peer path: no NVLink — peer DMA hops through a shared PCIe5
+# switch.  Effective per-pair bandwidth is the switch's x16 share with P2P
+# overheads (~26 GB/s) and setup cost close to the host path's.
+PCIE_P2P_LINK = LinkSpec(bandwidth=26e9, latency=150e-6)
+
+
+def pcie_switch(num_peers: int) -> Topology:
+    """Fallback topology for boxes without NVLink: peers behind one PCIe
+    switch.  Distinct devices still get distinct duplex lanes (the switch
+    is non-blocking for disjoint endpoint pairs) but each lane is slow."""
+    return Topology(f"pcie-switch-{num_peers + 1}gpu", H100_NVLINK,
+                    {d: PCIE_P2P_LINK for d in range(1, num_peers + 1)})
+
+
+def tpu_v5e_torus(grid: Tuple[int, int] = (2, 2),
+                  stripe: bool = True) -> Topology:
+    """TPU v5e 2D-torus ICI.  The compute chip sits at (0, 0); every other
+    chip in the ``grid`` is a harvestable peer.  A point-to-point fetch on
+    one ICI path sustains ~45 GB/s; with ``stripe`` the transfer is striped
+    over the torus's 4 link-disjoint paths (4x bandwidth — the
+    production-mesh configuration).  Per-hop switching adds latency, so
+    distant peers are reachable but measurably worse — exactly the gradient
+    topology-aware placement exploits."""
+    nx, ny = grid
+    if nx * ny < 2:
+        raise ValueError(f"grid {grid}: need at least one peer chip")
+    base = TPU_V5E.peer_link
+    links: Dict[int, LinkSpec] = {}
+    for x in range(nx):
+        for y in range(ny):
+            if (x, y) == (0, 0):
+                continue
+            hops = min(x, nx - x) + min(y, ny - y)   # torus wrap-around
+            bw = base.bandwidth * (4 if stripe else 1)
+            links[x * ny + y] = LinkSpec(bandwidth=bw,
+                                         latency=base.latency * hops)
+    return Topology(f"tpu-v5e-torus-{nx}x{ny}" + ("-striped" if stripe else ""),
+                    TPU_V5E, links)
+
+
+#: CLI-facing presets (``--topology`` on launch/serve.py, fig8 sweeps).
+TOPOLOGIES = {
+    "nvlink-2gpu": nvlink_2gpu,
+    "nvlink-mesh-4": lambda: nvlink_mesh(3),
+    "nvlink-mesh-8": lambda: nvlink_mesh(7),
+    "pcie-switch-4": lambda: pcie_switch(3),
+    "v5e-torus-2x2": lambda: tpu_v5e_torus((2, 2)),
+    "v5e-torus-4x2": lambda: tpu_v5e_torus((4, 2)),
+}
+
+
+def get_topology(name: str) -> Topology:
+    try:
+        return TOPOLOGIES[name]()
+    except KeyError:
+        raise KeyError(f"unknown topology {name!r} — one of "
+                       f"{sorted(TOPOLOGIES)}") from None
 
 
 def expert_bytes(cfg, dtype_bytes: int = 2) -> int:

@@ -2,6 +2,12 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b \
       --num-requests 16 --scheduler fair --peer-budget-mb 2
+
+Multi-peer topologies (per-device link lanes, topology-aware placement,
+timeline-driven pressure when combined with --with-churn --mode async):
+
+  PYTHONPATH=src python -m repro.launch.serve --topology nvlink-mesh-4 \
+      --mode async --prefetch --with-churn
 """
 from __future__ import annotations
 
@@ -25,28 +31,52 @@ def main():
                     default="host_backed")
     ap.add_argument("--with-churn", action="store_true",
                     help="drive revocations from the cluster trace monitor")
+    ap.add_argument("--topology", default=None,
+                    help="interconnect preset (nvlink-2gpu, nvlink-mesh-4, "
+                         "nvlink-mesh-8, pcie-switch-4, v5e-torus-2x2, "
+                         "v5e-torus-4x2): per-peer-device link lanes + "
+                         "topology/churn-aware placement; default keeps the "
+                         "flat 2-device model")
+    ap.add_argument("--monitor-interval-us", type=float, default=None,
+                    help="drive trace ticks on the simulated transfer "
+                         "clock every N microseconds (async mode only; "
+                         "default: one tick every 4 scheduler steps)")
     ap.add_argument("--mode", choices=["sync", "async"], default="sync",
                     help="clock mode: legacy pre-summed vs event timeline")
     ap.add_argument("--prefetch", action="store_true",
                     help="cross-step prefetch (implies --mode async)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.monitor_interval_us and not args.with_churn:
+        ap.error("--monitor-interval-us needs --with-churn (there is no "
+                 "monitor to drive without a cluster trace)")
+    if args.monitor_interval_us and args.mode != "async" and not args.prefetch:
+        ap.error("--monitor-interval-us needs --mode async: timeline-driven "
+                 "pressure fires on the event clock; sync mode keeps the "
+                 "legacy every-4-steps drive")
 
     from repro.configs import get_config
     from repro.core import (ClusterTrace, ClusterTraceConfig, HarvestRuntime,
-                            PrefetchConfig)
+                            PrefetchConfig, TopologyAwarePolicy, get_topology)
     from repro.models import model as M
     from repro.serving import HarvestServingEngine
 
     cfg = get_config(args.arch).reduced()
     params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
     budget = int(args.peer_budget_mb * 2**20)
+    topology = get_topology(args.topology) if args.topology else None
+    budgets = (topology.device_budgets(budget) if topology
+               else {0: budget, 1: budget})
     trace = None
     if args.with_churn:
         trace = ClusterTrace(ClusterTraceConfig(
-            num_devices=2, capacity_bytes=2 * budget, seed=args.seed,
-            job_arrival_p=0.3, job_size_frac=(0.2, 0.6)))
-    runtime = HarvestRuntime({0: budget, 1: budget}, trace=trace)
+            num_devices=len(budgets), capacity_bytes=2 * budget,
+            seed=args.seed, job_arrival_p=0.3, job_size_frac=(0.2, 0.6)))
+    runtime = HarvestRuntime(
+        budgets, trace=trace, topology=topology,
+        policy=TopologyAwarePolicy(topology) if topology else None,
+        monitor_interval_s=(args.monitor_interval_us * 1e-6
+                            if args.monitor_interval_us else None))
 
     mode = "async" if args.prefetch else args.mode
     eng = HarvestServingEngine(

@@ -127,7 +127,18 @@ class EngineStats:
             f"stall {self.stall_s * ms:8.3f} ms",
             f"  preemptions {self.preemptions}   recomputes {self.recomputes}",
         ]
-        for ns in ("prefetch", "transfer"):
+        dev = self.metrics.get("device")
+        if dev:
+            ids = sorted({k.split(".", 1)[0] for k in dev},
+                         key=lambda d: int(d[3:]))
+            parts = []
+            for d in ids:
+                budget = dev.get(f"{d}.budget", 0)
+                occ = dev.get(f"{d}.used", 0) / budget if budget else 0.0
+                parts.append(f"{d} occ={occ:.0%} "
+                             f"churn={dev.get(f'{d}.churn', 0.0)/2**20:.2f}MiB")
+            lines.append("  devices: " + "  ".join(parts))
+        for ns in ("prefetch", "transfer", "allocator", "monitor"):
             counters = self.metrics.get(ns)
             if not counters:
                 continue
@@ -225,6 +236,15 @@ class HarvestServingEngine:
         self._t_flop_tok = 2 * pc["active"] / self.hw.peak_flops
         self._t_weights = 2 * pc["active"] / self.hw.hbm_bw
 
+        # timeline-driven pressure: when the monitor carries a tick
+        # interval AND the engine runs on the event clock, trace ticks fire
+        # on the simulated timeline (mid-pipeline) instead of every 4th
+        # scheduler step; counts fired ticks, None = legacy stepwise drive
+        self._timeline_ticks: Optional[int] = (
+            0 if (mode == "async" and self.monitor is not None
+                  and getattr(self.monitor, "tick_interval_s", None)
+                  is not None)
+            else None)
         # async-mode clock base: the engine may share a timeline that has
         # already advanced (another engine / simulator on the same runtime)
         self._clock0 = runtime.transfers.now
@@ -638,6 +658,12 @@ class HarvestServingEngine:
 
         plan = self._plan_fetches()
         reload_t = self._launch_transfers(plan)
+        # timeline-driven pressure: external budget changes land HERE, while
+        # this step's transfers are already in flight on the lanes, instead
+        # of in the gap between steps (a revoked peer block that this step's
+        # reads depend on has already been made local above, so the step
+        # itself is safe — the revocation hits the resident-in-peer tail)
+        self._poll_pressure()
         compute_t = self._estimate_compute()
         if self.prefetcher is not None:
             # worst-case slots the next allocations may claim: one append
@@ -659,10 +685,22 @@ class HarvestServingEngine:
         self._commit_and_sample(logits)
         self._retire()
 
-        if self.monitor is not None and sched_step % 4 == 0:
-            self.runtime.tick()
+        if self._timeline_ticks is not None:
+            self._poll_pressure()
+        elif self.monitor is not None and sched_step % 4 == 0:
+            self.runtime.tick()   # legacy stepwise pressure drive
         self.stats.steps += 1
         return True
+
+    def _poll_pressure(self) -> int:
+        """Timeline drive of the availability monitor (async mode with a
+        ``tick_interval_s``-configured monitor): per-device budget updates
+        fire on the transfer clock, mid-pipeline."""
+        if self._timeline_ticks is None:
+            return 0
+        fired = self.runtime.poll_pressure()
+        self._timeline_ticks += fired
+        return fired
 
     def run(self, max_steps: int = 10_000) -> EngineStats:
         for _ in range(max_steps):

@@ -1,9 +1,26 @@
-"""Harvest allocator: unit + hypothesis property tests."""
+"""Harvest allocator: unit + hypothesis property tests.
+
+The unit tests (including the freelist double-free regressions) always
+run; the ``@given`` property tests skip individually when the optional
+``hypothesis`` dep is absent instead of skipping the whole module.
+"""
 import pytest
 
-pytest.importorskip("hypothesis",
-                    reason="property tests need the optional hypothesis dep")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:             # minimal-deps env: skip ONLY property tests
+    def given(*_a, **_k):
+        return lambda f: pytest.mark.skip(
+            "property tests need the optional hypothesis dep")(f)
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class _StubStrategies:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _StubStrategies()
 
 from repro.core import (BestFitPolicy, FairnessPolicy, HarvestAllocator,
                         LocalityPolicy, RevokedError, StabilityPolicy,
@@ -74,6 +91,74 @@ def test_locality_policy_prefers_near_device():
     assert h2.device in (2, 4)    # ring-adjacent once 3 can't fit
 
 
+# ---------------------------------------------------------------------------
+# _FreeList.release hardening: double frees / overlapping segments used to
+# be silently coalesced into corrupted state; now they are rejected loudly
+# ---------------------------------------------------------------------------
+
+
+def test_release_rejects_double_free():
+    fl = _FreeList(256)
+    off = fl.best_fit(64)
+    fl.release(off, 64)
+    with pytest.raises(ValueError, match="double free"):
+        fl.release(off, 64)
+    # state is unchanged by the rejected release
+    assert fl.free_bytes == 256
+    assert fl.segments == [(0, 256)]
+
+
+def test_release_rejects_partial_overlap():
+    fl = _FreeList(256)
+    a = fl.best_fit(64)
+    b = fl.best_fit(64)
+    fl.release(a, 64)
+    with pytest.raises(ValueError, match="double free"):
+        fl.release(b - 8, 64)        # tail overlaps the freed [a, a+64)
+    fl.release(b, 64)                # the exact segment is still fine
+    assert fl.free_bytes == 256
+
+
+def test_release_rejects_out_of_range_and_degenerate():
+    fl = _FreeList(128)
+    fl.best_fit(128)
+    with pytest.raises(ValueError, match="outside freelist"):
+        fl.release(64, 128)          # runs past capacity
+    with pytest.raises(ValueError, match="outside freelist"):
+        fl.release(-8, 8)
+    with pytest.raises(ValueError, match="outside freelist"):
+        fl.release(0, 0)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.integers(1, 64)), max_size=60),
+       st.integers(0, 255), st.integers(1, 64))
+def test_freelist_rejects_any_overlapping_release(ops, off, size):
+    """Property: releasing a region that intersects free space always
+    raises, and the rejected call never mutates the free list."""
+    fl = _FreeList(256)
+    live = []
+    for is_alloc, sz in ops:
+        if is_alloc:
+            o = fl.best_fit(sz)
+            if o is not None:
+                live.append((o, sz))
+        elif live:
+            o, sz = live.pop()
+            fl.release(o, sz)
+    overlaps_free = any(off < o + s and o < off + size
+                        for o, s in fl.segments)
+    in_range = 0 <= off and off + size <= 256
+    before = list(fl.segments)
+    if overlaps_free or not in_range:
+        with pytest.raises(ValueError):
+            fl.release(off, size)
+        assert fl.segments == before
+    else:
+        fl.release(off, size)
+        assert fl.free_bytes == sum(s for _, s in before) + size
+
+
 @settings(max_examples=200, deadline=None)
 @given(st.lists(st.tuples(st.booleans(), st.integers(1, 64)), max_size=60))
 def test_freelist_invariants(ops):
@@ -111,3 +196,53 @@ def test_budget_shrink_always_fits(sizes, new_budget):
     a.update_budget(0, new_budget)
     used = sum(h.size for h in a.live_handles())
     assert used <= max(new_budget, 0) or not a.live_handles()
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.integers(10, 200), min_size=1, max_size=20),
+       st.integers(0, 1000))
+def test_revocation_is_drain_then_invalidate_then_notify(sizes, new_budget):
+    """Property: revocation strictly follows drain -> invalidate -> notify.
+
+    * drain: while ANY region has in-flight IO, the budget shrink refuses
+      to complete (stream-sync stand-in);
+    * invalidate: inside the callback the handle is already dead and its
+      segment already back on the free list;
+    * notify: callbacks fire newest-first, exactly once per handle.
+    """
+    a = HarvestAllocator({0: 2000})
+    handles = []
+    for s in sizes:
+        h = a.harvest_alloc(s)
+        if h is not None:
+            handles.append(h)
+    order = []
+
+    def cb(h):
+        assert not a.is_live(h), "invalidate must precede notify"
+        # the segment is already back on the free list at notify time
+        fl = a._devices[0].freelist
+        assert any(o <= h.offset and h.offset + h.size <= o + s
+                   for o, s in fl.segments)
+        order.append(h.handle_id)
+
+    for h in handles:
+        a.harvest_register_cb(h, cb)
+    will_revoke = sum(h.size for h in handles) > new_budget
+    if handles and will_revoke:
+        # IO on the NEWEST handle — the first revocation victim — so the
+        # drain gate is guaranteed to be on the revocation path
+        pinned = handles[-1]
+        a.begin_io(pinned)       # drain gate: revocation must refuse
+        with pytest.raises(RuntimeError):
+            a.update_budget(0, new_budget)
+        assert order == [], "no notification may fire before drain passes"
+        a.end_io(pinned)
+    revoked = a.update_budget(0, new_budget)
+    assert order == [h.handle_id for h in revoked]
+    assert len(order) == len(set(order)), "notify fires exactly once"
+    # newest-first revocation order
+    alloc_order = [h.handle_id for h in handles]
+    assert order == sorted(order, key=alloc_order.index, reverse=True)
+    used = sum(h.size for h in a.live_handles())
+    assert a._devices[0].freelist.free_bytes + used == 2000
