@@ -1,0 +1,204 @@
+"""Fig 9 (repo-original) — coalesced transfer batching + chunked striping.
+
+The paper's Fig 3 shows small-object transfers dominated by per-transfer
+setup (34–194 µs on the calibrated links); a decode step that touches
+``k`` KV blocks pays ``k`` setups when every block is its own submission.
+This benchmark measures what the :class:`~repro.core.coalesce
+.TransferPlanner` buys back:
+
+  * **Engine sweep** — the async serving engine on a preemption-heavy
+    workload whose resumed prefixes span ``k`` blocks (objects/step axis),
+    per-object submission vs coalesced batching.  Decoded tokens must be
+    IDENTICAL (the planner re-schedules transfers, never placement) while
+    the simulated clock and the small-object transfer time (total lane
+    busy seconds) drop.
+  * **Stripe sweep** — one expert-sized object on the v5e torus ICI link,
+    chunk size x stripe ways: chunks ride link-disjoint sub-lanes with
+    chunk-granular completion, so a half-object prefix wait returns
+    strictly before full completion, and more ways strictly tighten full
+    completion.
+
+Headline checks: identical tokens with a strictly lower async clock at
+>= 4 blocks/step, and >= 1.5x lower small-object transfer time at the
+8-blocks/step point.
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from benchmarks.common import Check, fmt_table, save_result
+
+BLOCKS_PER_STEP = (1, 2, 4, 8)
+BLOCK_SIZE = 8
+NUM_REQUESTS = 5
+MAX_NEW_TOKENS = 10
+STRIPE_WAYS = (2, 4)
+CHUNK_KIB = (256, 1024)
+STRIPE_OBJECT_MIB = 8
+
+
+def _run_engine(cfg, params, k_blocks: int, coalesce: bool, seed: int = 0):
+    import numpy as np
+
+    from repro.core import (CoalesceConfig, HarvestRuntime, kv_block_bytes)
+    from repro.core.tiers import H100_NVLINK
+    from repro.serving.engine import HarvestServingEngine
+
+    block_bytes = kv_block_bytes(cfg, BLOCK_SIZE)
+    # local pool barely fits one working set -> fair-scheduler churn
+    # evicts/resumes whole k-block prefixes every quantum
+    slots = k_blocks + 4
+    runtime = HarvestRuntime(
+        {1: 4 * (k_blocks + 2) * block_bytes}, hardware=H100_NVLINK,
+        coalesce=CoalesceConfig() if coalesce else None)
+    eng = HarvestServingEngine(
+        cfg, params, max_batch=2, block_size=BLOCK_SIZE,
+        num_local_slots=slots, runtime=runtime, scheduler="fair",
+        mode="async")
+    rng = np.random.default_rng(seed)
+    for _ in range(NUM_REQUESTS):
+        n = k_blocks * BLOCK_SIZE - 2     # resumed prefix spans k blocks
+        eng.submit(list(rng.integers(3, min(cfg.vocab_size, 250), size=n)),
+                   MAX_NEW_TOKENS)
+    stats = eng.run(max_steps=2000)
+    outputs = sorted(tuple(r.output) for r in eng.finished)
+    q = stats.metrics.get("transfer", {})
+    busy_s = sum(v for k, v in q.items() if k.endswith(".busy_s"))
+    return stats, busy_s, outputs
+
+
+def _stripe_cell(ways: int, chunk_kib: int):
+    """One expert-sized transfer on the v5e striped ICI link: returns
+    (full completion s, half-prefix wait s, chunks)."""
+    from repro.core import CoalesceConfig, Tier, TransferEngine, TransferPlanner
+    from repro.core.tiers import tpu_v5e_torus
+
+    nbytes = STRIPE_OBJECT_MIB * 2**20 + 12345   # non-divisible on purpose
+    topo = tpu_v5e_torus((2, 2))
+    te = TransferEngine(None, topology=topo)
+    planner = TransferPlanner(te, CoalesceConfig(
+        stripe_ways=ways, chunk_nbytes=chunk_kib << 10,
+        min_stripe_nbytes=1 << 20))
+    op = te.transfer("expert", nbytes, Tier.PEER_HBM, Tier.LOCAL_HBM,
+                     device=1)
+    flat_s = op.seconds
+    chunks = planner.prepare([op])
+    assert sum(c.nbytes for c in chunks) == nbytes, \
+        "striping must conserve bytes (short tail chunk, no padding)"
+    submitted, _eff = planner.submit(chunks)
+    half = te.wait_for(submitted, prefix_nbytes=nbytes // 2)
+    full = te.wait_for(submitted)
+    return {"ways": ways, "chunk_kib": chunk_kib, "flat_s": flat_s,
+            "full_s": full, "half_prefix_s": half, "chunks": len(chunks)}
+
+
+def run(out_dir: Path, blocks_per_step=BLOCKS_PER_STEP,
+        fast: bool = False) -> dict:
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import model as M
+
+    if fast:
+        blocks_per_step = tuple(k for k in blocks_per_step if k >= 4) \
+            or (4, 8)
+
+    cfg = dataclasses.replace(get_config("yi-6b").reduced(), num_layers=2)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+
+    rows: List[dict] = []
+    table = []
+    snapshot: Optional[Dict[str, dict]] = None
+    for k in blocks_per_step:
+        st0, busy0, out0 = _run_engine(cfg, params, k, coalesce=False)
+        st1, busy1, out1 = _run_engine(cfg, params, k, coalesce=True)
+        co = st1.metrics.get("coalesce", {})
+        row = {
+            "blocks_per_step": k,
+            "tokens_match": out0 == out1,
+            "per_object": {"clock_s": st0.clock_s, "tokens": st0.tokens_out,
+                           "throughput": st0.throughput(),
+                           "transfer_busy_s": busy0},
+            "coalesced": {"clock_s": st1.clock_s, "tokens": st1.tokens_out,
+                          "throughput": st1.throughput(),
+                          "transfer_busy_s": busy1},
+            "clock_speedup": st0.clock_s / st1.clock_s,
+            "transfer_speedup": busy0 / busy1 if busy1 else float("inf"),
+            "batches": co.get("batches", 0),
+            "batch_members": co.get("batch_members", 0),
+            "preemptions": st1.preemptions,
+        }
+        rows.append(row)
+        table.append([k, "yes" if row["tokens_match"] else "NO",
+                      f"{st0.clock_s * 1e3:.3f}", f"{st1.clock_s * 1e3:.3f}",
+                      f"{row['clock_speedup']:.2f}x",
+                      f"{row['transfer_speedup']:.2f}x",
+                      row["batches"],
+                      f"{co.get('saved_setup_s', 0.0) * 1e3:.3f}"])
+        if k == max(blocks_per_step):
+            snapshot = st1.metrics
+    print("Fig 9a — transfer coalescing (async engine, resume-heavy "
+          "workload):")
+    print(fmt_table(["blk/step", "tokens=", "per-obj ms", "coalesced ms",
+                     "clock", "xfer time", "batches", "saved ms"], table))
+    print()
+
+    stripe_rows = [_stripe_cell(w, c) for w in STRIPE_WAYS
+                   for c in CHUNK_KIB]
+    print("Fig 9b — chunked multi-lane striping (v5e torus ICI, "
+          f"{STRIPE_OBJECT_MIB} MiB object):")
+    print(fmt_table(
+        ["ways", "chunk KiB", "chunks", "full ms", "half-prefix ms"],
+        [[r["ways"], r["chunk_kib"], r["chunks"], f"{r['full_s'] * 1e3:.3f}",
+          f"{r['half_prefix_s'] * 1e3:.3f}"] for r in stripe_rows]))
+    print()
+
+    def cell(k):
+        return next(r for r in rows if r["blocks_per_step"] == k)
+
+    checks = [Check(
+        "fig9.tokens_invariant",
+        float(all(r["tokens_match"] for r in rows)), lo=1.0,
+        note="coalescing re-schedules transfers, never placement — "
+             "decoded tokens are bit-identical")]
+    for k in blocks_per_step:
+        if k >= 4:
+            checks.append(Check(
+                f"fig9.clock_strictly_lower_{k}blk",
+                cell(k)["clock_speedup"], lo=1.0 + 1e-9,
+                note=f"async+coalesce clock strictly below async "
+                     f"per-object at {k} blocks/step"))
+    if 8 in blocks_per_step:
+        checks.append(Check(
+            "fig9.transfer_time_8blk", cell(8)["transfer_speedup"], lo=1.5,
+            note=">=1.5x lower small-object transfer time (lane busy "
+                 "seconds) at the 8-blocks/step point"))
+    checks.append(Check(
+        "fig9.stripe_prefix_early",
+        float(all(r["half_prefix_s"] < r["full_s"] - 1e-12
+                  for r in stripe_rows)), lo=1.0,
+        note="chunk-granular completion: a half-object prefix wait "
+             "returns strictly before full completion"))
+    for c in CHUNK_KIB:
+        w_lo, w_hi = min(STRIPE_WAYS), max(STRIPE_WAYS)
+        full = {r["ways"]: r["full_s"] for r in stripe_rows
+                if r["chunk_kib"] == c}
+        checks.append(Check(
+            f"fig9.stripe_ways_monotone_chunk{c}",
+            full[w_lo] / full[w_hi], lo=1.0 + 1e-9,
+            note=f"{w_hi}-way striping strictly beats {w_lo}-way "
+                 f"({c} KiB chunks)"))
+
+    payload = {"name": "fig9_coalescing", "rows": rows,
+               "stripe_rows": stripe_rows,
+               "checks": [c.to_dict() for c in checks],
+               "metrics": snapshot or {}}
+    save_result(out_dir, "fig9_coalescing", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    from benchmarks.common import RESULTS_DIR
+    run(RESULTS_DIR)

@@ -17,7 +17,7 @@ import time
 from benchmarks.common import RESULTS_DIR, Check, summarize_checks
 
 BENCHES = ["fig2", "fig3", "table1", "fig5", "fig6", "fig7", "fig8",
-           "roofline"]
+           "fig9", "roofline"]
 
 
 def _call(name: str, fast: bool, hw: str):
@@ -43,6 +43,9 @@ def _call(name: str, fast: bool, hw: str):
     if name == "fig8":
         from benchmarks import fig8_peer_scaling as m
         return m.run(RESULTS_DIR, hw=hw, fast=fast)
+    if name == "fig9":
+        from benchmarks import fig9_coalescing as m
+        return m.run(RESULTS_DIR, fast=fast)
     if name == "roofline":
         from benchmarks import roofline as m
         return m.run(RESULTS_DIR)

@@ -15,13 +15,18 @@ Components (the runtime wires these for you):
                 v5e 2D-torus ICI) with per-peer-device LinkSpecs
   rebalancer  — MoE expert residency, a thin store client (paper §4)
   kv_manager  — paged KV unified block table, a thin store client (paper §5)
+  coalesce    — transfer coalescing (one setup per lane per step) + chunked
+                multi-lane striping of large objects, between placement
+                and the transfer timeline
   prefetch    — cross-step speculative reloads issued under compute windows
                 on the TransferEngine's event timeline
   paged_attention — tier-aware flash-decode partials + LSE merge
   simulator   — CGOPipe pipeline model reproducing Fig 5/6
 """
 from repro.core.allocator import HarvestAllocator, HarvestHandle, RevokedError
-from repro.core.kv_manager import BlockEntry, KVOffloadManager, ReloadOp
+from repro.core.coalesce import CoalesceConfig, TransferPlanner
+from repro.core.kv_manager import (BlockEntry, KVOffloadManager, ReloadOp,
+                                   ReloadPlan)
 from repro.core.monitor import ClusterTrace, ClusterTraceConfig, PeerMonitor
 from repro.core.policy import (BestFitPolicy, FairnessPolicy, LocalityPolicy,
                                PlacementRequest, StabilityPolicy,

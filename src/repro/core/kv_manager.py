@@ -20,7 +20,7 @@ arrays — used by the serving engine and tests).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -51,6 +51,33 @@ class BlockEntry(ObjectEntry):
     """Store entry + the block-table fields the decode path reads/writes."""
     base_pos: int = 0
     filled: int = 0                            # tokens written
+
+
+@dataclass
+class ReloadPlan:
+    """One step's batched reload plan for a set of blocks.
+
+    Built by :meth:`KVOffloadManager.plan_reloads`: duplicate keys submit
+    once, blocks whose reload is already on the wire contribute the
+    in-flight transfer (``attached``) instead of a double submission, and
+    a LOST block stops the plan at that point so the caller can recompute
+    the prefix — with everything planned before it still charged, exactly
+    like the per-block loop it replaces.
+    """
+    ops: List[Transfer] = field(default_factory=list)      # to charge+submit
+    touched: List[BlockId] = field(default_factory=list)   # now-local blocks
+    attached: List[Transfer] = field(default_factory=list)  # in-flight waits
+    lost: Optional[BlockId] = None          # first LOST block hit (if any)
+    deduped: int = 0                        # repeated keys dropped
+
+    def by_lane(self, engine: TransferEngine) -> Dict[str, List[Transfer]]:
+        """The plan's transfers keyed by the directional link lane each
+        occupies (``TransferEngine.lane_of`` — the same routing rule the
+        coalescing layer batches over)."""
+        out: Dict[str, List[Transfer]] = {}
+        for t in self.ops:
+            out.setdefault(engine.lane_of(t), []).append(t)
+        return out
 
 
 class KVOffloadManager:
@@ -135,6 +162,39 @@ class KVOffloadManager:
     def ensure_resident(self, req: int, block_idx: int) -> List[ReloadOp]:
         """Fetch-mode reload: make a block local before the step."""
         return self.store.ensure_local((req, block_idx))
+
+    def plan_reloads(self, bids, seen: Optional[set] = None) -> ReloadPlan:
+        """Batched reload plan for the blocks a step is about to read.
+
+        Deduplicates repeated keys within the step (``seen`` may be shared
+        across calls to extend the dedup window), attaches the in-flight
+        transfer of any block that is already being moved — a block needed
+        by both a prefetch and the critical path submits ONCE, with the
+        critical waiter riding the existing transfer — and stops at the
+        first LOST block (``plan.lost``) so the caller can recompute, with
+        the ops planned before it still charged.
+        """
+        plan = ReloadPlan()
+        seen = set() if seen is None else seen
+        for bid in bids:
+            if bid in seen:
+                plan.deduped += 1
+                self.stats["reload_deduped"] += 1
+                continue
+            seen.add(bid)
+            if bid not in self.store.table:
+                continue
+            if self.store.is_lost(bid):
+                plan.lost = bid
+                break
+            ops = self.store.ensure_local(bid)
+            plan.ops.extend(ops)
+            plan.touched.append(bid)
+            if not ops:
+                tr = self.store.transfers.inflight_for(bid)
+                if tr is not None:
+                    plan.attached.append(tr)
+        return plan
 
     def is_lost(self, req: int, block_idx: int) -> bool:
         """True iff a lossy revocation dropped this block's payload."""

@@ -72,11 +72,16 @@ class Prefetcher:
 
     def __init__(self, kv, transfers: TransferEngine,
                  config: Optional[PrefetchConfig] = None, *,
-                 rebalancer=None, metrics: Optional[MetricsRegistry] = None):
+                 rebalancer=None, planner=None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.kv = kv
         self.te = transfers
         self.cfg = config or PrefetchConfig()
         self.rebalancer = rebalancer
+        #: optional :class:`~repro.core.coalesce.TransferPlanner`: a
+        #: window's prefetches then land as coalesced batches (link budgets
+        #: charge one setup per lane per window, not one per block)
+        self.planner = planner
         self.stats = (metrics or transfers.metrics).counters(
             "prefetch", keys=self.STAT_KEYS)
         #: block -> its in-flight speculative reload (claimed or wasted later)
@@ -97,6 +102,8 @@ class Prefetcher:
         are background moves, accounted only by the transfer metrics.
         """
         issued: List[Transfer] = []
+        pending: List[Transfer] = []      # planner path: batch-submitted
+        lane_load: Dict[str, float] = {}  # this window's projected lane use
         floor = max(self.cfg.min_free_slots, slot_floor or 0)
         run_pairs = [(r.req_id, r.pos) for r in running]
         wait_ids = [r.req_id for r in waiting
@@ -117,18 +124,34 @@ class Prefetcher:
             # the other peers' lanes are
             dev = ent.handle.device if ent.handle is not None else None
             ch = self.te.lane_for(ent.tier, Tier.LOCAL_HBM, dev)
-            est = self.te.estimate(ent.nbytes, ent.tier, Tier.LOCAL_HBM, dev)
-            if self.te.channel_busy_until(ch) + est > budget_end:
+            if self.planner is not None:
+                # coalesced budget: the window's first transfer on a lane
+                # opens the batch (full setup + bytes); the rest only add
+                # their bytes time — budgets count batches, not members
+                est = self.planner.projected_lane_s(
+                    ent.nbytes, ent.tier, Tier.LOCAL_HBM, dev,
+                    first_on_lane=ch not in lane_load)
+            else:
+                est = self.te.estimate(ent.nbytes, ent.tier,
+                                       Tier.LOCAL_HBM, dev)
+            if (self.te.channel_busy_until(ch) + lane_load.get(ch, 0.0)
+                    + est > budget_end):
                 self.stats["skipped_budget"] += 1
                 continue
             # free slots guaranteed above, so this never evicts
             ops = self.kv.ensure_resident(*bid)
-            for op in ops:
-                self.te.submit(op)
+            if self.planner is not None:
+                pending.extend(ops)
+                lane_load[ch] = lane_load.get(ch, 0.0) + est
+            else:
+                for op in ops:
+                    self.te.submit(op)
             if ops:
                 self.inflight[bid] = ops[-1]
                 self.stats["issued"] += 1
                 issued.extend(ops)
+        if pending:
+            self.planner.submit(pending)
         self._promote_experts(budget_end)
         return issued
 
@@ -140,20 +163,35 @@ class Prefetcher:
         store = self.rebalancer.store
         ch = channel_name(Tier.HOST_DRAM, Tier.PEER_HBM)
         done = 0
+        lane_load = 0.0
+        pending: List[Transfer] = []
         for eid in self.rebalancer.plan_promotions(
                 self.cfg.expert_migrations * 4):
             if done >= self.cfg.expert_migrations:
                 break
-            est = self.te.estimate(store.table[eid].nbytes,
-                                   Tier.HOST_DRAM, Tier.PEER_HBM)
-            if self.te.channel_busy_until(ch) + est > budget_end:
+            if self.planner is not None:
+                est = self.planner.projected_lane_s(
+                    store.table[eid].nbytes, Tier.HOST_DRAM, Tier.PEER_HBM,
+                    first_on_lane=not pending)
+            else:
+                est = self.te.estimate(store.table[eid].nbytes,
+                                       Tier.HOST_DRAM, Tier.PEER_HBM)
+            if self.te.channel_busy_until(ch) + lane_load + est > budget_end:
                 self.stats["skipped_budget"] += 1
                 break
             op = store.promote_to_peer(eid)
             if not op:
                 break
-            self.te.submit(op)
+            ops = op if isinstance(op, list) else [op]
+            if self.planner is not None:
+                pending.extend(ops)
+                lane_load += est
+            else:
+                for o in ops:
+                    self.te.submit(o)
             done += 1
+        if pending:
+            self.planner.submit(pending)
         self.stats["expert_promotions"] += done
 
     # ----------------------------------------------------------- outcome

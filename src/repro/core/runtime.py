@@ -33,6 +33,7 @@ from typing import Dict, Optional
 
 from repro.configs.base import ModelConfig
 from repro.core.allocator import HarvestAllocator
+from repro.core.coalesce import CoalesceConfig, TransferPlanner
 from repro.core.kv_manager import KVOffloadManager
 from repro.core.monitor import ClusterTrace, ClusterTraceConfig, PeerMonitor
 from repro.core.policy import PlacementPolicy
@@ -52,6 +53,7 @@ class HarvestRuntime:
                  monitor: Optional[PeerMonitor] = None,
                  reserve_bytes: int = 0,
                  monitor_interval_s: Optional[float] = None,
+                 coalesce: Optional[CoalesceConfig] = None,
                  metrics: Optional[MetricsRegistry] = None):
         self.metrics = metrics or MetricsRegistry()
         if hardware is None:
@@ -62,6 +64,11 @@ class HarvestRuntime:
             dict(device_budgets or {}), policy=policy, metrics=self.metrics)
         self.transfers = TransferEngine(hardware, self.metrics,
                                         topology=topology)
+        #: transfer coalescing/striping layer (None = per-object compat
+        #: path): attached to every client store this runtime creates
+        self.planner: Optional[TransferPlanner] = (
+            TransferPlanner(self.transfers, coalesce, metrics=self.metrics)
+            if coalesce is not None else None)
         if monitor is None and (trace is not None or trace_config is not None):
             trace = trace or ClusterTrace(trace_config)
             monitor = PeerMonitor(self.allocator, trace,
@@ -80,6 +87,7 @@ class HarvestRuntime:
         """A tiered store for a NEW object class — the extension seam."""
         store = HarvestStore(self.allocator, self.transfers, client=client,
                              metrics=self.metrics, **kwargs)
+        store.planner = self.planner
         self.stores[client] = store
         return store
 
@@ -93,6 +101,7 @@ class HarvestRuntime:
             durability=durability, store_payload=store_payload,
             num_kv_layers=num_kv_layers, client=client,
             transfers=self.transfers, metrics=self.metrics)
+        mgr.store.planner = self.planner
         self.stores[client] = mgr.store
         self.clients[client] = mgr
         return mgr
@@ -105,6 +114,7 @@ class HarvestRuntime:
             cfg, self.allocator, self.hardware, local_fraction=local_fraction,
             ewma=ewma, client=client, transfers=self.transfers,
             metrics=self.metrics)
+        reb.store.planner = self.planner
         self.stores[client] = reb.store
         self.clients[client] = reb
         return reb
@@ -119,7 +129,7 @@ class HarvestRuntime:
         kv = self.clients[kv_client]
         reb = self.clients.get(moe_client) if moe_client else None
         return Prefetcher(kv, self.transfers, config, rebalancer=reb,
-                          metrics=self.metrics)
+                          planner=self.planner, metrics=self.metrics)
 
     # ------------------------------------------------------------- control
     @property

@@ -113,7 +113,8 @@ def simulate_moe_decode(cfg: ModelConfig, hw: HardwareModel,
                         peer_capacity_fraction: float = 1.0,
                         ctx_len: int = DEFAULT_CTX_LEN,
                         cpu_mem_bw: float = CPU_MEM_BW,
-                        runtime=None, use_timeline: bool = False) -> SimResult:
+                        runtime=None, use_timeline: bool = False,
+                        planner=None) -> SimResult:
     """Simulate decode throughput (tokens/s) for one configuration.
 
     offload_fraction of the experts are NOT local; with ``use_peer`` the
@@ -135,9 +136,18 @@ def simulate_moe_decode(cfg: ModelConfig, hw: HardwareModel,
     fill are modelled rather than assumed away.  (The host-side HRM
     choice of CPU-FFN-vs-PCIe is an analytic-mode refinement; timeline
     mode always fetches over the link.)
+
+    ``planner`` (a :class:`~repro.core.coalesce.TransferPlanner`,
+    defaulting to the runtime's) applies to timeline mode only: each
+    micro-batch's expert fetches are striped (large experts leave as chunk
+    transfers over link-disjoint sub-lanes) and submitted as coalesced
+    per-lane batches — one transfer setup per lane per micro-batch instead
+    of one per missed expert.
     """
     mc = cfg.moe
     te = runtime.transfers if runtime is not None else TransferEngine(hw)
+    if planner is None and runtime is not None:
+        planner = getattr(runtime, "planner", None)
     if rebalancer is None and runtime is not None:
         rebalancer = runtime.clients.get("moe")
     am = ExpertAccessModel(mc.num_experts, mc.top_k,
@@ -237,19 +247,26 @@ def simulate_moe_decode(cfg: ModelConfig, hw: HardwareModel,
                 # only once its own fetches are ready.  µb 0 pays the
                 # cold-start fill.
                 ub_ops = [s[3] for s in splits]
+
+                def issue(ops):
+                    if planner is None:
+                        for op in ops:
+                            te.submit(op)
+                        return ops
+                    # coalesced batch per lane; large experts striped
+                    return planner.submit(planner.prepare(ops))[0]
+
                 t0 = te.now
-                for op in ub_ops[0]:
-                    te.submit(op)
+                ub_ops[0] = issue(ub_ops[0])
                 te.wait_for(ub_ops[0])
                 for i in range(num_micro_batches):
                     if i + 1 < num_micro_batches:
-                        for op in ub_ops[i + 1]:
-                            te.submit(op)
+                        ub_ops[i + 1] = issue(ub_ops[i + 1])
                     te.advance(comp[i])
                     if i + 1 < num_micro_batches:
                         te.wait_for(ub_ops[i + 1])
                 t = te.now - t0
-                total_fetch += sum(op.seconds for ops in ub_ops for op in ops)
+                total_fetch += sum(op.lane_s for ops in ub_ops for op in ops)
             else:
                 # Host-resident misses: MoE-Lightning's HRM picks the
                 # cheaper of

@@ -140,11 +140,25 @@ class Transfer:
     seconds: float
     client: str = "default"
     device: Optional[int] = None   # peer device the payload lives on/moves to
+    # --- coalescing / striping fields (set by the TransferPlanner) ---
+    parent: Optional[ObjectKey] = None  # object key a stripe chunk belongs to
+    offset: int = 0          # chunk's byte offset within its parent object
+    lane: Optional[str] = None   # forced lane (stripe sub-lanes); None = route
+    batch_id: int = 0        # coalesced-batch membership (0 = solo submission)
     # --- timeline fields (live only once submitted) ---
     issue_t: float = 0.0     # simulated time the transfer was enqueued
     ready_t: float = 0.0     # simulated time the payload is usable at dst
+    lane_s: float = 0.0      # lane occupancy actually charged (== seconds
+                             # solo; less the saved setup inside a batch)
     channel: str = ""        # directional link lane the transfer occupies
     done: bool = True        # un-submitted transfers count as complete
+
+    @property
+    def dep_key(self) -> ObjectKey:
+        """Key same-object ordering chains on: the parent for stripe chunks
+        (siblings must NOT serialise on each other — see
+        :meth:`TransferEngine.submit_chunks`), else the object key."""
+        return self.key if self.parent is None else self.parent
 
 
 def _link_name(src: Tier, dst: Tier) -> str:
@@ -211,10 +225,17 @@ class TransferEngine:
         self._channel_busy: Dict[str, float] = {}
         self._inflight: Dict[str, "collections.deque[Transfer]"] = {}
         self._key_busy: Dict[ObjectKey, Transfer] = {}
+        self._batch_seq: int = 0
         # opt-in submit log (benchmarks reconstruct exact per-lane busy
         # intervals from it; off by default — it grows without bound)
         self.record_log: bool = False
         self.log: List[Transfer] = []
+
+    def lane_of(self, t: Transfer) -> str:
+        """The directional lane a pending transfer will occupy: its forced
+        ``lane`` (stripe sub-lanes) or the routed one.  The single routing
+        rule shared by submission, coalescing and reload-plan grouping."""
+        return t.lane or self.lane_for(t.src, t.dst, t.device)
 
     def lane_for(self, src: Tier, dst: Tier,
                  device: Optional[int] = None) -> str:
@@ -229,6 +250,15 @@ class TransferEngine:
         if self.topology is None or device not in self.topology.peer_links:
             device = None
         return channel_name(src, dst, device)
+
+    def link_spec(self, src: Tier, dst: Tier,
+                  device: Optional[int] = None):
+        """The :class:`~repro.core.tiers.LinkSpec` a (src, dst, device)
+        transfer is charged against — the coalescing/striping layer reads
+        its setup ``latency`` and link-disjoint ``paths`` from here."""
+        if self.topology is not None:
+            return self.topology.link(src, dst, device)
+        return self.hw.link(src, dst)
 
     def estimate(self, nbytes: int, src: Tier, dst: Tier,
                  device: Optional[int] = None) -> float:
@@ -274,6 +304,33 @@ class TransferEngine:
         return max(compute_s, transfer_s) if enabled else compute_s + transfer_s
 
     # ------------------------------------------------------------- timeline
+    def _enqueue(self, t: Transfer, ch: str, lane_s: float,
+                 start: float) -> Transfer:
+        """Place a pending transfer on lane ``ch`` occupying ``lane_s``
+        seconds from ``start``.  Shared by the solo, coalesced and striped
+        submission paths; per-lane FIFO order is preserved because every
+        caller derives ``start`` from the lane's busy-until time."""
+        t.channel = ch
+        t.issue_t = self.now
+        t.lane_s = lane_s
+        t.ready_t = start + lane_s
+        t.done = False
+        self._channel_busy[ch] = t.ready_t
+        self._key_busy[t.dep_key] = t
+        q = self._inflight.setdefault(ch, collections.deque())
+        q.append(t)
+        if self.record_log:
+            self.log.append(t)
+        if not self._stats[f"q.{ch}.submitted"]:
+            self._stats[f"q.{ch}.first_issue_t"] = t.issue_t
+        self._stats[f"q.{ch}.submitted"] += 1
+        self._stats[f"q.{ch}.busy_s"] += lane_s
+        self._stats[f"q.{ch}.last_ready_t"] = t.ready_t
+        self._stats[f"q.{ch}.depth"] = len(q)
+        if len(q) > self._stats[f"q.{ch}.peak"]:
+            self._stats[f"q.{ch}.peak"] = len(q)
+        return t
+
     def submit(self, t: Transfer) -> Transfer:
         """Enqueue a pending transfer on its directional link lane.
 
@@ -283,30 +340,137 @@ class TransferEngine:
         becomes ready ``seconds`` later.  Per-lane FIFO order is preserved
         by construction: ``ready_t`` is non-decreasing within a lane.
         """
-        ch = self.lane_for(t.src, t.dst, t.device)
-        t.channel = ch
-        t.issue_t = self.now
+        ch = self.lane_of(t)
         start = max(self.now, self._channel_busy.get(ch, 0.0))
-        dep = self._key_busy.get(t.key)
+        dep = self._key_busy.get(t.dep_key)
         if dep is not None and not dep.done:
             start = max(start, dep.ready_t)
-        t.ready_t = start + t.seconds
-        t.done = False
-        self._channel_busy[ch] = t.ready_t
-        self._key_busy[t.key] = t
-        q = self._inflight.setdefault(ch, collections.deque())
-        q.append(t)
-        if self.record_log:
-            self.log.append(t)
-        if not self._stats[f"q.{ch}.submitted"]:
-            self._stats[f"q.{ch}.first_issue_t"] = t.issue_t
-        self._stats[f"q.{ch}.submitted"] += 1
-        self._stats[f"q.{ch}.busy_s"] += t.seconds
-        self._stats[f"q.{ch}.last_ready_t"] = t.ready_t
-        self._stats[f"q.{ch}.depth"] = len(q)
-        if len(q) > self._stats[f"q.{ch}.peak"]:
-            self._stats[f"q.{ch}.peak"] = len(q)
-        return t
+        return self._enqueue(t, ch, t.seconds, start)
+
+    def submit_coalesced(self, members: Iterable[Transfer]) -> List[Transfer]:
+        """Submit same-lane transfers as ONE batched lane occupancy.
+
+        The batch pays the lane's per-transfer setup latency once (the
+        simulated analogue of a single multi-slot ``harvest_gather`` call):
+        member 0 keeps its full ``seconds``; every later member occupies
+        only its bytes time.  Completion still resolves per member —
+        ``ready_t`` is stamped at each member's cumulative byte boundary,
+        so a waiter on one object never waits for the whole batch's tail.
+
+        Members that route to a different lane, or whose object has an
+        unresolved in-flight transfer (same-key ordering), fall back to the
+        solo :meth:`submit` path — a dependency must not stall the batch.
+        """
+        members = list(members)
+        if not members:
+            return []
+        out: List[Transfer] = []
+        ch = self.lane_of(members[0])
+        batched: List[Transfer] = []
+        solo: List[Transfer] = []
+        for t in members:
+            lane_t = self.lane_of(t)
+            dep = self._key_busy.get(t.dep_key)
+            if lane_t != ch or (dep is not None and not dep.done):
+                solo.append(t)
+            else:
+                batched.append(t)
+        # the batch goes FIRST: a dependency-blocked member would otherwise
+        # head-of-line-block the lane's FIFO while it waits for its dep
+        if len(batched) >= 2:
+            setup = self.link_spec(batched[0].src, batched[0].dst,
+                                   batched[0].device).latency
+            self._batch_seq += 1
+            start = max(self.now, self._channel_busy.get(ch, 0.0))
+            saved = 0.0
+            for i, t in enumerate(batched):
+                lane_s = t.seconds if i == 0 else max(t.seconds - setup, 0.0)
+                saved += t.seconds - lane_s
+                t.batch_id = self._batch_seq
+                self._enqueue(t, ch, lane_s, start)
+                start = t.ready_t
+                out.append(t)
+            self._stats[f"q.{ch}.coalesced"] += 1
+            self._stats[f"q.{ch}.coalesced_members"] += len(batched)
+            self._stats[f"q.{ch}.coalesced_saved_s"] += saved
+        else:
+            solo = batched + solo
+        for t in solo:
+            out.append(self.submit(t))
+        return out
+
+    def split(self, t: Transfer, ways: int, chunk_nbytes: int
+              ) -> List[Transfer]:
+        """Re-mint one pending transfer as chunk transfers striped across
+        ``ways`` link-disjoint sub-lanes (``<lane>.s<k>``), each sustaining
+        the link's per-path bandwidth.  The last chunk may be short — a
+        non-divisible object size pads nothing and loses nothing.  The
+        per-client link metrics are re-stated from the whole object to its
+        chunks (bytes conserved; the chunk count replaces the single
+        transfer count)."""
+        link = self.link_spec(t.src, t.dst, t.device)
+        ways = max(1, min(ways, link.paths))
+        chunk_nbytes = max(1, chunk_nbytes)   # a 0-byte chunk never advances
+        if ways <= 1 or t.nbytes <= chunk_nbytes:
+            return [t]
+        base = t.lane or self.lane_for(t.src, t.dst, t.device)
+        path_bw = link.path_bandwidth
+        extra = max(0.0, t.seconds - link.transfer_time(t.nbytes))
+        chunks: List[Transfer] = []
+        off = 0
+        i = 0
+        while off < t.nbytes:
+            nb = min(chunk_nbytes, t.nbytes - off)
+            chunks.append(Transfer(
+                key=("~chunk", t.key, i), src=t.src, dst=t.dst, nbytes=nb,
+                seconds=link.latency + nb / path_bw + (extra if i == 0 else 0),
+                client=t.client, device=t.device, parent=t.key, offset=off,
+                lane=f"{base}.s{i % ways}"))
+            off += nb
+            i += 1
+        link_name = _link_name(t.src, t.dst)
+        self._stats[f"{t.client}.{link_name}_s"] += \
+            sum(c.seconds for c in chunks) - t.seconds
+        self._stats[f"{t.client}.{link_name}_n"] += len(chunks) - 1
+        self._stats[f"q.{base}.stripe_objects"] += 1
+        self._stats[f"q.{base}.stripe_chunks"] += len(chunks)
+        self._stats[f"q.{base}.stripe_ways"] = max(
+            ways, self._stats[f"q.{base}.stripe_ways"])
+        return chunks
+
+    def submit_chunks(self, chunks: Iterable[Transfer]) -> List[Transfer]:
+        """Striped submission: the chunks of ONE object ride their assigned
+        sub-lanes concurrently, coalesced per sub-lane (one setup each).
+
+        An in-flight transfer of the parent key (the object's eviction
+        write-back) delays every chunk; afterwards the parent key maps to
+        the LAST-finishing chunk, so a future same-key transfer chains on
+        stripe completion, never on a partial prefix.
+        """
+        chunks = list(chunks)
+        if not chunks:
+            return []
+        pkey = chunks[0].parent
+        dep = self._key_busy.get(pkey)
+        floor = dep.ready_t if (dep is not None and not dep.done) else self.now
+        per_lane: Dict[str, List[Transfer]] = {}
+        for t in chunks:
+            per_lane.setdefault(t.lane, []).append(t)
+        self._batch_seq += 1
+        last: Optional[Transfer] = None
+        for ch, members in per_lane.items():
+            setup = self.link_spec(members[0].src, members[0].dst,
+                                   members[0].device).latency
+            start = max(floor, self.now, self._channel_busy.get(ch, 0.0))
+            for i, t in enumerate(members):
+                lane_s = t.seconds if i == 0 else max(t.seconds - setup, 0.0)
+                t.batch_id = self._batch_seq
+                self._enqueue(t, ch, lane_s, start)
+                start = t.ready_t
+                if last is None or t.ready_t > last.ready_t:
+                    last = t
+        self._key_busy[pkey] = last
+        return chunks
 
     def drain_until(self, t: float) -> List[Transfer]:
         """Advance the clock to ``t`` (never backwards) and complete every
@@ -319,8 +483,8 @@ class TransferEngine:
             while q and q[0].ready_t <= self.now:
                 tr = q.popleft()
                 tr.done = True
-                if self._key_busy.get(tr.key) is tr:
-                    del self._key_busy[tr.key]
+                if self._key_busy.get(tr.dep_key) is tr:
+                    del self._key_busy[tr.dep_key]
                 self._stats[f"q.{ch}.completed"] += 1
                 self._stats[f"q.{ch}.depth"] = len(q)
                 done.append(tr)
@@ -330,14 +494,36 @@ class TransferEngine:
         """Let simulated time pass (a compute window) and drain."""
         return self.drain_until(self.now + seconds)
 
-    def wait_for(self, transfers: Iterable[Transfer]) -> float:
+    def wait_for(self, transfers: Iterable[Transfer],
+                 prefix_nbytes: Optional[int] = None) -> float:
         """Block the clock until every given transfer has completed;
-        returns the new ``now``.  Already-complete transfers are free."""
-        target = max((t.ready_t for t in transfers if not t.done),
-                     default=self.now)
+        returns the new ``now``.  Already-complete transfers are free.
+
+        ``prefix_nbytes`` is the chunk-granular completion contract of a
+        striped reload: only the stripe chunks covering byte range
+        ``[0, prefix_nbytes)`` of their parent object are waited on, so a
+        consumer that needs an object's prefix resumes as soon as that
+        prefix has landed.  Non-chunk transfers are always waited on.
+        """
+        target = self.now
+        for t in transfers:
+            if t.done:
+                continue
+            if (prefix_nbytes is not None and t.parent is not None
+                    and t.offset >= prefix_nbytes):
+                continue
+            target = max(target, t.ready_t)
         if target > self.now:
             self.drain_until(target)
         return self.now
+
+    def inflight_for(self, key: ObjectKey) -> Optional[Transfer]:
+        """The in-flight transfer currently moving ``key`` (None when the
+        object is quiescent).  A step that needs a block another path
+        already submitted (a prefetch, an earlier resume) attaches to this
+        transfer instead of double-submitting."""
+        t = self._key_busy.get(key)
+        return t if (t is not None and not t.done) else None
 
     def pending(self, channel: Optional[str] = None) -> int:
         """Number of in-flight transfers (optionally on one lane)."""
@@ -422,11 +608,23 @@ class HarvestStore:
 
         self.store_payload = store_payload
         self._payload: Dict[ObjectKey, np.ndarray] = {}
+        #: optional :class:`~repro.core.coalesce.TransferPlanner` — when
+        #: attached (HarvestRuntime built with a CoalesceConfig), the
+        #: placement methods emit *plans*: large objects leave as chunk
+        #: transfers striped over link-disjoint sub-lanes, and callers hand
+        #: whole step plans back to the planner for same-lane batching.
+        #: None (default) keeps the seed-exact loose-transfer path.
+        self.planner = None
         # policy hooks: called with (key, local_slot) so the embedding layer
         # (e.g. the serving engine's pool arrays) can move real payloads
         # alongside the placement
         self.evict_hook: Optional[Callable[[ObjectKey, int], None]] = None
         self.reload_hook: Optional[Callable[[ObjectKey, int], None]] = None
+
+    def _prepare(self, ops: List[Transfer]) -> List[Transfer]:
+        """Planner pass over freshly minted transfers (striping); identity
+        when no planner is attached — the compat path."""
+        return ops if self.planner is None else self.planner.prepare(ops)
 
     # ------------------------------------------------------------ lifecycle
     def register(self, key: ObjectKey, *, state: Residency = Residency.HOST,
@@ -462,7 +660,7 @@ class HarvestStore:
             local_slot=slot, **extra)
         self.lru[key] = None
         self.stats["allocated"] += 1
-        return slot, ops
+        return slot, self._prepare(ops)
 
     def release(self, key: ObjectKey) -> None:
         """Stop tracking an object, freeing its slot / peer segment."""
@@ -547,7 +745,7 @@ class HarvestStore:
         for key in sorted(k for k in self.table if self.owner_fn(k) == owner):
             if self.table[key].state is Residency.LOCAL:
                 ops.extend(self._evict_one(victim=key))
-        return ops
+        return self._prepare(ops)
 
     # --------------------------------------------------------------- reload
     def ensure_local(self, key: ObjectKey) -> List[Transfer]:
@@ -586,14 +784,16 @@ class HarvestStore:
         ops.append(self.transfers.transfer(
             key, ent.nbytes, src, Tier.LOCAL_HBM, client=self.client,
             device=device))
-        return ops
+        return self._prepare(ops)
 
     # ------------------------------------------------------ promote / demote
-    def promote_to_peer(self, key: ObjectKey) -> Optional[Transfer]:
+    def promote_to_peer(self, key: ObjectKey):
         """Migrate a host-resident object into peer HBM (background path —
         the move is not charged to any request's critical path).  Returns
         the pending transfer (truthy) so timeline clients can ``submit``
-        it, or None when the object is not promotable."""
+        it, or None when the object is not promotable.  With a planner
+        attached the promotion is emitted as a *plan* — a (possibly
+        chunk-striped) transfer list — instead of one loose transfer."""
         ent = self.table[key]
         if ent.state is not Residency.HOST:
             return None
@@ -612,7 +812,7 @@ class HarvestStore:
                                      device=h.device)
         self.stats["migrations"] += 1
         self.stats[f"dev{h.device}.migrations"] += 1
-        return op
+        return op if self.planner is None else self._prepare([op])
 
     def demote(self, key: ObjectKey) -> None:
         """Voluntarily release a peer-resident object back to host."""

@@ -34,9 +34,21 @@ class Tier(enum.Enum):
 class LinkSpec:
     bandwidth: float       # bytes / second (effective, not marketing peak)
     latency: float         # per-transfer fixed cost (s)
+    #: number of link-disjoint physical paths this link aggregates (12 NVLink
+    #: links, 4 torus ICI paths).  ``bandwidth`` is the AGGREGATE across all
+    #: paths; a single chunk stream striped onto one path sustains
+    #: ``bandwidth / paths``.  The flat cost model ignores this — only the
+    #: :class:`~repro.core.coalesce.TransferPlanner`'s chunked striping
+    #: schedules individual paths.
+    paths: int = 1
 
     def transfer_time(self, nbytes: int) -> float:
         return self.latency + nbytes / self.bandwidth
+
+    @property
+    def path_bandwidth(self) -> float:
+        """Effective bandwidth of ONE of the link-disjoint paths."""
+        return self.bandwidth / max(self.paths, 1)
 
 
 @dataclass(frozen=True)
@@ -69,7 +81,7 @@ class HardwareModel:
 # effective with ~110 us setup (pageable-copy staging dominates small sizes).
 H100_NVLINK = HardwareModel(
     name="h100-nvlink-2gpu",
-    peer_link=LinkSpec(bandwidth=425e9, latency=34.2e-6),
+    peer_link=LinkSpec(bandwidth=425e9, latency=34.2e-6, paths=12),
     host_link=LinkSpec(bandwidth=44e9, latency=194e-6),
     hbm_bw=3.35e12,
     peak_flops=989e12,
@@ -207,7 +219,8 @@ def tpu_v5e_torus(grid: Tuple[int, int] = (2, 2),
             hops = min(x, nx - x) + min(y, ny - y)   # torus wrap-around
             bw = base.bandwidth * (4 if stripe else 1)
             links[x * ny + y] = LinkSpec(bandwidth=bw,
-                                         latency=base.latency * hops)
+                                         latency=base.latency * hops,
+                                         paths=4 if stripe else 1)
     return Topology(f"tpu-v5e-torus-{nx}x{ny}" + ("-striped" if stripe else ""),
                     TPU_V5E, links)
 

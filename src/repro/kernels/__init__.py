@@ -4,7 +4,8 @@
   paged_attention — decode attention over the Harvest KV block pool
                     (scalar-prefetch block-table chasing)
   moe_ffn         — fused gated expert FFN over dispatch buffers
-  harvest_copy    — chunked tier-to-tier block gather (the Harvest data mover)
+  harvest_copy    — chunked tier-to-tier block gather + fused gather→scatter
+                    pool-to-pool copy (the Harvest data movers)
 
 Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper,
 TPU-compiled vs CPU-interpret dispatch), ref.py (pure-jnp oracle).

@@ -1,18 +1,32 @@
-"""Pallas TPU chunked tier-copy kernel (the Harvest data mover).
+"""Pallas TPU chunked tier-copy kernels (the Harvest data movers).
 
-Gathers a batch of KV blocks / expert shards out of a source pool into a
-dense staging buffer, chunk by chunk.  The slot list is a scalar-prefetch
-operand, so the BlockSpec index_map chases it exactly like the runtime's
-reload plan — this is the TPU analogue of the batched cudaMemcpyPeerAsync
-the paper issues on a reload, and Pallas's grid pipeline gives the
-double-buffering (copy chunk i+1 while chunk i lands) for free.
+``harvest_gather`` pulls a batch of KV blocks / expert shards out of a
+source pool into a dense staging buffer, chunk by chunk.  The slot list is
+a scalar-prefetch operand, so the BlockSpec index_map chases it exactly
+like the runtime's reload plan — this is the TPU analogue of the batched
+cudaMemcpyPeerAsync the paper issues on a reload, and Pallas's grid
+pipeline gives the double-buffering (copy chunk i+1 while chunk i lands)
+for free.
 
-Grid: (num_blocks_to_copy, chunks_per_block).
+``harvest_copy`` is the fused gather→scatter: one kernel moves slots from
+a source pool straight into destination pool slots, skipping the dense
+staging round-trip entirely — the output aliases the destination pool, so
+untouched slots are preserved and only the copied blocks' chunks are
+written.  This is the kernel the runtime's coalesced reload plan models:
+one submission, one setup, per-slot completion as the grid walks the
+batch.
+
+Non-divisible block sizes are handled by padding the trailing chunk
+(gather/copy) instead of asserting; out-of-range slot ids raise instead of
+silently dropping writes.
+
+Grids: (num_blocks_to_copy, chunks_per_block).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -21,15 +35,44 @@ def _copy_kernel(ids_ref, src_ref, dst_ref):
     dst_ref[...] = src_ref[...]
 
 
+def _fused_copy_kernel(src_ids_ref, dst_ids_ref, src_ref, dst_in_ref,
+                       dst_ref):
+    dst_ref[...] = src_ref[...]
+
+
+def _check_slot_ids(slot_ids, n_slots: int, what: str) -> None:
+    """Eagerly reject out-of-range slot ids (a scatter that silently drops
+    a reload's payload is a data-loss bug, not a masking convenience).
+    Traced ids (inside an outer jit) cannot be validated here — the jit'd
+    wrappers in ops.py validate before tracing."""
+    if isinstance(slot_ids, jax.core.Tracer):
+        return
+    ids = np.asarray(slot_ids)
+    if ids.size and (ids.min() < 0 or ids.max() >= n_slots):
+        bad = ids[(ids < 0) | (ids >= n_slots)]
+        raise IndexError(
+            f"{what}: slot ids {bad.tolist()} out of range for a pool of "
+            f"{n_slots} slots — refusing to drop the writes")
+
+
+def _chunking(elems: int, chunk: int):
+    """(clamped chunk, padded elems, n_chunks): non-divisible block sizes
+    are padded up to a whole trailing chunk instead of crashing."""
+    chunk = max(1, min(chunk, elems))
+    pad = (-elems) % chunk
+    return chunk, elems + pad, (elems + pad) // chunk
+
+
 def harvest_gather(src_pool, slot_ids, *, chunk: int = 512,
                    interpret: bool = True):
     """src_pool: (n_slots, block_elems); slot_ids: (m,) int32
     -> (m, block_elems) staging buffer."""
     n_slots, elems = src_pool.shape
+    _check_slot_ids(slot_ids, n_slots, "harvest_gather")
     m = slot_ids.shape[0]
-    chunk = min(chunk, elems)
-    assert elems % chunk == 0
-    n_chunks = elems // chunk
+    chunk, padded, n_chunks = _chunking(elems, chunk)
+    if padded != elems:
+        src_pool = jnp.pad(src_pool, ((0, 0), (0, padded - elems)))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -39,19 +82,69 @@ def harvest_gather(src_pool, slot_ids, *, chunk: int = 512,
         ],
         out_specs=pl.BlockSpec((None, chunk), lambda i, j, ids: (i, j)),
     )
-    return pl.pallas_call(
+    out = pl.pallas_call(
         _copy_kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((m, elems), src_pool.dtype),
+        out_shape=jax.ShapeDtypeStruct((m, padded), src_pool.dtype),
         interpret=interpret,
     )(slot_ids.astype(jnp.int32), src_pool)
+    return out[:, :elems] if padded != elems else out
+
+
+def harvest_copy(src_pool, dst_pool, src_ids, dst_ids, *, chunk: int = 512,
+                 interpret: bool = True):
+    """Fused gather→scatter: dst_pool[dst_ids[i]] <- src_pool[src_ids[i]].
+
+    One pallas_call, no dense staging buffer: the source BlockSpec chases
+    ``src_ids`` while the output BlockSpec chases ``dst_ids``, and the
+    output aliases ``dst_pool`` so every slot outside the copy set is
+    preserved.  Returns the updated destination pool.
+    """
+    n_src, elems = src_pool.shape
+    n_dst, elems_d = dst_pool.shape
+    assert elems == elems_d, \
+        f"pool block sizes differ: src {elems} vs dst {elems_d}"
+    assert src_ids.shape == dst_ids.shape, \
+        f"id list shapes differ: {src_ids.shape} vs {dst_ids.shape}"
+    _check_slot_ids(src_ids, n_src, "harvest_copy(src)")
+    _check_slot_ids(dst_ids, n_dst, "harvest_copy(dst)")
+    m = src_ids.shape[0]
+    chunk, padded, n_chunks = _chunking(elems, chunk)
+    if padded != elems:
+        src_pool = jnp.pad(src_pool, ((0, 0), (0, padded - elems)))
+        dst_pool = jnp.pad(dst_pool, ((0, 0), (0, padded - elems)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(m, n_chunks),
+        in_specs=[
+            pl.BlockSpec((None, chunk), lambda i, j, sids, dids: (sids[i], j)),
+            pl.BlockSpec((None, chunk), lambda i, j, sids, dids: (dids[i], j)),
+        ],
+        out_specs=pl.BlockSpec((None, chunk),
+                               lambda i, j, sids, dids: (dids[i], j)),
+    )
+    out = pl.pallas_call(
+        _fused_copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(dst_pool.shape, dst_pool.dtype),
+        # operand 3 = dst_pool (after the 2 scalar-prefetch id lists and
+        # src_pool): aliasing it into the output preserves untouched slots
+        input_output_aliases={3: 0},
+        interpret=interpret,
+    )(src_ids.astype(jnp.int32), dst_ids.astype(jnp.int32), src_pool,
+      dst_pool)
+    return out[:, :elems] if padded != elems else out
 
 
 def harvest_scatter(dst_pool, staging, slot_ids, *, interpret: bool = True):
     """Write staging rows back into pool slots (reload completion).
 
     Implemented with a jnp scatter (aliasing-safe); the gather above is the
-    bandwidth-critical direction.
+    bandwidth-critical direction.  Out-of-range slot ids raise instead of
+    silently dropping the write — a reload whose payload lands nowhere is
+    data loss, not a masking convenience.
     """
+    _check_slot_ids(slot_ids, dst_pool.shape[0], "harvest_scatter")
     return dst_pool.at[slot_ids].set(staging.astype(dst_pool.dtype),
                                      mode="drop")

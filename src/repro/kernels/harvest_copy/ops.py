@@ -1,4 +1,9 @@
-"""Jit'd wrappers for the harvest tier-copy kernels."""
+"""Jit'd wrappers for the harvest tier-copy kernels.
+
+The wrappers validate slot ids EAGERLY (before tracing) so out-of-range
+ids raise :class:`IndexError` instead of becoming silently dropped writes
+inside the jit'd scatter — see ``harvest_scatter``'s contract.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,7 +11,9 @@ from typing import Optional
 
 import jax
 
-from repro.kernels.harvest_copy.kernel import harvest_gather, harvest_scatter
+from repro.kernels.harvest_copy.kernel import (_check_slot_ids,
+                                               harvest_copy, harvest_gather,
+                                               harvest_scatter)
 
 
 def _on_tpu() -> bool:
@@ -14,12 +21,39 @@ def _on_tpu() -> bool:
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _gather_jit(src_pool, slot_ids, *, chunk, interpret):
+    return harvest_gather(src_pool, slot_ids, chunk=chunk, interpret=interpret)
+
+
 def gather_blocks(src_pool, slot_ids, *, chunk: int = 512,
                   interpret: Optional[bool] = None):
     interp = (not _on_tpu()) if interpret is None else interpret
-    return harvest_gather(src_pool, slot_ids, chunk=chunk, interpret=interp)
+    _check_slot_ids(slot_ids, src_pool.shape[0], "gather_blocks")
+    return _gather_jit(src_pool, slot_ids, chunk=chunk, interpret=interp)
 
 
 @jax.jit
-def scatter_blocks(dst_pool, staging, slot_ids):
+def _scatter_jit(dst_pool, staging, slot_ids):
     return harvest_scatter(dst_pool, staging, slot_ids)
+
+
+def scatter_blocks(dst_pool, staging, slot_ids):
+    _check_slot_ids(slot_ids, dst_pool.shape[0], "scatter_blocks")
+    return _scatter_jit(dst_pool, staging, slot_ids)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _copy_jit(src_pool, dst_pool, src_ids, dst_ids, *, chunk, interpret):
+    return harvest_copy(src_pool, dst_pool, src_ids, dst_ids, chunk=chunk,
+                        interpret=interpret)
+
+
+def copy_blocks(src_pool, dst_pool, src_ids, dst_ids, *, chunk: int = 512,
+                interpret: Optional[bool] = None):
+    """Fused gather→scatter: move ``src_pool[src_ids]`` straight into
+    ``dst_pool[dst_ids]`` with no dense staging buffer."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    _check_slot_ids(src_ids, src_pool.shape[0], "copy_blocks(src)")
+    _check_slot_ids(dst_ids, dst_pool.shape[0], "copy_blocks(dst)")
+    return _copy_jit(src_pool, dst_pool, src_ids, dst_ids, chunk=chunk,
+                     interpret=interp)

@@ -9,3 +9,9 @@ def harvest_gather_ref(src_pool, slot_ids):
 def harvest_scatter_ref(dst_pool, staging, slot_ids):
     return dst_pool.at[slot_ids].set(staging.astype(dst_pool.dtype),
                                      mode="drop")
+
+
+def harvest_copy_ref(src_pool, dst_pool, src_ids, dst_ids):
+    """Fused gather->scatter oracle (no staging buffer)."""
+    return dst_pool.at[dst_ids].set(
+        jnp.take(src_pool, src_ids, axis=0).astype(dst_pool.dtype))

@@ -8,6 +8,13 @@ timeline-driven pressure when combined with --with-churn --mode async):
 
   PYTHONPATH=src python -m repro.launch.serve --topology nvlink-mesh-4 \
       --mode async --prefetch --with-churn
+
+Coalesced transfer batching + chunked striping (one setup latency per
+link lane per step; objects over --stripe-min-mb ride link-disjoint
+sub-lanes with chunk-granular completion):
+
+  PYTHONPATH=src python -m repro.launch.serve --topology v5e-torus-2x2 \
+      --coalesce --stripe 4 --prefetch
 """
 from __future__ import annotations
 
@@ -45,6 +52,19 @@ def main():
                     help="clock mode: legacy pre-summed vs event timeline")
     ap.add_argument("--prefetch", action="store_true",
                     help="cross-step prefetch (implies --mode async)")
+    ap.add_argument("--coalesce", action="store_true",
+                    help="batch same-lane transfers issued in one step into "
+                         "a single submission paying one setup latency "
+                         "(implies --mode async)")
+    ap.add_argument("--stripe", type=int, default=0, metavar="WAYS",
+                    help="stripe objects >= --stripe-min-mb into chunks over "
+                         "N link-disjoint sub-lanes with chunk-granular "
+                         "completion (implies --coalesce)")
+    ap.add_argument("--stripe-chunk-kb", type=int, default=1024,
+                    help="stripe chunk size in KiB (default 1024)")
+    ap.add_argument("--stripe-min-mb", type=float, default=4.0,
+                    help="size floor in MiB below which objects are never "
+                         "striped (default 4)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.monitor_interval_us and not args.with_churn:
@@ -56,8 +76,9 @@ def main():
                  "legacy every-4-steps drive")
 
     from repro.configs import get_config
-    from repro.core import (ClusterTrace, ClusterTraceConfig, HarvestRuntime,
-                            PrefetchConfig, TopologyAwarePolicy, get_topology)
+    from repro.core import (ClusterTrace, ClusterTraceConfig, CoalesceConfig,
+                            HarvestRuntime, PrefetchConfig,
+                            TopologyAwarePolicy, get_topology)
     from repro.models import model as M
     from repro.serving import HarvestServingEngine
 
@@ -72,13 +93,20 @@ def main():
         trace = ClusterTrace(ClusterTraceConfig(
             num_devices=len(budgets), capacity_bytes=2 * budget,
             seed=args.seed, job_arrival_p=0.3, job_size_frac=(0.2, 0.6)))
+    coalesce = None
+    if args.coalesce or args.stripe:
+        coalesce = CoalesceConfig(
+            stripe_ways=args.stripe,
+            chunk_nbytes=args.stripe_chunk_kb << 10,
+            min_stripe_nbytes=int(args.stripe_min_mb * 2**20))
     runtime = HarvestRuntime(
         budgets, trace=trace, topology=topology,
         policy=TopologyAwarePolicy(topology) if topology else None,
+        coalesce=coalesce,
         monitor_interval_s=(args.monitor_interval_us * 1e-6
                             if args.monitor_interval_us else None))
 
-    mode = "async" if args.prefetch else args.mode
+    mode = "async" if (args.prefetch or coalesce is not None) else args.mode
     eng = HarvestServingEngine(
         cfg, params, max_batch=args.max_batch, block_size=args.block_size,
         num_local_slots=args.local_slots, runtime=runtime,

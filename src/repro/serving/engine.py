@@ -138,6 +138,27 @@ class EngineStats:
                 parts.append(f"{d} occ={occ:.0%} "
                              f"churn={dev.get(f'{d}.churn', 0.0)/2**20:.2f}MiB")
             lines.append("  devices: " + "  ".join(parts))
+        co = self.metrics.get("coalesce")
+        if co and (co.get("batches") or co.get("solo")
+                   or co.get("striped_objects")):
+            batches = co.get("batches", 0)
+            members = co.get("batch_members", 0)
+            lines.append(
+                f"  coalesce: batches {batches}  members {members}  "
+                f"avg batch {members / batches if batches else 0.0:.2f}  "
+                f"solo {co.get('solo', 0)}  "
+                f"setup saved {co.get('saved_setup_s', 0.0) * ms:.3f} ms")
+        xfer = self.metrics.get("transfer", {})
+        s_obj = sum(v for k, v in xfer.items()
+                    if k.endswith(".stripe_objects"))
+        if s_obj:
+            s_chk = sum(v for k, v in xfer.items()
+                        if k.endswith(".stripe_chunks"))
+            ways = max((v for k, v in xfer.items()
+                        if k.endswith(".stripe_ways")), default=0)
+            util = min(s_chk / s_obj / ways, 1.0) if ways else 0.0
+            lines.append(f"  stripe: objects {s_obj}  chunks {s_chk}  "
+                         f"ways {ways}  sub-lane utilization {util:.0%}")
         for ns in ("prefetch", "transfer", "allocator", "monitor"):
             counters = self.metrics.get(ns)
             if not counters:
@@ -199,13 +220,21 @@ class HarvestServingEngine:
         self.kv_mgr.evict_hook = self._on_evict
         self.kv_mgr.reload_hook = self._on_reload
 
+        # transfer coalescing/striping: runtimes built with a
+        # CoalesceConfig carry a TransferPlanner; like prefetch it needs
+        # the event timeline (sync mode is the bit-exact compat path)
+        self._planner = runtime.planner
+        assert self._planner is None or mode == "async", \
+            "transfer coalescing needs the event timeline: pass mode='async'"
+        self._step_plan: List = []   # critical transfers buffered per step
+
         self.prefetcher: Optional[Prefetcher] = None
         if prefetch is not None:
             assert mode == "async", \
                 "prefetch needs the event timeline: pass mode='async'"
             self.prefetcher = Prefetcher(
                 self.kv_mgr, runtime.transfers, prefetch,
-                metrics=runtime.metrics)
+                planner=self._planner, metrics=runtime.metrics)
 
         if self.L_kv:
             self.pool_k = jnp.zeros((self.L_kv, self.n_slots, block_size,
@@ -347,6 +376,9 @@ class HarvestServingEngine:
         if self.mode == "sync":
             self.stats.clock_s += prefill_t
         else:
+            # buffered critical transfers must hit the lanes before the
+            # prefill window advances the clock past their plan time
+            self._flush_step_plan()
             self.runtime.transfers.advance(prefill_t)
             self._sync_clock()
 
@@ -392,7 +424,15 @@ class HarvestServingEngine:
 
     def _charge_writeback(self, ops) -> float:
         """Eviction write-outs: charged to reload_s but off the critical
-        path — in async mode they occupy the outbound link lanes."""
+        path — in async mode they occupy the outbound link lanes.  With a
+        planner the burst is submitted immediately as coalesced batches
+        (one setup per outbound lane) — write-backs never wait for the
+        step flush, so a same-key reload can chain behind them."""
+        if self._planner is not None:
+            _done, t = self._planner.submit(list(ops))
+            self.stats.reload_s += t
+            self.stats.writeback_s += t
+            return t
         t = self.runtime.transfers.schedule(ops)
         self.stats.reload_s += t
         self.stats.writeback_s += t
@@ -404,7 +444,12 @@ class HarvestServingEngine:
     def _charge_critical(self, ops) -> float:
         """Transfers some read of the CURRENT step depends on.  Sync mode
         pre-sums them; async mode queues them and the step waits at the end
-        of its compute window."""
+        of its compute window.  With a planner they are BUFFERED instead —
+        the whole step's critical set is coalesced per lane at
+        :meth:`_flush_step_plan`, which is where their time is charged."""
+        if self._planner is not None:
+            self._step_plan.extend(ops)
+            return 0.0
         t = self.runtime.transfers.schedule(ops)
         self.stats.reload_s += t
         if self.mode == "async":
@@ -413,6 +458,21 @@ class HarvestServingEngine:
             self._step_waits.extend(ops)
             self._step_critical_s += t
         return t
+
+    def _flush_step_plan(self) -> float:
+        """Coalesce + submit the step's buffered critical transfers: the
+        per-step analogue of one batched ``harvest_gather`` per link lane.
+        Called before any clock advance (prefill windows) and after the
+        fetch stage, so batching never delays a transfer past the point
+        its per-object twin would have been submitted."""
+        if self._planner is None or not self._step_plan:
+            return 0.0
+        ops, self._step_plan = self._step_plan, []
+        waits, eff = self._planner.submit(ops)
+        self.stats.reload_s += eff
+        self._step_waits.extend(waits)
+        self._step_critical_s += eff
+        return eff
 
     def _claim_prefetch(self, bid) -> None:
         """If an in-flight prefetch covers this read, wait on it instead of
@@ -478,18 +538,14 @@ class HarvestServingEngine:
         are critical for THIS step (the request decodes immediately); a
         lossy revocation while preempted forces a prefix rebuild."""
         nb = math.ceil((r.pos + 1) / self.bs)
-        t = 0.0
-        lost = False
-        for j in range(nb):
-            if (r.req_id, j) not in self.kv_mgr.table:
-                continue
-            if self.kv_mgr.is_lost(r.req_id, j):
-                lost = True
-                break
-            ops = self.kv_mgr.ensure_resident(r.req_id, j)
-            self._claim_prefetch((r.req_id, j))
-            t += self._charge_critical(ops)
-        if lost:
+        plan = self.kv_mgr.plan_reloads(
+            [(r.req_id, j) for j in range(nb)])
+        for bid in plan.touched:
+            self._claim_prefetch(bid)
+        t = self._charge_critical(plan.ops)
+        if self.mode == "async":
+            self._step_waits.extend(plan.attached)
+        if plan.lost is not None:
             # lossy revocation while preempted: rebuild the prefix
             self.stats.recomputes += 1
             if self.prefetcher is not None:
@@ -515,25 +571,25 @@ class HarvestServingEngine:
 
     def _launch_transfers(self, plan) -> float:
         """Make the planned blocks resident (fetch mode), allocate the
-        append blocks the step writes, and charge/queue the transfers."""
+        append blocks the step writes, and charge/queue the transfers.
+        Each request's blocks go through one batched
+        :meth:`~repro.core.kv_manager.KVOffloadManager.plan_reloads` —
+        repeated keys submit once and blocks already on the wire attach
+        their in-flight transfer to this step's read set."""
         reload_t = 0.0
         for r, bids in plan:
-            lost = False
-            for bid in bids:
-                if bid not in self.kv_mgr.table:
-                    continue
-                if self.kv_mgr.is_lost(*bid):
-                    lost = True
-                    break
-                ops = self.kv_mgr.ensure_resident(*bid)
+            rp = self.kv_mgr.plan_reloads(bids)
+            for bid in rp.touched:
                 self._claim_prefetch(bid)
-                reload_t += self._charge_critical(ops)
                 # keep the pool->row mapping fresh (prefetched blocks were
                 # reloaded before their request had a batch row)
                 ent = self.kv_mgr.table[bid]
                 self.slot_req[ent.local_slot] = r.row
                 self.slot_base[ent.local_slot] = ent.base_pos
-            if lost:
+            reload_t += self._charge_critical(rp.ops)
+            if self.mode == "async":
+                self._step_waits.extend(rp.attached)
+            if rp.lost is not None:
                 # lossy revocation: rebuild the whole prefix (recompute)
                 self.stats.recomputes += 1
                 if self.prefetcher is not None:
@@ -658,6 +714,9 @@ class HarvestServingEngine:
 
         plan = self._plan_fetches()
         reload_t = self._launch_transfers(plan)
+        # coalesce + submit the step's whole critical set: one batched
+        # lane occupancy per link direction (no-op without a planner)
+        reload_t += self._flush_step_plan()
         # timeline-driven pressure: external budget changes land HERE, while
         # this step's transfers are already in flight on the lanes, instead
         # of in the gap between steps (a revoked peer block that this step's
@@ -677,9 +736,11 @@ class HarvestServingEngine:
                                           waiting=self.waiting,
                                           slot_floor=floor):
                 # speculative seconds: accounted as hidden at issue; any
-                # residual wait surfaces as stall in a later step
-                self.stats.reload_s += op.seconds
-                self.stats.hidden_s += op.seconds
+                # residual wait surfaces as stall in a later step.  lane_s
+                # is the occupancy actually charged (== seconds solo, less
+                # the saved setup inside a coalesced batch)
+                self.stats.reload_s += op.lane_s
+                self.stats.hidden_s += op.lane_s
         logits = self._compute()
         self._account_step(compute_t, reload_t)
         self._commit_and_sample(logits)

@@ -1,0 +1,395 @@
+"""Transfer coalescing + chunked multi-lane striping (PR 4).
+
+Covers the TransferPlanner tentpole:
+  * coalescing invariants — property tests (hypothesis): a coalesced
+    batch's lane time is <= the sum of its singles and >= its largest
+    member, per-member completion order and byte conservation hold;
+  * striping semantics — chunk-granular completion, prefix waits, sub-lane
+    routing, same-key chaining through a striped reload;
+  * reload-plan dedup satellite — repeated keys submit once and a block
+    already on the wire attaches its in-flight transfer;
+  * end-to-end — async+coalesce produces bit-identical tokens to async
+    per-object with a clock no worse (strictly better on the reload-heavy
+    workload), and the planner refuses to run on the sync compat path.
+
+The unit tests always run; the ``@given`` property tests skip
+individually when the optional ``hypothesis`` dep is absent.
+"""
+import dataclasses
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:             # minimal-deps env: skip ONLY property tests
+    def given(*_a, **_k):
+        return lambda f: pytest.mark.skip(
+            "property tests need the optional hypothesis dep")(f)
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class _StubStrategies:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _StubStrategies()
+
+from repro.core import (CoalesceConfig, HarvestRuntime, Tier, TransferEngine,
+                        TransferPlanner)
+from repro.core.tiers import H100_NVLINK, TPU_V5E, tpu_v5e_torus
+
+MiB = 2**20
+KiB = 2**10
+
+
+# ---------------------------------------------------------------------------
+# coalescing invariants
+# ---------------------------------------------------------------------------
+
+
+def _mint(te, sizes, src=Tier.PEER_HBM, dst=Tier.LOCAL_HBM):
+    return [te.transfer(("b", i), nb, src, dst) for i, nb in enumerate(sizes)]
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(1, 32 * MiB), min_size=1, max_size=24))
+def test_coalesced_batch_time_bounds(sizes):
+    """Batch lane time <= sum of singles, >= the largest single member, and
+    every member's ready_t is its cumulative byte boundary (per-object
+    completion inside the batch)."""
+    te = TransferEngine(TPU_V5E)
+    pl = TransferPlanner(te, CoalesceConfig(max_batch=len(sizes)))
+    ops = _mint(te, sizes)
+    singles = [t.seconds for t in ops]
+    done, eff = pl.submit(ops)
+    makespan = max(t.ready_t for t in done) - te.now
+    assert makespan <= sum(singles) + 1e-15
+    assert makespan >= max(singles) - 1e-15
+    assert eff == pytest.approx(makespan)
+    # non-decreasing per-member completion at cumulative boundaries
+    ready = sorted(t.ready_t for t in done)
+    acc = te.now
+    for t in done:
+        acc += t.lane_s
+    assert acc == pytest.approx(max(ready))
+    # bytes conserved through scheduling
+    assert sum(t.nbytes for t in done) == sum(sizes)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(1, 8 * MiB), min_size=2, max_size=16),
+       st.integers(2, 6))
+def test_coalesce_max_batch_cap(sizes, cap):
+    te = TransferEngine(H100_NVLINK)
+    pl = TransferPlanner(te, CoalesceConfig(max_batch=cap))
+    done, _eff = pl.submit(_mint(te, sizes))
+    # no batch exceeds the cap
+    by_batch = {}
+    for t in done:
+        if t.batch_id:
+            by_batch.setdefault(t.batch_id, []).append(t)
+    assert all(len(m) <= cap for m in by_batch.values())
+    # batching saves exactly the members' setup latencies beyond the first
+    lat = H100_NVLINK.peer_link.latency
+    saved = sum(t.seconds - t.lane_s for t in done)
+    extra = sum(len(m) - 1 for m in by_batch.values())
+    assert saved == pytest.approx(extra * lat)
+
+
+def test_coalesce_one_setup_per_lane():
+    """8 small same-lane transfers: coalesced makespan is one setup plus
+    summed bytes — the simulated analogue of one batched harvest_gather."""
+    te = TransferEngine(H100_NVLINK)
+    pl = TransferPlanner(te, CoalesceConfig(max_batch=16))
+    ops = _mint(te, [64 * KiB] * 8)
+    done, _ = pl.submit(ops)
+    link = H100_NVLINK.peer_link
+    expect = link.latency + 8 * (64 * KiB) / link.bandwidth
+    assert max(t.ready_t for t in done) == pytest.approx(expect)
+    q = te.metrics.snapshot()["transfer"]
+    assert q["q.peer_in.coalesced"] == 1
+    assert q["q.peer_in.coalesced_members"] == 8
+    assert q["q.peer_in.coalesced_saved_s"] == pytest.approx(7 * link.latency)
+
+
+def test_coalesce_respects_same_key_dependency():
+    """A member whose object has an in-flight write-back cannot ride the
+    batch — it chains behind its dependency on the solo path."""
+    te = TransferEngine(TPU_V5E)
+    pl = TransferPlanner(te, CoalesceConfig())
+    wb = te.submit(te.transfer("hot", 4 * MiB, Tier.LOCAL_HBM,
+                               Tier.PEER_HBM))
+    ops = [te.transfer("hot", 4 * MiB, Tier.PEER_HBM, Tier.LOCAL_HBM),
+           te.transfer("cold", 4 * MiB, Tier.PEER_HBM, Tier.LOCAL_HBM)]
+    done, _ = pl.submit(ops)
+    dep = next(t for t in done if t.key == "hot")
+    free = next(t for t in done if t.key == "cold")
+    assert dep.ready_t >= wb.ready_t + dep.seconds - 1e-15
+    assert free.ready_t == pytest.approx(free.seconds)   # rode the open lane
+    assert dep.batch_id == 0, "dependency-blocked members must not batch"
+
+
+def test_coalesce_disabled_is_per_object():
+    te = TransferEngine(TPU_V5E)
+    pl = TransferPlanner(te, CoalesceConfig(enabled=False))
+    ops = _mint(te, [MiB] * 4)
+    done, eff = pl.submit(ops)
+    assert all(t.batch_id == 0 for t in done)
+    assert eff == pytest.approx(sum(t.seconds for t in done))
+    assert max(t.ready_t for t in done) == pytest.approx(eff)
+
+
+# ---------------------------------------------------------------------------
+# chunked striping
+# ---------------------------------------------------------------------------
+
+
+def _striped(ways=4, chunk=1 * MiB, nbytes=8 * MiB + 321):
+    topo = tpu_v5e_torus((2, 2))
+    te = TransferEngine(None, topology=topo)
+    pl = TransferPlanner(te, CoalesceConfig(
+        stripe_ways=ways, chunk_nbytes=chunk, min_stripe_nbytes=2 * MiB))
+    op = te.transfer("expert", nbytes, Tier.PEER_HBM, Tier.LOCAL_HBM,
+                     device=1)
+    return te, pl, op, pl.prepare([op])
+
+
+def test_stripe_chunks_conserve_bytes_and_route_sublanes():
+    te, _pl, op, chunks = _striped()
+    assert len(chunks) == 9                       # 8 full + short tail
+    assert sum(c.nbytes for c in chunks) == op.nbytes
+    assert chunks[-1].nbytes == op.nbytes - 8 * MiB
+    lanes = {c.lane for c in chunks}
+    assert lanes == {f"peer_in.s{k}" for k in range(4)}
+    assert all(c.parent == op.key for c in chunks)
+    offsets = [c.offset for c in chunks]
+    assert offsets == sorted(offsets) and offsets[0] == 0
+
+
+def test_stripe_small_objects_pass_through():
+    te, pl, _op, _ = _striped()
+    small = te.transfer("kvblk", 64 * KiB, Tier.PEER_HBM, Tier.LOCAL_HBM,
+                        device=1)
+    assert pl.prepare([small]) == [small]
+
+
+def test_stripe_prefix_wait_returns_early():
+    te, pl, op, chunks = _striped()
+    done, _ = pl.submit(chunks)
+    t_half = te.wait_for(done, prefix_nbytes=op.nbytes // 2)
+    t_full = max(c.ready_t for c in done)
+    assert t_half < t_full
+    te.wait_for(done)
+    assert te.now == pytest.approx(t_full)
+
+
+def test_coalesce_config_rejects_degenerate_knobs():
+    """Regression: chunk_nbytes=0 (e.g. --stripe-chunk-kb 0) used to spin
+    split() forever appending zero-byte chunks."""
+    with pytest.raises(ValueError, match="zero-byte"):
+        CoalesceConfig(chunk_nbytes=0)
+    with pytest.raises(ValueError, match="zero-byte"):
+        CoalesceConfig(min_stripe_nbytes=0)
+    with pytest.raises(ValueError, match="max_batch"):
+        CoalesceConfig(max_batch=1)
+    with pytest.raises(ValueError, match="stripe_ways"):
+        CoalesceConfig(stripe_ways=-1)
+
+
+def test_stripe_writeback_and_reload_never_merge():
+    """Regression: a striped write-back and a striped reload of the SAME
+    object submitted in one plan must stay two ordered stripes — the
+    reload's first chunk starts only after the write-back's last chunk —
+    not merge into one concurrent stripe that reads before the write."""
+    te, pl, _op, _ = _striped()
+    out_op = te.transfer("dual", 8 * MiB, Tier.LOCAL_HBM, Tier.PEER_HBM,
+                         device=1)
+    in_op = te.transfer("dual", 8 * MiB, Tier.PEER_HBM, Tier.LOCAL_HBM,
+                        device=1)
+    done, _ = pl.submit(pl.prepare([out_op, in_op]))
+    wb = [t for t in done if t.dst is Tier.PEER_HBM]
+    rl = [t for t in done if t.dst is Tier.LOCAL_HBM]
+    assert wb and rl
+    wb_tail = max(t.ready_t for t in wb)
+    assert min(t.ready_t - t.lane_s for t in rl) >= wb_tail - 1e-15
+
+
+def test_stripe_chains_same_key_writeback():
+    """A striped reload of an object whose write-back is on the wire must
+    start after the write-back, and a LATER same-key transfer chains on
+    the stripe's last-finishing chunk."""
+    te, pl, _op, _ = _striped()
+    wb = te.submit(te.transfer("expert2", 8 * MiB, Tier.LOCAL_HBM,
+                               Tier.PEER_HBM, device=1))
+    op2 = te.transfer("expert2", 8 * MiB, Tier.PEER_HBM, Tier.LOCAL_HBM,
+                      device=1)
+    chunks = pl.prepare([op2])
+    done, _ = pl.submit(chunks)
+    assert min(c.ready_t - c.lane_s for c in done) >= wb.ready_t - 1e-15
+    tail = max(c.ready_t for c in done)
+    again = te.submit(te.transfer("expert2", 1 * MiB, Tier.LOCAL_HBM,
+                                  Tier.PEER_HBM, device=1))
+    assert again.ready_t >= tail + again.seconds - 1e-15
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2 * MiB, 32 * MiB), st.integers(2, 4),
+       st.integers(128 * KiB, 2 * MiB))
+def test_stripe_completion_never_beats_physics(nbytes, ways, chunk):
+    """Striped completion is bounded below by the bytes over the link's
+    aggregate bandwidth plus one setup, and above by the single-path
+    serial time."""
+    te, pl, _op, _ = _striped()
+    op = te.transfer(("e", nbytes), nbytes, Tier.PEER_HBM, Tier.LOCAL_HBM,
+                     device=1)
+    pl.cfg = dataclasses.replace(
+        pl.cfg, stripe_ways=ways, chunk_nbytes=chunk,
+        min_stripe_nbytes=1 * MiB)
+    t0 = te.now
+    done, _ = pl.submit(pl.prepare([op]))
+    full = max(t.ready_t for t in done) - t0
+    link = te.link_spec(Tier.PEER_HBM, Tier.LOCAL_HBM, 1)
+    assert full >= link.latency + nbytes / link.bandwidth - 1e-15
+    assert full <= link.latency * len(done) + nbytes / link.path_bandwidth \
+        + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# reload-plan dedup satellite
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def kv_runtime():
+    from repro.configs import get_config
+    cfg = dataclasses.replace(get_config("yi-6b").reduced(), num_layers=2)
+    runtime = HarvestRuntime({1: 64 * MiB}, hardware=H100_NVLINK)
+    kv = runtime.kv_manager(cfg, block_size=8, num_local_slots=6)
+    return runtime, kv
+
+
+def test_plan_reloads_dedups_repeated_keys(kv_runtime):
+    _runtime, kv = kv_runtime
+    for j in range(3):
+        kv.allocate_block(1, j, j * 8)
+    kv.evict_request(1)
+    plan = kv.plan_reloads([(1, 0), (1, 1), (1, 0), (1, 1), (1, 2), (1, 0)])
+    assert plan.deduped == 3
+    assert kv.stats["reload_deduped"] == 3
+    assert plan.touched == [(1, 0), (1, 1), (1, 2)]
+    assert len(plan.ops) == 3                   # one reload per block, once
+    assert set(plan.by_lane(kv.store.transfers)) == {"peer_in"}
+
+
+def test_plan_reloads_attaches_inflight_transfer(kv_runtime):
+    """A block already on the wire (e.g. a prefetch) must not resubmit —
+    the critical waiter attaches to the existing transfer."""
+    runtime, kv = kv_runtime
+    kv.allocate_block(2, 0, 0)
+    kv.evict_request(2)
+    first = kv.plan_reloads([(2, 0)])
+    assert len(first.ops) == 1
+    tr = runtime.transfers.submit(first.ops[0])   # reload now in flight
+    again = kv.plan_reloads([(2, 0)])
+    assert again.ops == []                        # no double submission
+    assert again.attached == [tr]
+    runtime.transfers.wait_for([tr])
+    quiet = kv.plan_reloads([(2, 0)])
+    assert quiet.ops == [] and quiet.attached == []
+
+
+def test_plan_reloads_stops_at_lost_block(kv_runtime):
+    from repro.core.store import Residency
+    _runtime, kv = kv_runtime
+    for j in range(3):
+        kv.allocate_block(3, j, j * 8)
+    kv.evict_request(3)
+    ent = kv.table[(3, 1)]
+    ent.state = Residency.LOST
+    ent.handle = None
+    plan = kv.plan_reloads([(3, 0), (3, 1), (3, 2)])
+    assert plan.lost == (3, 1)
+    assert plan.touched == [(3, 0)], "ops before the loss still planned"
+    assert len(plan.ops) == 1
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: async+coalesce vs async per-object
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def served_model():
+    import jax
+    from repro.configs import get_config
+    from repro.models import model as M
+    cfg = dataclasses.replace(get_config("yi-6b").reduced(), num_layers=2)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _run_engine(served_model, coalesce, stripe=False):
+    from repro.serving.engine import HarvestServingEngine
+    cfg, params = served_model
+    co = None
+    if coalesce:
+        co = CoalesceConfig(stripe_ways=4 if stripe else 0,
+                            min_stripe_nbytes=1 * MiB)
+    runtime = HarvestRuntime({1: 64 * MiB}, hardware=H100_NVLINK,
+                             coalesce=co)
+    eng = HarvestServingEngine(
+        cfg, params, max_batch=2, block_size=8, num_local_slots=10,
+        max_seq_len=96, runtime=runtime, scheduler="fair", mode="async")
+    reqs = [eng.submit([2 + i, 5, 7, 11, 13 + i, 17, 19, 23, 29, 31],
+                       max_new_tokens=12) for i in range(4)]
+    stats = eng.run(max_steps=800)
+    return eng, [r.output for r in reqs], stats
+
+
+def test_async_coalesce_same_tokens_lower_clock(served_model):
+    _, out_obj, st_obj = _run_engine(served_model, coalesce=False)
+    eng, out_co, st_co = _run_engine(served_model, coalesce=True)
+    # the planner changes WHEN bytes move, never what is decoded
+    assert out_obj == out_co
+    # the workload exercised the tiers and the batcher
+    assert st_obj.metrics["kv"]["evict_to_peer"] > 0
+    co = st_co.metrics["coalesce"]
+    assert co["batches"] > 0 and co["batch_members"] >= 2 * co["batches"]
+    assert co["saved_setup_s"] > 0
+    # reload-heavy: coalescing strictly tightens the clock here
+    assert st_co.clock_s < st_obj.clock_s
+    assert st_co.reload_s < st_obj.reload_s
+    st_co.check_clock_identity()
+    # the batch/stripe reporting lines render
+    assert "coalesce:" in st_co.summary()
+    q = st_co.metrics["transfer"]
+    assert sum(v for k, v in q.items() if k.endswith(".coalesced")) \
+        == co["batches"]
+
+
+def test_engine_rejects_coalesce_on_sync_path(served_model):
+    from repro.serving.engine import HarvestServingEngine
+    cfg, params = served_model
+    runtime = HarvestRuntime({1: 64 * MiB}, hardware=H100_NVLINK,
+                             coalesce=CoalesceConfig())
+    with pytest.raises(AssertionError):
+        HarvestServingEngine(cfg, params, runtime=runtime, mode="sync")
+
+
+def test_simulator_timeline_coalesce_no_worse():
+    """The event-driven CGOPipe path with a planner: identical placement,
+    per-lane batched fetches — throughput must not regress."""
+    from repro.configs import get_config
+    from repro.core import simulate_moe_decode
+    cfg = get_config("qwen2-moe")
+    kw = dict(micro_batch=32, num_micro_batches=3, decode_steps=1)
+    base = HarvestRuntime(hardware=H100_NVLINK)
+    plain = simulate_moe_decode(cfg, H100_NVLINK, 0.5, use_peer=True,
+                                runtime=base, use_timeline=True, **kw)
+    co = HarvestRuntime(hardware=H100_NVLINK,
+                        coalesce=CoalesceConfig(max_batch=64))
+    batched = simulate_moe_decode(cfg, H100_NVLINK, 0.5, use_peer=True,
+                                  runtime=co, use_timeline=True, **kw)
+    assert batched.tokens_per_s >= plain.tokens_per_s * (1 - 1e-9)
+    assert co.planner.stats["batches"] > 0

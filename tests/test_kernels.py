@@ -11,8 +11,10 @@ import pytest
 
 from repro.kernels.flash_attention.ops import mha
 from repro.kernels.flash_attention.ref import flash_attention_ref
-from repro.kernels.harvest_copy.ops import gather_blocks, scatter_blocks
-from repro.kernels.harvest_copy.ref import (harvest_gather_ref,
+from repro.kernels.harvest_copy.ops import (copy_blocks, gather_blocks,
+                                            scatter_blocks)
+from repro.kernels.harvest_copy.ref import (harvest_copy_ref,
+                                            harvest_gather_ref,
                                             harvest_scatter_ref)
 from repro.kernels.moe_ffn.ops import expert_ffn
 from repro.kernels.moe_ffn.ref import moe_ffn_ref
@@ -199,3 +201,87 @@ def test_harvest_gather_scatter_roundtrip(n_slots, n_move, block_elems, dtype):
     # round-trip: gathered-from-src blocks landed in dst at the same slots
     np.testing.assert_array_equal(np.asarray(new_dst[ids]),
                                   np.asarray(src[ids]))
+
+
+@pytest.mark.parametrize("block_elems,chunk", [
+    (1000, 512),     # non-divisible: 512 + 488 tail
+    (130, 64),       # tiny ragged tail
+    (7, 512),        # chunk larger than the block
+    (96, 96),        # exactly one chunk
+])
+def test_harvest_gather_non_divisible_chunk(block_elems, chunk):
+    """Regression: elems % chunk != 0 used to assert; the trailing chunk is
+    now padded and the result sliced back — bit-exact with the oracle."""
+    rng = np.random.default_rng(7)
+    src = jnp.asarray(rng.normal(size=(12, block_elems)), jnp.float32)
+    ids = jnp.asarray([4, 0, 11, 7], jnp.int32)
+    got = gather_blocks(src, ids, chunk=chunk, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(harvest_gather_ref(src, ids)))
+
+
+def test_harvest_scatter_rejects_out_of_range_ids():
+    """Regression: mode="drop" silently discarded writes for bad slot ids —
+    a reload landing nowhere is data loss, so they raise now."""
+    rng = np.random.default_rng(8)
+    dst = jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)
+    staging = jnp.asarray(rng.normal(size=(2, 64)), jnp.float32)
+    with pytest.raises(IndexError, match="out of range"):
+        scatter_blocks(dst, staging, jnp.asarray([3, 8], jnp.int32))
+    with pytest.raises(IndexError, match="out of range"):
+        scatter_blocks(dst, staging, jnp.asarray([-1, 2], jnp.int32))
+    # in-range ids still scatter exactly
+    ok = scatter_blocks(dst, staging, jnp.asarray([3, 5], jnp.int32))
+    np.testing.assert_array_equal(
+        np.asarray(ok),
+        np.asarray(harvest_scatter_ref(dst, staging,
+                                       jnp.asarray([3, 5], jnp.int32))))
+
+
+def test_harvest_gather_rejects_out_of_range_ids():
+    rng = np.random.default_rng(9)
+    src = jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)
+    with pytest.raises(IndexError, match="out of range"):
+        gather_blocks(src, jnp.asarray([0, 9], jnp.int32), interpret=True)
+
+
+@pytest.mark.parametrize("n_src,n_dst,m,block_elems,chunk", [
+    (16, 16, 4, 2048, 512),    # KV-block-sized payloads
+    (8, 12, 3, 256, 64),       # pools of different slot counts
+    (6, 6, 6, 1000, 512),      # whole pool, non-divisible chunk
+    (4, 4, 1, 64, 512),        # single block, chunk > block
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_harvest_copy_fused_matches_ref(n_src, n_dst, m, block_elems, chunk,
+                                        dtype):
+    """The fused gather→scatter skips the staging buffer: copied blocks
+    land bit-exact and every untouched destination slot is preserved."""
+    rng = np.random.default_rng(10)
+    src = jnp.asarray(rng.normal(size=(n_src, block_elems)), dtype)
+    dst = jnp.asarray(rng.normal(size=(n_dst, block_elems)), dtype)
+    sids = jnp.asarray(rng.choice(n_src, size=m, replace=False), jnp.int32)
+    dids = jnp.asarray(rng.choice(n_dst, size=m, replace=False), jnp.int32)
+
+    got = copy_blocks(src, dst, sids, dids, chunk=chunk, interpret=True)
+    ref = harvest_copy_ref(src, dst, sids, dids)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    # equivalent to the two-kernel staging path, without the staging buffer
+    staged = scatter_blocks(dst, gather_blocks(src, sids, chunk=chunk,
+                                               interpret=True), dids)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(staged))
+    # untouched rows preserved
+    untouched = np.setdiff1d(np.arange(n_dst), np.asarray(dids))
+    np.testing.assert_array_equal(np.asarray(got[untouched]),
+                                  np.asarray(dst[untouched]))
+
+
+def test_harvest_copy_rejects_out_of_range_ids():
+    rng = np.random.default_rng(11)
+    src = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
+    dst = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
+    with pytest.raises(IndexError, match="out of range"):
+        copy_blocks(src, dst, jnp.asarray([0, 4], jnp.int32),
+                    jnp.asarray([0, 1], jnp.int32), interpret=True)
+    with pytest.raises(IndexError, match="out of range"):
+        copy_blocks(src, dst, jnp.asarray([0, 1], jnp.int32),
+                    jnp.asarray([0, -2], jnp.int32), interpret=True)
