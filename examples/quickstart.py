@@ -1,10 +1,16 @@
-"""Quickstart: the Harvest public API in ~70 lines.
+"""Quickstart: the Harvest public API in ~100 lines.
 
 One :class:`HarvestRuntime` composes the allocator, the availability
 monitor and the transfer engine; a :class:`HarvestStore` client places
 tiered objects with a durability class.  The trace shrinks a peer's
 budget, revocation fires, and the two durability classes diverge: BACKED
 objects fall back to host, RECONSTRUCTIBLE objects become LOST.
+
+The second half serves a real (tiny) model through the request-lifecycle
+API: ``runtime.server(...)`` wraps the engine in a :class:`HarvestServer`,
+a seeded Poisson :class:`Workload` drives SLO-classed requests onto the
+simulated clock, tokens stream through a callback, and the stats report
+per-class TTFT/TPOT percentiles and SLO-goodput.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -70,6 +76,63 @@ def main():
               f"{ent.state.value}")
 
     print("\nunified metrics:", runtime.stats())
+
+    # --- request-lifecycle serving: HarvestServer + workload -------------
+    serve_quickstart()
+
+
+def serve_quickstart():
+    """Serve a tiny model under a clock-driven, SLO-classed workload."""
+    import jax
+
+    from repro.configs.base import ModelConfig
+    from repro.models import model as M
+    from repro.serving import ServeRequest, TenantSpec, Workload
+
+    cfg = ModelConfig(name="tiny-dense", family="dense", source="example",
+                      num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                      d_ff=128, vocab_size=256)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+
+    runtime = HarvestRuntime({1: 64 * 2**20})
+    server = runtime.server(cfg, params, max_batch=2, block_size=8,
+                            num_local_slots=12, scheduler="fair",
+                            admission="deadline")
+
+    # one hand-submitted streaming request…
+    streamed = []
+    handle = server.submit(ServeRequest(
+        prompt=[5, 7, 11], max_new_tokens=6, slo="latency",
+        ttft_slo_s=2e-3, on_token=lambda tok, _r: streamed.append(tok)))
+
+    # …plus a seeded two-tenant Poisson mix arriving on the clock
+    workload = Workload(
+        num_requests=8, arrival="poisson", rate=30_000.0, seed=42,
+        vocab=(3, 250),
+        tenants=(TenantSpec("interactive", weight=2, slo="latency",
+                            priority=1, prompt_len=(4, 12),
+                            max_new_tokens=6, ttft_slo_s=2e-3),
+                 TenantSpec("background", weight=1, slo="batch",
+                            prompt_len=(12, 32), max_new_tokens=8)))
+    stats = server.run(workload)
+
+    print("\n--- request-lifecycle serving ---")
+    print(stats.summary())
+    if handle.rejected:
+        print(f"streamed request {handle.req_id}: shed by admission")
+    else:
+        print(f"streamed request {handle.req_id}: tokens={streamed} "
+              f"ttft={handle.ttft_s * 1e6:.1f}us "
+              f"e2e={handle.e2e_s * 1e6:.1f}us")
+    for h in server.handles[1:4]:
+        if h.rejected:   # deadline admission may shed under tight SLOs
+            print(f"  req {h.req_id}: arrival {h.arrival_t * 1e6:7.1f}us "
+                  f"-> shed  [{h.state}]")
+            continue
+        print(f"  req {h.req_id}: arrival {h.arrival_t * 1e6:7.1f}us -> "
+              f"admit {h.admit_t * 1e6:7.1f}us -> first token "
+              f"{h.first_token_t * 1e6:7.1f}us -> finish "
+              f"{h.finish_t * 1e6:7.1f}us  [{h.state}]")
 
 
 if __name__ == "__main__":

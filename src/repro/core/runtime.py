@@ -119,6 +119,16 @@ class HarvestRuntime:
         self.clients[client] = reb
         return reb
 
+    def server(self, cfg: ModelConfig, params, **kwargs):
+        """The request-lifecycle serving front door
+        (:class:`~repro.serving.server.HarvestServer`) over this
+        runtime: SLO-classed requests arriving on the transfer-engine
+        clock, pluggable admission, per-request latency records.  Engine
+        kwargs (``scheduler``, ``mode``, ``prefetch``, ``admission``,
+        pool geometry, …) pass through."""
+        from repro.serving.server import HarvestServer
+        return HarvestServer(cfg, params, runtime=self, **kwargs)
+
     def prefetcher(self, kv_client: str = "kv",
                    moe_client: Optional[str] = None,
                    config=None):

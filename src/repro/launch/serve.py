@@ -15,6 +15,13 @@ sub-lanes with chunk-granular completion):
 
   PYTHONPATH=src python -m repro.launch.serve --topology v5e-torus-2x2 \
       --coalesce --stripe 4 --prefetch
+
+Request-lifecycle serving (clock-driven arrivals, SLO classes, admission
+policies; per-class TTFT/TPOT percentiles + SLO-goodput in the summary):
+
+  PYTHONPATH=src python -m repro.launch.serve --workload poisson \
+      --arrival-rate 20000 --tenants latency:2,batch:1 --slo-ms 1.5 \
+      --admission deadline --scheduler fair
 """
 from __future__ import annotations
 
@@ -65,6 +72,26 @@ def main():
     ap.add_argument("--stripe-min-mb", type=float, default=4.0,
                     help="size floor in MiB below which objects are never "
                          "striped (default 4)")
+    ap.add_argument("--workload", default="legacy",
+                    choices=["legacy", "poisson", "bursty", "diurnal"],
+                    help="arrival process driving the request-lifecycle "
+                         "API (requests become visible at their clock "
+                         "arrival time); 'legacy' submits everything "
+                         "up-front through the compat wrapper")
+    ap.add_argument("--arrival-rate", type=float, default=20000.0,
+                    help="mean arrival rate in requests per SIMULATED "
+                         "second (the transfer-engine clock runs in "
+                         "sub-millisecond territory for reduced models)")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="TTFT SLO for the latency class in simulated ms "
+                         "(e2e SLO is 10x); default: no deadlines")
+    ap.add_argument("--tenants", default="throughput:1",
+                    help="comma-separated SLO-class mix 'class:weight' "
+                         "(classes: latency, throughput, batch), e.g. "
+                         "'latency:2,batch:1'")
+    ap.add_argument("--admission", default="all",
+                    choices=["all", "headroom", "deadline"],
+                    help="admission policy in front of the scheduler")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.monitor_interval_us and not args.with_churn:
@@ -80,7 +107,7 @@ def main():
                             HarvestRuntime, PrefetchConfig,
                             TopologyAwarePolicy, get_topology)
     from repro.models import model as M
-    from repro.serving import HarvestServingEngine
+    from repro.serving import TenantSpec, Workload
 
     cfg = get_config(args.arch).reduced()
     params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
@@ -107,27 +134,54 @@ def main():
                             if args.monitor_interval_us else None))
 
     mode = "async" if (args.prefetch or coalesce is not None) else args.mode
-    eng = HarvestServingEngine(
+    server = runtime.server(
         cfg, params, max_batch=args.max_batch, block_size=args.block_size,
-        num_local_slots=args.local_slots, runtime=runtime,
+        num_local_slots=args.local_slots,
         scheduler=args.scheduler, durability=args.durability, seed=args.seed,
-        mode=mode, prefetch=PrefetchConfig() if args.prefetch else None)
+        mode=mode, prefetch=PrefetchConfig() if args.prefetch else None,
+        admission=args.admission)
+    eng = server.engine
 
-    rng = np.random.default_rng(args.seed)
-    reqs = []
-    for _ in range(args.num_requests):
-        n = int(rng.integers(5, 40))
-        reqs.append(eng.submit(list(rng.integers(3, min(cfg.vocab_size, 250),
-                                                 size=n)),
-                               args.max_new_tokens))
-    stats = eng.run()
-    print(f"\n{len(eng.finished)}/{len(reqs)} requests finished")
+    if args.workload == "legacy":
+        # compat wrapper: every request visible at clock 0, one class
+        rng = np.random.default_rng(args.seed)
+        reqs = []
+        for _ in range(args.num_requests):
+            n = int(rng.integers(5, 40))
+            reqs.append(eng.submit(
+                list(rng.integers(3, min(cfg.vocab_size, 250), size=n)),
+                args.max_new_tokens))
+        stats = eng.run()
+    else:
+        tenants = []
+        for part in args.tenants.split(","):
+            klass, _, weight = part.partition(":")
+            klass = klass.strip()
+            slo_s = args.slo_ms * 1e-3 if args.slo_ms else None
+            tenants.append(TenantSpec(
+                klass, weight=float(weight or 1), slo=klass,
+                priority=1 if klass == "latency" else 0,
+                prompt_len=(5, 20) if klass == "latency" else (5, 40),
+                max_new_tokens=args.max_new_tokens,
+                ttft_slo_s=slo_s if klass == "latency" else None,
+                e2e_slo_s=slo_s * 10 if (slo_s and klass == "latency")
+                else None))
+        workload = Workload(
+            num_requests=args.num_requests, arrival=args.workload,
+            rate=args.arrival_rate, seed=args.seed, tenants=tuple(tenants),
+            vocab=(3, min(cfg.vocab_size, 250)))
+        stats = server.run(workload)
+        reqs = [h._req for h in server.handles]
+    served = [r for r in eng.finished if r.state == "done"]
+    print(f"\n{len(served)}/{len(reqs)} requests served "
+          f"({stats.rejected} shed by admission)")
     print(stats.summary())
     print(f"kv manager: {dict(eng.kv_mgr.stats)}")
     print(f"allocator:  {dict(eng.allocator.stats)}")
     print(f"tiers:      {runtime.tier_counts()}")
-    for r in eng.finished[:4]:
-        print(f"  req {r.req_id}: {len(r.prompt)} prompt -> {r.output[:8]}…")
+    for r in served[:4]:
+        print(f"  req {r.req_id} [{r.slo}] t={r.arrival_t * 1e3:.3f}ms: "
+              f"{len(r.prompt)} prompt -> {r.output[:8]}…")
 
 
 if __name__ == "__main__":

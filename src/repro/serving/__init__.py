@@ -1,3 +1,12 @@
-from repro.serving.engine import EngineStats, HarvestServingEngine
-from repro.serving.scheduler import (SCHEDULERS, CompletelyFairScheduler,
-                                     FCFSScheduler, Request)
+from repro.serving.admission import (ADMISSION, AdmissionPolicy,
+                                     AdmissionView, KVHeadroomAdmission,
+                                     SLODeadlineAdmission)
+from repro.serving.engine import (EngineStats, HarvestServingEngine,
+                                  RequestRecord)
+from repro.serving.scheduler import (SCHEDULERS, SLO_CLASSES,
+                                     CompletelyFairScheduler, FCFSScheduler,
+                                     Request)
+from repro.serving.server import HarvestServer, RequestHandle, ServeRequest
+from repro.serving.workload import (ARRIVALS, TenantSpec, Workload,
+                                    bursty_arrivals, diurnal_arrivals,
+                                    poisson_arrivals, trace_arrivals)

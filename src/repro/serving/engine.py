@@ -43,14 +43,30 @@ and identical across modes: the pipeline changes *when* bytes move, never
 
 Accounting identity (asserted by ``EngineStats.check_clock_identity``)::
 
-    clock_s == prefill_s + compute_s + (reload_s - writeback_s) - hidden_s
+    clock_s == prefill_s + compute_s + (reload_s - writeback_s)
+               - hidden_s + idle_s
 
 ``reload_s`` is every simulated transfer second; ``writeback_s`` the
 subset charged off the critical path (eviction write-outs); ``hidden_s``
-the critical-path transfer seconds absorbed under compute windows.
+the critical-path transfer seconds absorbed under compute windows;
+``idle_s`` the request-free gaps a clock-driven arrival process leaves
+between bursts.
+
+Request lifecycle (the PR 5 front door — :mod:`repro.serving.server`
+wraps this engine in the :class:`HarvestServer` facade)::
+
+    arrival_t -> [queue] -> admit -> prefill -> decode/stream -> retire
+
+Requests become visible at ``arrival_t`` on the engine clock (legacy
+``submit`` arrives *now*, which keeps the seed goldens bit-exact), an
+:class:`~repro.serving.admission.AdmissionPolicy` gates the queue in
+front of the FCFS/CFS schedulers, and every retired request leaves a
+:class:`RequestRecord` (queue wait, TTFT, TPOT/ITL, end-to-end latency,
+SLO attainment) aggregated by ``EngineStats.summary()``.
 """
 from __future__ import annotations
 
+import heapq
 import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -66,7 +82,81 @@ from repro.core.prefetch import Prefetcher, PrefetchConfig
 from repro.core.runtime import HarvestRuntime
 from repro.core.tiers import H100_NVLINK, HardwareModel
 from repro.models import model as M
-from repro.serving.scheduler import SCHEDULERS, Request
+from repro.serving.admission import ADMISSION, AdmissionPolicy, AdmissionView
+from repro.serving.scheduler import SCHEDULERS, SLO_CLASSES, Request
+
+
+@dataclass
+class RequestRecord:
+    """The per-request lifecycle record retired into ``EngineStats``.
+
+    All timestamps are simulated-clock seconds (sync mode derives them
+    from the step clock).  ``state`` is ``done`` for served requests and
+    ``rejected`` for admission-shed ones (those have no token
+    timestamps and count against SLO attainment, not goodput).
+    """
+    req_id: int
+    slo: str
+    tenant: str
+    state: str
+    arrival_t: float
+    enqueue_t: float
+    admit_t: Optional[float]
+    first_token_t: Optional[float]
+    finish_t: Optional[float]
+    prompt_tokens: int
+    output_tokens: int
+    preemptions: int
+    ttft_slo_s: Optional[float] = None
+    e2e_slo_s: Optional[float] = None
+
+    @property
+    def queue_wait_s(self) -> Optional[float]:
+        """Arrival -> FIRST admission (preemption re-admissions excluded)."""
+        if self.admit_t is None:
+            return None
+        return self.admit_t - self.arrival_t
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.first_token_t is None:
+            return None
+        return self.first_token_t - self.arrival_t
+
+    @property
+    def e2e_s(self) -> Optional[float]:
+        if self.finish_t is None:
+            return None
+        return self.finish_t - self.arrival_t
+
+    @property
+    def tpot_s(self) -> Optional[float]:
+        """Time per output token after the first (a.k.a. ITL)."""
+        if self.first_token_t is None or self.finish_t is None:
+            return None
+        return ((self.finish_t - self.first_token_t)
+                / max(self.output_tokens - 1, 1))
+
+    @property
+    def slo_ok(self) -> bool:
+        """Served AND inside every deadline the request carried."""
+        if self.state != "done":
+            return False
+        if self.ttft_slo_s is not None and (
+                self.ttft_s is None or self.ttft_s > self.ttft_slo_s):
+            return False
+        if self.e2e_slo_s is not None and (
+                self.e2e_s is None or self.e2e_s > self.e2e_slo_s):
+            return False
+        return True
+
+
+def _pct(xs: List[float], q: float) -> float:
+    """Nearest-rank percentile; 0.0 on an empty sample (guarded)."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    return s[min(int(round(q / 100.0 * (len(s) - 1))), len(s) - 1)]
 
 
 @dataclass
@@ -78,16 +168,62 @@ class EngineStats:
     writeback_s: float = 0.0  # subset of reload_s off the critical path
     hidden_s: float = 0.0     # critical transfer seconds hidden under compute
     stall_s: float = 0.0      # async: time the step waited on its reads
+    idle_s: float = 0.0       # request-free gaps between clocked arrivals
     steps: int = 0
     tokens_out: int = 0
     recomputes: int = 0
     preemptions: int = 0
+    rejected: int = 0         # admission-shed requests
+    #: per-request lifecycle records, appended at retire/shed
+    requests: List[RequestRecord] = field(default_factory=list)
     #: unified MetricsRegistry snapshot (transfer queues, kv, prefetch, …),
     #: populated by ``HarvestServingEngine.run``
     metrics: Dict[str, dict] = field(default_factory=dict)
 
     def throughput(self) -> float:
-        return self.tokens_out / max(self.clock_s, 1e-12)
+        """Simulated tokens/s; 0.0 for zero-token or zero-clock runs (an
+        empty run must report nothing, not tokens/epsilon)."""
+        if self.tokens_out <= 0 or self.clock_s <= 0:
+            return 0.0
+        return self.tokens_out / self.clock_s
+
+    # ------------------------------------------------- request aggregation
+    def records(self, slo: Optional[str] = None,
+                tenant: Optional[str] = None) -> List[RequestRecord]:
+        return [r for r in self.requests
+                if (slo is None or r.slo == slo)
+                and (tenant is None or r.tenant == tenant)]
+
+    def latency_percentiles(self, slo: Optional[str] = None
+                            ) -> Dict[str, float]:
+        """p50/p99 of TTFT, TPOT (ITL), queue wait and end-to-end latency
+        over the retired records (optionally one SLO class)."""
+        recs = [r for r in self.records(slo) if r.state == "done"]
+        out: Dict[str, float] = {"n": float(len(recs))}
+        for name, get in (("ttft", lambda r: r.ttft_s),
+                          ("tpot", lambda r: r.tpot_s),
+                          ("queue_wait", lambda r: r.queue_wait_s),
+                          ("e2e", lambda r: r.e2e_s)):
+            xs = [v for r in recs if (v := get(r)) is not None]
+            out[f"{name}_p50"] = _pct(xs, 50)
+            out[f"{name}_p99"] = _pct(xs, 99)
+        return out
+
+    def slo_attainment(self, slo: Optional[str] = None) -> float:
+        """Fraction of requests (served + shed) that met their SLO."""
+        recs = self.records(slo)
+        if not recs:
+            return 0.0
+        return sum(1 for r in recs if r.slo_ok) / len(recs)
+
+    def goodput(self, slo: Optional[str] = None) -> float:
+        """SLO-goodput: output tokens of requests that met every deadline
+        they carried, per simulated second.  Guarded like
+        :meth:`throughput` — zero-clock runs report 0.0."""
+        if self.clock_s <= 0:
+            return 0.0
+        good = sum(r.output_tokens for r in self.records(slo) if r.slo_ok)
+        return good / self.clock_s
 
     @property
     def critical_reload_s(self) -> float:
@@ -99,16 +235,19 @@ class EngineStats:
         """The engine's clock identity: every simulated second is accounted
         exactly once.  (The pre-refactor engine silently dropped prefill- and
         preemption-time eviction transfers from the clock; they are now the
-        explicit ``writeback_s`` class.)"""
+        explicit ``writeback_s`` class.  Clock-driven arrivals add the
+        ``idle_s`` class: request-free gaps the engine slept through.)"""
         expect = (self.prefill_s + self.compute_s
-                  + self.reload_s - self.writeback_s - self.hidden_s)
+                  + self.reload_s - self.writeback_s - self.hidden_s
+                  + self.idle_s)
         if not math.isclose(self.clock_s, expect, rel_tol=rel,
                             abs_tol=abs_tol):
             raise AssertionError(
                 f"clock identity broken: clock_s={self.clock_s!r} != "
                 f"prefill {self.prefill_s!r} + compute {self.compute_s!r} + "
                 f"reload {self.reload_s!r} - writeback {self.writeback_s!r} "
-                f"- hidden {self.hidden_s!r} = {expect!r}")
+                f"- hidden {self.hidden_s!r} + idle {self.idle_s!r} "
+                f"= {expect!r}")
         return True
 
     def summary(self) -> str:
@@ -125,8 +264,23 @@ class EngineStats:
             f"writeback {self.writeback_s * ms:7.3f} ms   "
             f"hidden {self.hidden_s * ms:10.3f} ms   "
             f"stall {self.stall_s * ms:8.3f} ms",
-            f"  preemptions {self.preemptions}   recomputes {self.recomputes}",
+            f"  preemptions {self.preemptions}   recomputes {self.recomputes}"
+            f"   idle {self.idle_s * ms:.3f} ms   rejected {self.rejected}",
         ]
+        if self.requests:
+            classes = [c for c in SLO_CLASSES
+                       if any(r.slo == c for r in self.requests)]
+            for c in classes:
+                pc = self.latency_percentiles(c)
+                lines.append(
+                    f"  {c:10s} n={len(self.records(c))}  "
+                    f"ttft p50/p99 {pc['ttft_p50'] * ms:.3f}/"
+                    f"{pc['ttft_p99'] * ms:.3f} ms  "
+                    f"tpot p50/p99 {pc['tpot_p50'] * ms:.3f}/"
+                    f"{pc['tpot_p99'] * ms:.3f} ms  "
+                    f"wait p99 {pc['queue_wait_p99'] * ms:.3f} ms  "
+                    f"goodput {self.goodput(c):.0f} tok/s  "
+                    f"SLO {self.slo_attainment(c):.0%}")
         dev = self.metrics.get("device")
         if dev:
             ids = sorted({k.split(".", 1)[0] for k in dev},
@@ -183,7 +337,8 @@ class HarvestServingEngine:
                  scheduler: str = "fcfs", durability: str = "host_backed",
                  temperature: float = 0.0, seed: int = 0,
                  overlap_reloads: bool = True, mode: str = "sync",
-                 prefetch: Optional[PrefetchConfig] = None):
+                 prefetch: Optional[PrefetchConfig] = None,
+                 admission: "str | AdmissionPolicy" = "all"):
         assert cfg.has_kv_cache or cfg.family == "ssm"
         assert mode in ("sync", "async"), f"unknown clock mode {mode!r}"
         # the engine runs over ONE HarvestRuntime; the allocator/monitor/
@@ -208,6 +363,8 @@ class HarvestServingEngine:
         self.monitor = runtime.monitor
         self.scheduler = SCHEDULERS[scheduler]() if isinstance(scheduler, str) \
             else scheduler
+        self.admission: AdmissionPolicy = (
+            ADMISSION[admission]() if isinstance(admission, str) else admission)
 
         self.L_kv = M.num_kv_layers(cfg)
         nkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
@@ -253,6 +410,9 @@ class HarvestServingEngine:
         self.waiting: List[Request] = []
         self.running: List[Request] = []
         self.finished: List[Request] = []
+        #: clock-ordered future arrivals: (arrival_t, req_id, Request)
+        #: heap; requests move to ``waiting`` once the clock reaches them
+        self._arrivals: List[Tuple[float, int, Request]] = []
         self.stats = EngineStats()
         self._next_id = 0
         self._decode_fn = jax.jit(
@@ -343,11 +503,84 @@ class HarvestServingEngine:
             self.states = (m_full, s_full)
 
     # ------------------------------------------------------------ submit
+    def _now(self) -> float:
+        """The engine clock (same basis as ``stats.clock_s``): the step
+        clock in sync mode, the transfer timeline in async mode."""
+        if self.mode == "sync":
+            return self.stats.clock_s
+        return self.runtime.transfers.now - self._clock0
+
     def submit(self, prompt: List[int], max_new_tokens: int) -> Request:
-        r = Request(self._next_id, list(prompt), max_new_tokens)
+        """Legacy compat wrapper: the request arrives *now* (before
+        ``run`` that is clock 0, which keeps the seed goldens bit-exact).
+        The lifecycle API is :meth:`submit_request` / ``HarvestServer``."""
+        return self.submit_request(prompt=prompt,
+                                   max_new_tokens=max_new_tokens)
+
+    def submit_request(self, *, prompt: List[int], max_new_tokens: int,
+                       arrival_t: Optional[float] = None,
+                       slo: str = "throughput", priority: int = 0,
+                       tenant: str = "default",
+                       ttft_slo_s: Optional[float] = None,
+                       e2e_slo_s: Optional[float] = None,
+                       on_token=None) -> Request:
+        """Request-lifecycle entry point: the request becomes visible to
+        admission at ``arrival_t`` on the engine clock (default: now)."""
+        if not prompt:
+            raise ValueError("empty prompt: a request must carry at least "
+                             "one prompt token")
+        if max_new_tokens <= 0:
+            raise ValueError(f"max_new_tokens must be positive, got "
+                             f"{max_new_tokens}")
+        if slo not in SLO_CLASSES:
+            raise ValueError(f"unknown SLO class {slo!r}; expected one of "
+                             f"{SLO_CLASSES}")
+        now = self._now()
+        if arrival_t is None:
+            arrival_t = now
+        if arrival_t < now:
+            raise ValueError(f"arrival_t={arrival_t} is in the engine's "
+                             f"past (clock is at {now})")
+        r = Request(self._next_id, list(prompt), max_new_tokens,
+                    arrival_t=arrival_t, slo=slo, priority=priority,
+                    tenant=tenant, ttft_slo_s=ttft_slo_s,
+                    e2e_slo_s=e2e_slo_s, on_token=on_token,
+                    enqueue_t=arrival_t, enqueue_step=self.stats.steps)
         self._next_id += 1
-        self.waiting.append(r)
+        if arrival_t <= now:
+            self.waiting.append(r)
+        else:
+            heapq.heappush(self._arrivals, (arrival_t, r.req_id, r))
         return r
+
+    def next_arrival_t(self) -> Optional[float]:
+        """Clock time of the earliest not-yet-visible request."""
+        return self._arrivals[0][0] if self._arrivals else None
+
+    def _admit_arrivals(self) -> int:
+        """Move every request whose ``arrival_t`` the clock has reached
+        into the waiting queue (arrival order)."""
+        now = self._now()
+        n = 0
+        while self._arrivals and self._arrivals[0][0] <= now + 1e-15:
+            _, _, r = heapq.heappop(self._arrivals)
+            self.waiting.append(r)
+            n += 1
+        return n
+
+    def _idle_until(self, t: float) -> None:
+        """Advance the clock through a request-free gap to the next
+        arrival.  Idle seconds are their own accounting class — the
+        clock identity stays exact under bursty workloads."""
+        dt = t - self._now()
+        if dt <= 0:
+            return
+        self.stats.idle_s += dt
+        if self.mode == "sync":
+            self.stats.clock_s += dt
+        else:
+            self.runtime.transfers.drain_until(self._clock0 + t)
+            self._sync_clock()
 
     # ------------------------------------------------------------ prefill
     def _prefill(self, r: Request) -> None:
@@ -371,7 +604,8 @@ class HarvestServingEngine:
         logits, out = self._prefill_fn(self.params, batch)
         row = r.row
         # simulated prefill cost: read weights once + prefix compute
-        prefill_t = max(n * self._t_flop_tok, self._t_weights)
+        # (the same estimate deadline admission sheds against)
+        prefill_t = self._est_prefill_s(r)
         self.stats.prefill_s += prefill_t
         if self.mode == "sync":
             self.stats.clock_s += prefill_t
@@ -406,6 +640,12 @@ class HarvestServingEngine:
         if not r.output:
             r.output.append(int(nxt))
             self.stats.tokens_out += 1
+            # TTFT lands here exactly once: a rollback re-prefill replays
+            # the prefix without re-emitting (or re-timestamping) a token
+            if r.first_token_t is None:
+                r.first_token_t = self._now()
+            if r.on_token is not None:
+                r.on_token(int(nxt), r)
         self.row_tokens[row] = r.output[-1]
         self.row_pos[row] = len(r.prompt) + len(r.output) - 1
         r.needs_prefill = False
@@ -494,6 +734,7 @@ class HarvestServingEngine:
         ops = self.kv_mgr.evict_request(victim.req_id)
         self._charge_writeback(ops)
         victim.state = "preempted"
+        victim.preempt_count += 1
         self.running.remove(victim)
         self.free_rows.append(victim.row)
         self.row_of.pop(victim.req_id, None)
@@ -507,24 +748,66 @@ class HarvestServingEngine:
         as the prefetcher's slot floor, so the two can never diverge."""
         return math.ceil((len(req.prompt) + len(req.output) + 1) / self.bs) + 1
 
+    def _est_prefill_s(self, req: Request) -> float:
+        """Lower-bound service time to the first token: the prefill
+        compute window.  Deadline-aware admission sheds a queued request
+        once even this cannot land inside its TTFT SLO."""
+        n = len(req.prompt) + len(req.output)
+        return max(n * self._t_flop_tok, self._t_weights)
+
+    def _shed(self, r: Request, now: float) -> None:
+        """Load shedding: reject a queued request without spending a
+        prefill flop on it.  It retires in state ``rejected`` with a
+        lifecycle record (counts against SLO attainment, not goodput)."""
+        r.state = "rejected"
+        r.finish_t = now
+        self.finished.append(r)
+        self.stats.rejected += 1
+        self._record(r)
+
+    def _record(self, r: Request) -> None:
+        self.stats.requests.append(RequestRecord(
+            req_id=r.req_id, slo=r.slo, tenant=r.tenant, state=r.state,
+            arrival_t=r.arrival_t, enqueue_t=r.enqueue_t, admit_t=r.admit_t,
+            first_token_t=r.first_token_t, finish_t=r.finish_t,
+            prompt_tokens=len(r.prompt), output_tokens=len(r.output),
+            preemptions=r.preempt_count, ttft_slo_s=r.ttft_slo_s,
+            e2e_slo_s=r.e2e_slo_s))
+
     def _admit(self) -> None:
-        """Capacity-aware admission: the pinned working sets must fit the
-        local pool, with one append-headroom block per request.  Admitted
-        requests are prefilled (new / rolled back) or resumed (reload their
-        evicted prefix)."""
-        pinned_blocks = sum(self._blocks_needed(r) for r in self.running)
+        """Admission: the :class:`AdmissionPolicy` gates/orders the queue
+        (and may shed), then the capacity filter keeps the pinned working
+        sets inside the local pool (one append-headroom block per
+        request), then the scheduler assigns batch rows.  Admitted
+        requests are prefilled (new / rolled back) or resumed (reload
+        their evicted prefix)."""
+        now = self._now()
+        view = AdmissionView(
+            now=now, free_rows=len(self.free_rows), num_slots=self.n_slots,
+            pinned_blocks=sum(self._blocks_needed(r) for r in self.running),
+            num_running=len(self.running),
+            blocks_needed=self._blocks_needed,
+            est_prefill_s=self._est_prefill_s)
+        eligible, shed = self.admission.select(list(self.waiting), view)
+        for r in shed:
+            self.waiting.remove(r)
+            self._shed(r, now)
+        deferred = [w for w in self.waiting if w not in eligible]
+        pinned_blocks = view.pinned_blocks
         admissible = []
-        for cand in list(self.waiting):
+        for cand in eligible:
             need = self._blocks_needed(cand)
             if pinned_blocks + need > self.n_slots or not self.free_rows:
                 break
             pinned_blocks += need
             admissible.append(cand)
-        rest = [w for w in self.waiting if w not in admissible]
+        rest = [w for w in eligible if w not in admissible] + deferred
         self.waiting = admissible
         admitted = self.scheduler.admit(self.waiting, self.free_rows)
         self.waiting = self.waiting + rest
         for r in admitted:
+            if r.admit_t is None:          # queue wait ends at FIRST admit
+                r.admit_t = now
             self.running.append(r)
             self.row_of[r.req_id] = r.row
             self.kv_mgr.pinned.add(r.req_id)
@@ -668,8 +951,11 @@ class HarvestServingEngine:
         self._sync_clock()
 
     def _commit_and_sample(self, logits) -> None:
-        """Sample one token per running request and commit it."""
+        """Sample one token per running request, commit it, and stream it
+        to the request's callback (the clock has already advanced past
+        this step's window, so the timestamp is the token's ready time)."""
         logits_np = np.asarray(logits)
+        now = self._now()
         for r in self.running:
             tok = self._sample(logits_np[r.row])
             r.output.append(tok)
@@ -677,13 +963,20 @@ class HarvestServingEngine:
             self.stats.tokens_out += 1
             self.row_tokens[r.row] = tok
             self.row_pos[r.row] = r.pos
+            if r.first_token_t is None:
+                r.first_token_t = now
+            if r.on_token is not None:
+                r.on_token(tok, r)
 
     def _retire(self) -> None:
         """Release finished requests: batch row, KV blocks, prefetches."""
+        now = self._now()
         for r in list(self.running):
             if not r.done:
                 continue
             r.state = "done"
+            r.finish_t = now
+            self._record(r)
             self.running.remove(r)
             self.finished.append(r)
             self.free_rows.append(r.row)
@@ -698,9 +991,16 @@ class HarvestServingEngine:
     # -------------------------------------------------------------- step
     def step(self) -> bool:
         """One engine iteration through the staged pipeline.  Returns False
-        when all work is done."""
+        when all work is done.  Clock-driven arrivals become visible
+        first; a request-free gap fast-forwards the clock to the next
+        arrival (charged as ``idle_s``) instead of spinning steps."""
+        self._admit_arrivals()
         if not (self.waiting or self.running):
-            return False
+            nxt = self.next_arrival_t()
+            if nxt is None:
+                return False
+            self._idle_until(nxt)
+            self._admit_arrivals()
         sched_step = self.stats.steps
         self.kv_mgr.pinned = {r.req_id for r in self.running}
         self._step_waits = []
@@ -710,7 +1010,7 @@ class HarvestServingEngine:
         self._admit()
         if not self.running:
             self.stats.steps += 1
-            return bool(self.waiting)
+            return bool(self.waiting or self._arrivals)
 
         plan = self._plan_fetches()
         reload_t = self._launch_transfers(plan)
@@ -767,6 +1067,11 @@ class HarvestServingEngine:
         for _ in range(max_steps):
             if not self.step():
                 break
+        return self.finalize()
+
+    def finalize(self) -> EngineStats:
+        """Snapshot the unified metrics and assert the clock identity.
+        Idempotent — ``run``/``run_until`` call it after every drive."""
         self.stats.metrics = self.runtime.stats()
         self.stats.check_clock_identity()
         return self.stats

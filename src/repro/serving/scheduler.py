@@ -9,7 +9,13 @@ from __future__ import annotations
 
 import collections
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Callable, List, Optional
+
+#: request service classes: ``latency`` requests carry tight TTFT/ITL
+#: targets and may jump the queue under an SLO-aware admission policy,
+#: ``throughput`` is the default best-effort class, ``batch`` requests are
+#: deadline-free background fill.
+SLO_CLASSES = ("latency", "throughput", "batch")
 
 
 @dataclass(eq=False)
@@ -22,16 +28,39 @@ class Request:
     alias two distinct requests with identical contents; identity (and the
     default ``object`` hash) is the correct notion everywhere the engine
     and schedulers use containment.
+
+    Lifecycle timestamps are on the engine's simulated clock (the
+    transfer-engine timeline; sync mode derives them from the step
+    clock), NOT step indices — ``enqueue_step`` remains the step counter
+    for schedulers that reason in steps, the ``*_t`` fields are the time
+    record the latency/SLO stats are computed from::
+
+        arrival_t -> [queue] -> admit_t -> first_token_t -> finish_t
     """
     req_id: int
     prompt: List[int]
     max_new_tokens: int
     output: List[int] = field(default_factory=list)
     row: Optional[int] = None          # batch row while running
-    state: str = "waiting"             # waiting | running | preempted | done
-    enqueue_step: int = 0
+    state: str = "waiting"             # waiting | running | preempted
+    #                                  # | done | rejected
+    enqueue_step: int = 0              # scheduler step index at enqueue
     decode_steps: int = 0
     needs_prefill: bool = True         # (re)prefill required (new / rolled back)
+    # ---- request-lifecycle API (SLO class, arrival clock, streaming) ----
+    arrival_t: float = 0.0             # clock time the request becomes visible
+    slo: str = "throughput"            # latency | throughput | batch
+    priority: int = 0                  # higher = sooner under SLO admission
+    tenant: str = "default"
+    ttft_slo_s: Optional[float] = None  # TTFT target, relative to arrival
+    e2e_slo_s: Optional[float] = None   # end-to-end target, rel. to arrival
+    on_token: Optional[Callable[[int, "Request"], None]] = None
+    # ---- clock timestamps (simulated seconds, engine clock) -------------
+    enqueue_t: float = 0.0             # joined the waiting queue
+    admit_t: Optional[float] = None    # FIRST admission (preemption-stable)
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    preempt_count: int = 0
 
     @property
     def pos(self) -> int:
@@ -40,6 +69,19 @@ class Request:
     @property
     def done(self) -> bool:
         return len(self.output) >= self.max_new_tokens
+
+    @property
+    def ttft_deadline_t(self) -> Optional[float]:
+        """Absolute clock deadline for the first token (None = no SLO)."""
+        if self.ttft_slo_s is None:
+            return None
+        return self.arrival_t + self.ttft_slo_s
+
+    @property
+    def e2e_deadline_t(self) -> Optional[float]:
+        if self.e2e_slo_s is None:
+            return None
+        return self.arrival_t + self.e2e_slo_s
 
 
 class FCFSScheduler:

@@ -1,0 +1,448 @@
+"""Request-lifecycle serving API (PR 5).
+
+Covers the tentpole redesign:
+  * the legacy ``submit``/``run`` compat wrapper stays bit-exact against
+    the seed goldens (same tokens, same clock) — the lifecycle API is
+    additive;
+  * clock-driven admission: requests become visible at ``arrival_t`` on
+    the engine clock, idle gaps are their own accounting class, and a
+    Poisson workload decodes IDENTICAL tokens in sync and async modes
+    with the async clock no worse;
+  * per-request lifecycle records (queue wait, TTFT, TPOT, e2e) with
+    p50/p99 and SLO-goodput aggregation in ``EngineStats.summary()``;
+  * admission policies: headroom deferral, deadline shedding, priority
+    ordering;
+  * satellites: clock timestamps on ``Request`` (sync derives them from
+    the step clock), divide-by-zero guards, submit validation, CFS
+    preemption + resume accounting (re-prefill charged once, TTFT
+    stable under later preemption), workload generator determinism.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import H100_NVLINK, HarvestRuntime
+from repro.serving import (HarvestServer, KVHeadroomAdmission, RequestRecord,
+                           ServeRequest, SLODeadlineAdmission, TenantSpec,
+                           Workload)
+from repro.serving.engine import EngineStats
+from repro.serving.scheduler import Request
+from repro.serving.workload import (bursty_arrivals, diurnal_arrivals,
+                                    poisson_arrivals, sample_length,
+                                    trace_arrivals)
+
+MiB = 2**20
+
+# fig7 regime (see test_pipeline): decode memory-bandwidth-bound so a
+# decode window dwarfs a block transfer on H100 links
+MEMORY_BOUND_HW = dataclasses.replace(H100_NVLINK, hbm_bw=5e10)
+
+# --- golden: serving engine, yi-6b reduced 2L, 4 reqs x 12 tokens, fair
+# scheduler, 10 local slots, peer budget 64 MiB (captured at the seed
+# commit; test_runtime_equivalence asserts the engine path, this file
+# asserts the HarvestServer compat path reproduces it too)
+GOLDEN_OUTPUTS = [
+    [380, 87, 109, 233, 267, 437, 437, 233, 241, 109, 241, 109],
+    [250, 250, 437, 437, 437, 437, 437, 437, 25, 25, 57, 61],
+    [501, 250, 250, 250, 312, 364, 364, 364, 364, 364, 364, 364],
+    [437, 437, 437, 437, 216, 8, 216, 8, 216, 8, 216, 8],
+]
+GOLDEN_CLOCK_S = 0.0001582013302897278
+
+
+@pytest.fixture(scope="module")
+def served_model():
+    import jax
+    from repro.configs import get_config
+    from repro.models import model as M
+    cfg = dataclasses.replace(get_config("yi-6b").reduced(), num_layers=2)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _server(served_model, *, hardware=MEMORY_BOUND_HW, budget=64 * MiB,
+            **kw):
+    cfg, params = served_model
+    runtime = HarvestRuntime({1: budget}, hardware=hardware)
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("block_size", 8)
+    kw.setdefault("num_local_slots", 10)
+    kw.setdefault("scheduler", "fair")
+    return HarvestServer(cfg, params, runtime=runtime, **kw)
+
+
+def _mixed_workload(rate, seed=3, n=6, **tenant_kw):
+    return Workload(
+        num_requests=n, arrival="poisson", rate=rate, seed=seed,
+        vocab=(3, 250),
+        tenants=(TenantSpec("chat", weight=2, slo="latency", priority=1,
+                            prompt_len=(6, 14), max_new_tokens=8,
+                            **tenant_kw),
+                 TenantSpec("bulk", weight=1, slo="batch",
+                            prompt_len=(14, 30), max_new_tokens=10)))
+
+
+# ---------------------------------------------------------------------------
+# legacy compat: bit-exact against the seed goldens
+# ---------------------------------------------------------------------------
+
+
+def test_compat_wrapper_reproduces_seed_golden(served_model):
+    """The PR 1 golden workload through the HarvestServer front door's
+    compat wrapper: same tokens, same clock, to the last bit."""
+    srv = _server(served_model, hardware=H100_NVLINK, scheduler="fair",
+                  mode="sync")
+    reqs = [srv.engine.submit([2 + i, 5, 7, 11, 13 + i], max_new_tokens=12)
+            for i in range(4)]
+    stats = srv.engine.run(max_steps=800)
+    assert [r.output for r in reqs] == GOLDEN_OUTPUTS
+    assert stats.clock_s == pytest.approx(GOLDEN_CLOCK_S, rel=1e-9)
+    # the lifecycle machinery observed the legacy run without changing it
+    assert stats.idle_s == 0.0 and stats.rejected == 0
+    assert len(stats.requests) == 4
+    assert all(rec.state == "done" for rec in stats.requests)
+
+
+def test_lifecycle_submission_same_tokens_as_legacy(served_model):
+    """Spreading the SAME prompts over clocked arrivals re-times the
+    requests but never re-decodes them."""
+    prompts = [[2 + i, 5, 7, 11, 13 + i] for i in range(4)]
+    srv_legacy = _server(served_model)
+    legacy = [srv_legacy.engine.submit(p, max_new_tokens=12)
+              for p in prompts]
+    srv_legacy.engine.run(max_steps=800)
+
+    srv = _server(served_model)
+    handles = [srv.submit(ServeRequest(p, max_new_tokens=12,
+                                       arrival_t=i * 2e-3))
+               for i, p in enumerate(prompts)]
+    st = srv.run(max_steps=800)
+    assert [h.tokens for h in handles] == [r.output for r in legacy]
+    assert st.idle_s > 0.0          # the clock slept between arrivals
+    st.check_clock_identity()
+
+
+# ---------------------------------------------------------------------------
+# clock-driven workloads: sync vs async
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rate", [2e4, 2e5])
+def test_poisson_workload_sync_async_token_exact(served_model, rate):
+    def drive(mode):
+        srv = _server(served_model, mode=mode)
+        st = srv.run(_mixed_workload(rate), max_steps=2000)
+        return [tuple(h.tokens) for h in srv.handles], st
+
+    toks_sync, st_sync = drive("sync")
+    toks_async, st_async = drive("async")
+    assert toks_sync == toks_async, \
+        "the clock mode changes WHEN bytes move, never what is decoded"
+    assert st_async.clock_s <= st_sync.clock_s + 1e-15
+    assert st_sync.check_clock_identity()
+    assert st_async.check_clock_identity()
+    # both modes agree on the arrival schedule (idle gaps included)
+    assert st_async.idle_s == pytest.approx(st_sync.idle_s, rel=1e-6,
+                                            abs=1e-12)
+
+
+def test_arrivals_become_visible_on_the_clock(served_model):
+    srv = _server(served_model)
+    late = srv.submit(ServeRequest([9, 8, 7], max_new_tokens=4,
+                                   arrival_t=1e-3))
+    early = srv.submit(ServeRequest([1, 2, 3], max_new_tokens=4,
+                                    arrival_t=1e-5))
+    assert srv.engine.next_arrival_t() == pytest.approx(1e-5)
+    st = srv.run(max_steps=400)
+    # the late request could not have been admitted before its arrival
+    assert late.admit_t >= 1e-3 - 1e-12
+    assert early.admit_t < late.admit_t
+    assert early.first_token_t < late.first_token_t <= late.finish_t
+    assert st.idle_s > 0.0
+
+
+def test_run_until_lands_exactly_and_keeps_future_work(served_model):
+    srv = _server(served_model)
+    h1 = srv.submit(ServeRequest([4, 5, 6], max_new_tokens=4,
+                                 arrival_t=1e-5))
+    h2 = srv.submit(ServeRequest([6, 5, 4], max_new_tokens=4,
+                                 arrival_t=5.0))   # far future
+    st = srv.run_until(1e-3)
+    assert h1.finished and not h2.finished
+    assert srv.now == pytest.approx(1e-3)
+    assert st.check_clock_identity()
+    # a later drive picks the queued arrival up
+    srv.run_until(5.1)
+    assert h2.finished
+    assert srv.now == pytest.approx(5.1)
+
+
+def test_streaming_callback_fires_per_token(served_model):
+    streamed = []
+    srv = _server(served_model)
+    h = srv.submit(ServeRequest([5, 6, 7], max_new_tokens=5,
+                                on_token=lambda tok, r:
+                                streamed.append((tok, r.req_id))))
+    srv.run(max_steps=400)
+    assert [t for t, _ in streamed] == h.tokens
+    assert all(rid == h.req_id for _, rid in streamed)
+
+
+# ---------------------------------------------------------------------------
+# per-request records + aggregation
+# ---------------------------------------------------------------------------
+
+
+def test_records_and_percentiles_in_summary(served_model):
+    srv = _server(served_model)
+    st = srv.run(_mixed_workload(2e5, ttft_slo_s=1e-2, e2e_slo_s=1e-1),
+                 max_steps=2000)
+    assert len(st.requests) == 6
+    for rec in st.requests:
+        assert rec.state == "done"
+        assert rec.enqueue_t == pytest.approx(rec.arrival_t)
+        assert rec.admit_t >= rec.arrival_t - 1e-12
+        assert rec.first_token_t >= rec.admit_t - 1e-12
+        assert rec.finish_t >= rec.first_token_t
+        assert rec.queue_wait_s >= 0 and rec.ttft_s > 0
+        assert rec.tpot_s >= 0 and rec.e2e_s >= rec.ttft_s
+    lat = st.latency_percentiles("latency")
+    assert lat["n"] > 0
+    assert 0 < lat["ttft_p50"] <= lat["ttft_p99"]
+    assert 0 <= lat["tpot_p50"] <= lat["tpot_p99"]
+    # generous SLOs: everything good -> goodput equals class throughput
+    assert st.slo_attainment("latency") == 1.0
+    assert st.goodput() == pytest.approx(st.throughput())
+    text = st.summary()
+    assert "latency" in text and "batch" in text
+    assert "ttft p50/p99" in text and "goodput" in text and "SLO" in text
+
+
+def test_stats_guards_zero_runs():
+    st = EngineStats()
+    assert st.throughput() == 0.0
+    assert st.goodput() == 0.0
+    assert st.slo_attainment() == 0.0
+    assert st.latency_percentiles()["ttft_p99"] == 0.0
+    assert "0 tokens / 0 steps" in st.summary()   # must not raise
+    st2 = EngineStats(tokens_out=5)               # tokens but zero clock
+    assert st2.throughput() == 0.0
+    rec = RequestRecord(req_id=0, slo="latency", tenant="t",
+                        state="rejected", arrival_t=0.0, enqueue_t=0.0,
+                        admit_t=None, first_token_t=None, finish_t=1.0,
+                        prompt_tokens=3, output_tokens=0, preemptions=0)
+    assert rec.queue_wait_s is None and rec.ttft_s is None
+    assert rec.tpot_s is None and not rec.slo_ok
+
+
+def test_submit_validation(served_model):
+    srv = _server(served_model)
+    with pytest.raises(ValueError, match="empty prompt"):
+        srv.submit(ServeRequest([], max_new_tokens=4))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        srv.submit(ServeRequest([1, 2], max_new_tokens=0))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        srv.engine.submit([1, 2], -3)
+    with pytest.raises(ValueError, match="SLO class"):
+        srv.submit(ServeRequest([1, 2], max_new_tokens=4, slo="gold"))
+    # arrivals in the engine's past are rejected once the clock moved
+    srv.submit(ServeRequest([1, 2, 3], max_new_tokens=4))
+    srv.run(max_steps=200)
+    with pytest.raises(ValueError, match="past"):
+        srv.submit(ServeRequest([1, 2], max_new_tokens=4, arrival_t=0.0))
+
+
+# ---------------------------------------------------------------------------
+# admission policies
+# ---------------------------------------------------------------------------
+
+
+def test_headroom_admission_defers_but_never_starves(served_model):
+    srv = _server(served_model,
+                  admission=KVHeadroomAdmission(headroom_frac=0.4))
+    handles = [srv.submit(ServeRequest([2 + i, 5, 7, 11, 13 + i],
+                                       max_new_tokens=6))
+               for i in range(4)]
+    st = srv.run(max_steps=800)
+    assert all(h.state == "done" for h in handles)
+    assert st.rejected == 0
+    with pytest.raises(ValueError):
+        KVHeadroomAdmission(headroom_frac=1.0)
+
+
+def test_deadline_admission_sheds_hopeless_requests(served_model):
+    srv = _server(served_model, admission=SLODeadlineAdmission())
+    ok = srv.submit(ServeRequest([1, 2, 3], max_new_tokens=4,
+                                 slo="latency", ttft_slo_s=1.0))
+    # TTFT deadline far below even one prefill window: unservable
+    hopeless = srv.submit(ServeRequest([4, 5, 6], max_new_tokens=4,
+                                       slo="latency", ttft_slo_s=1e-12))
+    st = srv.run(max_steps=400)
+    assert ok.state == "done" and ok.ttft_s <= 1.0
+    assert hopeless.rejected and hopeless.tokens == []
+    assert st.rejected == 1
+    rej = [r for r in st.requests if r.state == "rejected"]
+    assert len(rej) == 1 and rej[0].output_tokens == 0
+    assert not rej[0].slo_ok
+    # shed requests drag attainment but never add goodput
+    assert st.slo_attainment("latency") == 0.5
+    assert st.goodput("latency") > 0
+
+
+def test_deadline_admission_priority_order(served_model):
+    """Latency-class priority jumps the queue ahead of earlier batch
+    arrivals once both are visible."""
+    srv = _server(served_model, admission=SLODeadlineAdmission(),
+                  max_batch=1, scheduler="fcfs")
+    lo = srv.submit(ServeRequest([7, 8, 9], max_new_tokens=6, slo="batch",
+                                 priority=0))
+    hi = srv.submit(ServeRequest([1, 2, 3], max_new_tokens=6,
+                                 slo="latency", priority=5))
+    srv.run(max_steps=600)
+    assert hi.admit_t <= lo.admit_t
+    assert hi.first_token_t < lo.first_token_t
+
+
+# ---------------------------------------------------------------------------
+# CFS preemption + resume accounting under clocked admission
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_resume_keeps_ttft_and_charges_reprefill_once(
+        served_model):
+    """A preempted request's TTFT is pinned at its FIRST token; the
+    normal resume path reloads (no re-prefill at all), and the lossy
+    path re-prefills exactly once per rebuild."""
+    cfg, params = served_model
+    prefills = []
+    srv = _server(served_model, mode="async")
+    orig = srv.engine._prefill
+    srv.engine._prefill = lambda r: (prefills.append(r.req_id), orig(r))[1]
+    handles = [srv.submit(ServeRequest([2 + i, 5, 7, 11, 13 + i],
+                                       max_new_tokens=12,
+                                       arrival_t=i * 1e-6))
+               for i in range(4)]
+    st = srv.run(max_steps=800)
+    assert st.preemptions > 0, "the workload must exercise CFS preemption"
+    assert st.metrics["kv"]["evict_to_peer"] > 0
+    assert st.recomputes == 0, "host-backed resume must not re-prefill"
+    # one prefill per request, ever — resumes reloaded instead
+    assert sorted(prefills) == sorted(h.req_id for h in handles)
+    preempted = [r for r in st.requests if r.preemptions > 0]
+    assert preempted, "records must carry the preemption count"
+    for rec in preempted:
+        # TTFT pinned at the first token, which happened BEFORE the
+        # preemption (the victim had decoded past the CFS quantum)
+        assert rec.first_token_t < rec.finish_t
+        assert rec.ttft_s < rec.e2e_s
+    st.check_clock_identity()
+
+
+def test_lossy_revocation_reprefill_once_ttft_stable(served_model):
+    """Lossy durability: a revoked prefix forces ONE re-prefill on
+    resume and leaves the recorded TTFT untouched."""
+    srv = _server(served_model, durability="lossy")
+    eng = srv.engine
+    handles = [srv.submit(ServeRequest([2 + i, 5, 7, 11, 13 + i],
+                                       max_new_tokens=12))
+               for i in range(4)]
+    for _ in range(400):
+        if eng.kv_mgr.stats["evict_to_peer"] > 0 or not eng.step():
+            break
+    assert eng.kv_mgr.stats["evict_to_peer"] > 0
+    victim = next(r for r in eng.waiting if r.state == "preempted")
+    ttft_before = victim.first_token_t
+    assert ttft_before is not None
+    n_out_before = len(victim.output)
+    eng.allocator.update_budget(1, 0)          # crunch: peer blocks LOST
+    st = srv.run(max_steps=800)
+    assert st.recomputes > 0
+    assert all(h.state == "done" for h in handles)
+    assert victim.first_token_t == ttft_before, \
+        "re-prefill must not re-timestamp the first token"
+    assert len(victim.output) == 12 and n_out_before <= 12
+    rec = next(r for r in st.requests if r.req_id == victim.req_id)
+    assert rec.first_token_t == ttft_before
+    st.check_clock_identity()
+
+
+# ---------------------------------------------------------------------------
+# workload generators
+# ---------------------------------------------------------------------------
+
+
+def test_workload_deterministic_and_sorted():
+    wl = _mixed_workload(5e4, seed=11, n=32)
+    a, b = wl.generate(), wl.generate()
+    assert [r.prompt for r in a] == [r.prompt for r in b]
+    assert [r.arrival_t for r in a] == [r.arrival_t for r in b]
+    times = [r.arrival_t for r in a]
+    assert times == sorted(times) and times[0] >= 0
+    assert {r.tenant for r in a} == {"chat", "bulk"}
+    assert all(r.slo in ("latency", "batch") for r in a)
+    # rate changes re-time but never re-draw the prompts
+    c = dataclasses.replace(wl, rate=5e5).generate()
+    assert [r.prompt for r in c] == [r.prompt for r in a]
+    assert max(r.arrival_t for r in c) < max(times)
+
+
+def test_arrival_processes_shapes():
+    rng = np.random.default_rng(0)
+    p = poisson_arrivals(rng, 100.0, 500)
+    assert len(p) == 500 and np.all(np.diff(p) > 0)
+    assert np.mean(np.diff(p)) == pytest.approx(1e-2, rel=0.2)
+    b = bursty_arrivals(np.random.default_rng(0), 100.0, 400, burst=8,
+                        duty=0.2)
+    assert len(b) == 400 and np.all(np.diff(b) > 0)
+    # bursty: highly variable inter-arrivals (CV well above Poisson's ~1)
+    gaps = np.diff(b)
+    assert np.std(gaps) / np.mean(gaps) > 1.2
+    d = diurnal_arrivals(np.random.default_rng(0), 100.0, 400,
+                         peak_ratio=4.0)
+    assert len(d) == 400 and np.all(np.diff(d) > 0)
+    t = trace_arrivals([0.0, 0.5, 0.5, 2.0])
+    assert list(t) == [0.0, 0.5, 0.5, 2.0]
+    with pytest.raises(ValueError):
+        trace_arrivals([1.0, 0.5])
+    with pytest.raises(ValueError):
+        poisson_arrivals(rng, 0.0, 4)
+    with pytest.raises(ValueError):
+        bursty_arrivals(rng, 10.0, 4, duty=0.0)
+
+
+def test_workload_validation():
+    with pytest.raises(ValueError):
+        Workload(num_requests=0)
+    with pytest.raises(ValueError):
+        Workload(arrival="weibull")
+    with pytest.raises(ValueError):
+        TenantSpec("t", weight=0.0)
+    with pytest.raises(ValueError):
+        TenantSpec("t", slo="platinum")
+    rng = np.random.default_rng(0)
+    assert sample_length(rng, 7) == 7
+    assert 3 <= sample_length(rng, (3, 9)) < 9
+    ln = sample_length(rng, {"lognormal": (2.0, 0.5), "lo": 2, "hi": 64})
+    assert 2 <= ln <= 64
+    with pytest.raises(ValueError):
+        sample_length(rng, (9, 3))
+    with pytest.raises(ValueError):
+        sample_length(rng, 0)
+    with pytest.raises(ValueError):
+        Workload(arrival="trace", num_requests=3,
+                 arrival_kwargs={"times": [0.0]}).generate()
+
+
+def test_request_timestamp_fields_vs_step_index(served_model):
+    """The satellite: ``enqueue_step`` stays a step index, the ``*_t``
+    fields are clock seconds — no more conflation."""
+    srv = _server(served_model)
+    srv.submit(ServeRequest([1, 2, 3], max_new_tokens=4))
+    srv.run(max_steps=200)
+    h2 = srv.submit(ServeRequest([3, 2, 1], max_new_tokens=4))
+    assert h2._req.enqueue_step == srv.stats.steps      # a step COUNT
+    assert h2._req.enqueue_t == pytest.approx(srv.now)  # clock seconds
+    srv.run(max_steps=200)
+    rec = srv.stats.requests[-1]
+    assert rec.enqueue_t > 0.0
