@@ -1,0 +1,221 @@
+"""Fig 11 (repo-original) — harvested prefix cache: cross-request KV sharing.
+
+Production multi-tenant serving is dominated by a few system prompts per
+tenant; the harvested prefix cache (:mod:`repro.core.prefix_cache`)
+publishes retired prompts' KV blocks into a radix trie over the
+:class:`~repro.core.store.HarvestStore` so later requests sharing the
+prefix skip that part of prefill.  This benchmark sweeps the traffic
+shape that monetises it and serves each cell twice — cache on vs cache
+off — through the request-lifecycle API.
+
+Axes per hardware family (H100+NVLink / TPU v5e+ICI):
+
+  * **prefix share** — the fraction of requests carrying a shared
+    system prompt (``TenantSpec.prefix_share``): 0 is the legacy
+    no-sharing stream, 0.9 is assistant-style traffic where nearly
+    every request opens with the tenant's system prompt.
+  * **tenant count** — more tenants means more distinct system prompts
+    competing for trie capacity and local slots (cache diversity).
+
+The hardware is made *compute-bound* for prefill (``peak_flops`` scaled
+so the weight-read floor crosses over at ~8 tokens) — on the stock
+memory-bound models every short prefill costs one weight sweep and
+cached blocks save no clock, which is itself a finding the stock fig10
+records; here we measure the regime the paper's prefix reuse targets.
+
+Headline checks: decoded tokens are BIT-IDENTICAL with the cache on and
+off at every cell (block adoption is zero-copy, never recomputed-and-
+approximated); at prefix share >= 0.6 the cache strictly lowers mean
+TTFT and saves >= 2x prefill blocks; at share 0 random prompts produce
+zero hits (no false sharing from the content addressing).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from pathlib import Path
+from typing import List
+
+from benchmarks.common import Check, fmt_table, save_result
+
+SHARES = (0.0, 0.6, 0.9)
+TENANT_COUNTS = (1, 2)
+NUM_REQUESTS = 12
+MAX_NEW_TOKENS = 6
+PREFIX_LEN = 64                # 8 blocks of shared system prompt
+BODY_LEN = (2, 6)              # small unique tail per request
+BLOCK_SIZE = 8
+LOCAL_SLOTS = 24
+MAX_BATCH = 2
+RATE = 5e3
+SEED = 11
+
+HW_MODELS = {"h100-nvlink-2gpu": "H100_NVLINK", "tpu-v5e": "TPU_V5E"}
+
+
+def _hardware(hw: str):
+    """The family's model, re-balanced so prefill is compute-bound.
+
+    ``peak_flops = 8 * hbm_bw`` puts the compute/weight-read crossover
+    at ~8 prompt tokens (stock H100 is ~295), so skipping cached prefix
+    blocks shortens the prefill window instead of vanishing under the
+    per-step weight-sweep floor.  Interconnect and capacity stay stock.
+    """
+    from repro.core import tiers
+    base = getattr(tiers, HW_MODELS[hw])
+    return dataclasses.replace(base, peak_flops=8.0 * base.hbm_bw)
+
+
+def _workload(share: float, tenants: int):
+    from repro.serving import TenantSpec, Workload
+    return Workload(
+        num_requests=NUM_REQUESTS, arrival="poisson", rate=RATE, seed=SEED,
+        vocab=(3, 250),
+        tenants=tuple(
+            TenantSpec(f"tenant{i}", prompt_len=BODY_LEN,
+                       max_new_tokens=MAX_NEW_TOKENS, prefix_share=share,
+                       num_prefixes=1, prefix_len=PREFIX_LEN)
+            for i in range(tenants)))
+
+
+def _server(cfg, params, hw: str, cache: bool):
+    from repro.core import HarvestRuntime
+    from repro.serving import HarvestServer
+    runtime = HarvestRuntime({1: 64 << 20}, hardware=_hardware(hw))
+    return HarvestServer(cfg, params, runtime=runtime, max_batch=MAX_BATCH,
+                         block_size=BLOCK_SIZE, num_local_slots=LOCAL_SLOTS,
+                         scheduler="fair", mode="sync", prefix_cache=cache)
+
+
+def _run_cell(cfg, params, hw: str, cache: bool, share: float, tenants: int):
+    srv = _server(cfg, params, hw, cache)
+    stats = srv.run(_workload(share, tenants), max_steps=4000)
+    outputs = [tuple(h.tokens) for h in srv.handles]
+    recs = [r for r in stats.records() if r.state == "done"]
+    ttfts = [r.ttft_s for r in recs if r.ttft_s is not None]
+    blocks = sum(math.ceil(r.prompt_tokens / BLOCK_SIZE) for r in recs)
+    pfx = stats.metrics.get("prefix", {})
+    return {
+        "clock_s": stats.clock_s,
+        "prefill_s": stats.prefill_s,
+        "tokens": stats.tokens_out,
+        "goodput": stats.goodput(),
+        "mean_ttft_s": sum(ttfts) / len(ttfts) if ttfts else 0.0,
+        "prompt_blocks": blocks,
+        "cached_blocks": sum(r.cached_prefix_blocks for r in recs),
+        "hit_blocks": pfx.get("hit_blocks", 0),
+        "local_hits": pfx.get("local_hits", 0),
+        "peer_hits": pfx.get("peer_hits", 0),
+        "host_hits": pfx.get("host_hits", 0),
+        "cow_splits": pfx.get("cow_splits", 0),
+        "published": pfx.get("published", 0),
+        "evictions": pfx.get("evictions", 0),
+    }, outputs, stats
+
+
+def run(out_dir: Path, hw: str = "h100-nvlink-2gpu", fast: bool = False
+        ) -> dict:
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import model as M
+
+    if hw not in HW_MODELS:
+        raise ValueError(f"unknown hardware family {hw!r}; expected one of "
+                         f"{sorted(HW_MODELS)}")
+    shares, tenant_counts = SHARES, TENANT_COUNTS
+    if fast:
+        shares = (0.0, max(SHARES))
+        tenant_counts = tenant_counts[:1]
+
+    cfg = dataclasses.replace(get_config("yi-6b").reduced(), num_layers=2)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+
+    rows: List[dict] = []
+    table = []
+    snapshot = None
+    for tenants in tenant_counts:
+        for share in shares:
+            on, out_on, st_on = _run_cell(cfg, params, hw, True, share,
+                                          tenants)
+            off, out_off, _ = _run_cell(cfg, params, hw, False, share,
+                                        tenants)
+            prefilled_on = on["prompt_blocks"] - on["cached_blocks"]
+            row = {
+                "tenants": tenants, "share": share,
+                "tokens_match": out_on == out_off,
+                "cache": on, "no_cache": off,
+                "ttft_lift": (off["mean_ttft_s"] / on["mean_ttft_s"]
+                              if on["mean_ttft_s"] else float("inf")),
+                "goodput_lift": (on["goodput"] / off["goodput"]
+                                 if off["goodput"] else float("inf")),
+                "block_savings": (off["prompt_blocks"] / prefilled_on
+                                  if prefilled_on else float("inf")),
+            }
+            rows.append(row)
+            table.append([
+                tenants, f"{share:.1f}",
+                "yes" if row["tokens_match"] else "NO",
+                f"{on['mean_ttft_s'] * 1e6:.1f}",
+                f"{off['mean_ttft_s'] * 1e6:.1f}",
+                f"{row['ttft_lift']:.2f}x",
+                f"{off['prompt_blocks']}/{prefilled_on}",
+                f"{row['block_savings']:.2f}x",
+                f"{on['local_hits']}/{on['peer_hits']}/{on['host_hits']}",
+                on["cow_splits"], on["published"], on["evictions"]])
+            if share == max(shares) and tenants == tenant_counts[-1]:
+                snapshot = st_on.metrics
+    print(f"Fig 11 — harvested prefix cache, cache on vs off ({hw}, "
+          f"compute-bound prefill):")
+    print(fmt_table(
+        ["tenants", "share", "tokens=", "ttft on us", "ttft off us", "lift",
+         "blocks off/on", "savings", "hits L/P/H", "cow", "pub", "evict"],
+        table))
+    print()
+
+    high = [r for r in rows if r["share"] >= 0.6]
+    low = [r for r in rows if r["share"] == 0.0]
+    checks = [
+        Check("fig11.tokens_invariant",
+              float(all(r["tokens_match"] for r in rows)), lo=1.0,
+              note="decode is bit-identical with the prefix cache on and "
+                   "off at every cell: adopted blocks are the exact KV "
+                   "bytes prefill would have produced"),
+        Check("fig11.ttft_improves_high_share",
+              min(r["ttft_lift"] for r in high), lo=1.0 + 1e-9,
+              note="at prefix share >= 0.6 the cache strictly lowers mean "
+                   "TTFT (prefill windows shrink by the adopted blocks)"),
+        Check("fig11.prefill_block_savings",
+              min(r["block_savings"] for r in high), lo=2.0,
+              note="at prefix share >= 0.6 the cache prefills >= 2x fewer "
+                   "prompt blocks than the no-cache system"),
+        Check("fig11.no_false_sharing",
+              float(max(r["cache"]["hit_blocks"] for r in low)), hi=0.0,
+              note="with random prompts (share 0) content addressing "
+                   "produces zero hits — chained digests never alias "
+                   "distinct prefixes"),
+        Check("fig11.trie_exercised",
+              float(max(r["cache"]["published"] for r in high)), lo=1.0,
+              note="retired prompts were actually published into the trie "
+                   "(the savings come from cross-request sharing, not "
+                   "batching artifacts)"),
+    ]
+
+    payload = {"name": "fig11_prefix_sharing", "hw": hw, "rows": rows,
+               "checks": [c.to_dict() for c in checks],
+               "metrics": snapshot or {}}
+    save_result(out_dir, "fig11_prefix_sharing", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks.common import RESULTS_DIR
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hw", default="h100-nvlink-2gpu",
+                    choices=sorted(HW_MODELS))
+    ap.add_argument("--tiny", "--fast", dest="fast", action="store_true",
+                    help="CI mode: two shares, one tenant")
+    args = ap.parse_args()
+    run(RESULTS_DIR, hw=args.hw, fast=args.fast)

@@ -20,6 +20,9 @@ Components (the runtime wires these for you):
                 and the transfer timeline
   prefetch    — cross-step speculative reloads issued under compute windows
                 on the TransferEngine's event timeline
+  prefix_cache — harvested prefix cache: radix-trie cross-request KV
+                sharing over the HarvestStore (content-addressed,
+                refcounted, publish-on-retire)
   paged_attention — tier-aware flash-decode partials + LSE merge
   simulator   — CGOPipe pipeline model reproducing Fig 5/6
 """
@@ -32,6 +35,8 @@ from repro.core.policy import (BestFitPolicy, FairnessPolicy, LocalityPolicy,
                                PlacementRequest, StabilityPolicy,
                                TopologyAwarePolicy, WorstFitPolicy)
 from repro.core.prefetch import Prefetcher, PrefetchConfig
+from repro.core.prefix_cache import (PrefixCache, PrefixCacheConfig,
+                                     block_digests)
 from repro.core.rebalancer import ExpertRebalancer
 from repro.core.runtime import HarvestRuntime
 from repro.core.simulator import (AccessModelConfig, ExpertAccessModel,

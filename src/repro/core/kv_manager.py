@@ -17,6 +17,18 @@ application choice:
 The manager tracks both the *placement* (bytes, any scale — used by the
 dry-run and the simulator) and optionally the *payload* (real numpy block
 arrays — used by the serving engine and tests).
+
+Shared-block residency (PR 6, :mod:`repro.core.prefix_cache`): a request
+may *adopt* a content-addressed trie block instead of allocating its own.
+The mapping ``shared[(req, j)] -> content_key`` resolves the request's
+logical block id onto the shared entry everywhere the manager touches the
+table, the lease table guarantees at most ONE live request maps a shared
+block at a time (the decode kernel's ``slot_req`` binds each pool slot to
+a single batch row), and a second concurrent consumer gets a
+copy-on-write split instead — shared blocks are never mutated and never
+aliased into two rows.  ``free_request`` routes every release through the
+store's refcount, so retiring can never free a block the trie or another
+owner still references.
 """
 from __future__ import annotations
 
@@ -28,7 +40,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.allocator import HarvestAllocator
 from repro.core.store import (Durability, HarvestStore, MetricsRegistry,
-                              ObjectEntry, Residency, Transfer, TransferEngine)
+                              ObjectEntry, ObjectKey, Residency, Transfer,
+                              TransferEngine)
 from repro.core.tiers import HardwareModel, Tier, kv_block_bytes
 
 BlockId = Tuple[int, int]    # (request_id, block_index_within_request)
@@ -43,7 +56,7 @@ DURABILITY = {
 
 KV_STAT_KEYS = ("evict_to_peer", "evict_to_host", "reload_peer",
                 "reload_host", "revocations", "recomputes", "allocated",
-                "freed")
+                "freed", "ref_drops")
 
 
 @dataclass
@@ -103,6 +116,13 @@ class KVOffloadManager:
             num_local_slots=num_local_slots,
             durability=DURABILITY[durability], store_payload=store_payload,
             entry_factory=BlockEntry, stat_keys=KV_STAT_KEYS)
+        #: shared-block residency: (req, block_idx) -> content key of the
+        #: adopted prefix-cache block.  Resolved on every table access.
+        self.shared: Dict[BlockId, "ObjectKey"] = {}
+        #: content key -> the ONE request currently leasing it (slot_req
+        #: maps each pool slot to a single batch row, so concurrent
+        #: consumers must COW-split instead of double-leasing)
+        self.lessee: Dict["ObjectKey", int] = {}
 
     # ------------------------------------------------------- store views
     @property
@@ -149,7 +169,78 @@ class KVOffloadManager:
         """Get a local slot for a new block, evicting if necessary."""
         return self.store.allocate_local((req, block_idx), base_pos=base_pos)
 
+    # ------------------------------------------------------ shared blocks
+    def resolve(self, bid: BlockId) -> ObjectKey:
+        """The store key a logical block id actually reads: its adopted
+        content key when shared, else the id itself."""
+        return self.shared.get(bid, bid)
+
+    def adopt_block(self, req: int, block_idx: int, ckey: ObjectKey
+                    ) -> List[ReloadOp]:
+        """Lease a prefix-cache content block as this request's block
+        ``block_idx`` — zero copy.  The entry is made local (the returned
+        reloads are the ONLY cost a cache hit pays), pinned for the term
+        of the lease (the decode read set must not churn mid-step), and
+        its refcount incremented so no other owner's retire can free it.
+        The caller must have checked :meth:`lessee_of` — double-leasing
+        is a programming error (two batch rows cannot share a slot).
+        """
+        assert ckey not in self.lessee, \
+            f"content block {ckey} already leased to request " \
+            f"{self.lessee[ckey]} — COW-split instead"
+        ops = self.store.ensure_local(ckey)
+        self.store.incref(ckey)
+        self.store.pin(ckey)
+        self.lessee[ckey] = req
+        self.shared[(req, block_idx)] = ckey
+        return ops
+
+    def lessee_of(self, ckey: ObjectKey) -> Optional[int]:
+        """The request currently leasing a content block (None = free to
+        adopt)."""
+        return self.lessee.get(ckey)
+
+    def cow_split(self, req: int, block_idx: int, ckey: ObjectKey
+                  ) -> Tuple[int, List[ReloadOp], List[ReloadOp]]:
+        """Copy-on-write split: materialise a private copy of a content
+        block another live request is leasing.  Returns
+        ``(slot, reload_ops, alloc_ops)`` — the reloads make the source
+        local (critical path: this request's prefill reads it), the alloc
+        ops are any eviction the private slot forced (write-back path).
+        The engine copies the pool payload ``source slot -> slot``; the
+        store payload (authoritative once evicted) is copied here so the
+        private block survives its own eviction ladder independently.
+        Shared blocks are never mutated: the split happens BEFORE any
+        write could target the divergence block.
+        """
+        reload_ops = self.store.ensure_local(ckey)
+        slot, alloc_ops = self.store.allocate_local(
+            (req, block_idx), base_pos=block_idx * self.block_size)
+        ent = self.table[(req, block_idx)]
+        ent.filled = self.block_size
+        src = self.store.read_payload(ckey)
+        if src is not None:
+            self.store.write_payload((req, block_idx), np.array(src))
+        return slot, reload_ops, alloc_ops
+
+    def release_leases(self, req: int) -> None:
+        """Return every content block the request leases to the trie:
+        unpin, drop the lease, and decrement the refcount (the store frees
+        only when the trie no longer holds the block either)."""
+        for bid in [b for b in self.shared if b[0] == req]:
+            ckey = self.shared.pop(bid)
+            if self.lessee.get(ckey) == req:
+                del self.lessee[ckey]
+            ent = self.store.table.get(ckey)
+            if ent is not None:
+                ent.pinned = False
+                self.store.release(ckey)
+
     def free_request(self, req: int) -> None:
+        """Release a request's blocks — through the refcount: leased
+        content blocks drop one reference (never freed out from under the
+        trie or a later lessee), private blocks free immediately."""
+        self.release_leases(req)
         self.store.release_owner(req)
 
     # ----------------------------------------------------------- evict
@@ -161,11 +252,15 @@ class KVOffloadManager:
     # ----------------------------------------------------------- reload
     def ensure_resident(self, req: int, block_idx: int) -> List[ReloadOp]:
         """Fetch-mode reload: make a block local before the step."""
-        return self.store.ensure_local((req, block_idx))
+        return self.store.ensure_local(self.resolve((req, block_idx)))
 
     def plan_reloads(self, bids, seen: Optional[set] = None) -> ReloadPlan:
         """Batched reload plan for the blocks a step is about to read.
 
+        Logical ids resolve through the shared-block map first (an adopted
+        prefix block plans — and dedups — under its content key, and
+        ``plan.touched`` carries the resolved key so the caller's
+        slot/row mapping lands on the entry the kernel actually reads).
         Deduplicates repeated keys within the step (``seen`` may be shared
         across calls to extend the dedup window), attaches the in-flight
         transfer of any block that is already being moved — a block needed
@@ -177,6 +272,7 @@ class KVOffloadManager:
         plan = ReloadPlan()
         seen = set() if seen is None else seen
         for bid in bids:
+            bid = self.resolve(bid)
             if bid in seen:
                 plan.deduped += 1
                 self.stats["reload_deduped"] += 1
@@ -198,11 +294,11 @@ class KVOffloadManager:
 
     def is_lost(self, req: int, block_idx: int) -> bool:
         """True iff a lossy revocation dropped this block's payload."""
-        return self.store.is_lost((req, block_idx))
+        return self.store.is_lost(self.resolve((req, block_idx)))
 
     def device_of(self, req: int, block_idx: int) -> Optional[int]:
         """Peer device a PEER-resident block lives on (else None)."""
-        return self.store.device_of((req, block_idx))
+        return self.store.device_of(self.resolve((req, block_idx)))
 
     # --------------------------------------------------------- prefetch
     def plan_prefetch(self, running, waiting=(), depth: int = 1

@@ -96,6 +96,12 @@ class TopologyAwarePolicy(PlacementPolicy):
         serialising on one peer's FIFO; hot objects (``hints["hot"]``)
         spread harder, because they are the ones whose reloads contend.
 
+    Shared prefix-cache blocks (``hints["refs"] > 0`` — leased trie
+    interiors) scale the churn penalty up by their reference count: a
+    revocation there costs every future request that would have hit the
+    prefix, so such blocks steer toward stable peers even when a churny
+    one is nearer.
+
     Ties resolve best-fit (tightest remaining segment), so on a
     single-peer topology the ranking degenerates to the paper's default.
     """
@@ -113,13 +119,14 @@ class TopologyAwarePolicy(PlacementPolicy):
         fitting = [(d, v) for d, v in devices.items()
                    if v["largest_free"] >= req.size]
         hot = 1.0 + float(req.hints.get("hot", 0.0) or 0.0)
+        refs = 1.0 + float(req.hints.get("refs", 0) or 0)
 
         def score(d, v):
             t = self.topology.transfer_time(req.size, Tier.PEER_HBM,
                                             Tier.LOCAL_HBM, device=d)
             churn = v["churn"] / max(v["budget"], 1)
             lane = self._recent.get(d, 0.0)
-            return t * (1.0 + self.churn_weight * churn
+            return t * (1.0 + self.churn_weight * refs * churn
                         + self.spread_weight * hot * lane)
 
         fitting.sort(key=lambda kv: (score(*kv),

@@ -517,6 +517,20 @@ class TransferEngine:
             self.drain_until(target)
         return self.now
 
+    def retarget(self, old: ObjectKey, new: ObjectKey) -> None:
+        """Re-key the same-object ordering chain: a future transfer of
+        ``new`` chains behind any in-flight transfer submitted under
+        ``old`` (used by :meth:`HarvestStore.rekey` — a block published
+        into the prefix trie keeps its in-flight write-back ordering)."""
+        t = self._key_busy.pop(old, None)
+        if t is None:
+            return
+        if t.parent is not None:
+            t.parent = new
+        else:
+            t.key = new
+        self._key_busy[new] = t
+
     def inflight_for(self, key: ObjectKey) -> Optional[Transfer]:
         """The in-flight transfer currently moving ``key`` (None when the
         object is quiescent).  A step that needs a block another path
@@ -543,6 +557,8 @@ class TransferEngine:
 # residency table
 # ---------------------------------------------------------------------------
 
+_MISSING = object()   # rekey's "key absent from LRU" sentinel
+
 
 @dataclass
 class ObjectEntry:
@@ -556,6 +572,11 @@ class ObjectEntry:
     hotness: float = 0.0                     # EWMA of client-defined heat
     pinned: bool = False                     # never evicted from local
     nbytes: int = 0
+    #: extra holders beyond the base owner (prefix-cache leases).  While
+    #: positive, :meth:`HarvestStore.release` drops one reference instead
+    #: of freeing — a retiring request can never free a block the trie (or
+    #: another lessee) still reads.
+    refcount: int = 0
 
     @property
     def tier(self) -> Optional[Tier]:
@@ -662,9 +683,27 @@ class HarvestStore:
         self.stats["allocated"] += 1
         return slot, self._prepare(ops)
 
-    def release(self, key: ObjectKey) -> None:
-        """Stop tracking an object, freeing its slot / peer segment."""
-        ent = self.table.pop(key)
+    def incref(self, key: ObjectKey) -> int:
+        """Add one shared reference (a prefix-cache lease).  Each
+        :meth:`release` drops one reference before any actual free."""
+        ent = self.table[key]
+        ent.refcount += 1
+        return ent.refcount
+
+    def release(self, key: ObjectKey) -> bool:
+        """Drop one reference; free the object only when none remain.
+
+        Unshared objects (``refcount == 0``, the default) free
+        immediately — the legacy semantics.  Shared objects decrement and
+        stay tracked, so a retiring owner can never free a block the
+        prefix trie or another lessee still references.  Returns True iff
+        the object was actually freed."""
+        ent = self.table[key]
+        if ent.refcount > 0:
+            ent.refcount -= 1
+            self.stats["ref_drops"] += 1
+            return False
+        self.table.pop(key)
         if ent.state is Residency.LOCAL and self.num_local_slots is not None:
             self.free_slots.append(ent.local_slot)
         elif ent.state is Residency.PEER and ent.handle is not None:
@@ -672,10 +711,32 @@ class HarvestStore:
         self.lru.pop(key, None)
         self._payload.pop(key, None)
         self.stats["freed"] += 1
+        return True
 
     def release_owner(self, owner) -> None:
         for key in [k for k in self.table if self.owner_fn(k) == owner]:
             self.release(key)
+
+    def rekey(self, old: ObjectKey, new: ObjectKey) -> ObjectEntry:
+        """Transfer an entry to a new key in place: slot, handle, payload,
+        LRU recency and any in-flight transfer follow the object.  This is
+        how a retiring request's prompt block becomes a content-addressed
+        prefix-cache block without moving a byte."""
+        assert new not in self.table, f"rekey target {new} already tracked"
+        ent = self.table.pop(old)
+        self.table[new] = ent
+        if self.lru.pop(old, _MISSING) is not _MISSING:
+            self.lru[new] = None
+        if old in self._payload:
+            self._payload[new] = self._payload.pop(old)
+        if ent.state is Residency.PEER and ent.handle is not None:
+            # re-register the revocation callback under the new key — the
+            # old closure would no-op against a key no longer in the table
+            self.allocator.harvest_register_cb(
+                ent.handle,
+                lambda handle, key=new: self._on_revoked(key, handle.device))
+        self.transfers.retarget(old, new)
+        return ent
 
     # ------------------------------------------------------------- eviction
     def _evict_one(self, exclude_owner=None,
@@ -713,8 +774,13 @@ class HarvestStore:
         self.lru.pop(victim, None)
 
         ops: List[Transfer] = []
+        # hints: "refs" marks shared prefix-cache blocks (hot trie
+        # interiors) — placement policies steer them to stable peers,
+        # because revoking a block many future requests would hit costs
+        # more than revoking a private one
         h = self.allocator.harvest_alloc(
-            ent.nbytes, hints={"hot": ent.hotness}, client=self.client)
+            ent.nbytes, hints={"hot": ent.hotness, "refs": ent.refcount},
+            client=self.client)
         if h is not None:
             ent.state = Residency.PEER
             ent.handle = h
@@ -798,7 +864,8 @@ class HarvestStore:
         if ent.state is not Residency.HOST:
             return None
         h = self.allocator.harvest_alloc(
-            ent.nbytes, hints={"hot": ent.hotness}, client=self.client)
+            ent.nbytes, hints={"hot": ent.hotness, "refs": ent.refcount},
+            client=self.client)
         if h is None:
             return None
         self.allocator.harvest_register_cb(

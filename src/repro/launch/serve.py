@@ -22,6 +22,13 @@ policies; per-class TTFT/TPOT percentiles + SLO-goodput in the summary):
   PYTHONPATH=src python -m repro.launch.serve --workload poisson \
       --arrival-rate 20000 --tenants latency:2,batch:1 --slo-ms 1.5 \
       --admission deadline --scheduler fair
+
+Harvested prefix cache (radix-trie cross-request KV sharing: retired
+prompts publish their blocks, later requests sharing the system prompt
+skip that part of prefill — the summary prints the hit rate):
+
+  PYTHONPATH=src python -m repro.launch.serve --workload poisson \
+      --prefix-cache --prefix-share 0.8 --scheduler fair
 """
 from __future__ import annotations
 
@@ -89,6 +96,19 @@ def main():
                     help="comma-separated SLO-class mix 'class:weight' "
                          "(classes: latency, throughput, batch), e.g. "
                          "'latency:2,batch:1'")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="enable the harvested prefix cache: retired "
+                         "prompts' KV blocks are published into a radix "
+                         "trie over the block store and later requests "
+                         "sharing the prefix skip that part of prefill")
+    ap.add_argument("--prefix-share", type=float, default=0.0,
+                    metavar="FRAC",
+                    help="fraction of each tenant's requests carrying a "
+                         "shared system prompt (lifecycle workloads only; "
+                         "pairs naturally with --prefix-cache)")
+    ap.add_argument("--prefix-len", type=int, default=32,
+                    help="shared system-prompt length in tokens "
+                         "(default 32)")
     ap.add_argument("--admission", default="all",
                     choices=["all", "headroom", "deadline"],
                     help="admission policy in front of the scheduler")
@@ -101,6 +121,12 @@ def main():
         ap.error("--monitor-interval-us needs --mode async: timeline-driven "
                  "pressure fires on the event clock; sync mode keeps the "
                  "legacy every-4-steps drive")
+    if not 0.0 <= args.prefix_share <= 1.0:
+        ap.error("--prefix-share must be in [0, 1]")
+    if args.prefix_share > 0 and args.workload == "legacy":
+        ap.error("--prefix-share needs a lifecycle workload (--workload "
+                 "poisson|bursty|diurnal): the legacy path draws prompts "
+                 "without tenant prompt pools")
 
     from repro.configs import get_config
     from repro.core import (ClusterTrace, ClusterTraceConfig, CoalesceConfig,
@@ -139,7 +165,7 @@ def main():
         num_local_slots=args.local_slots,
         scheduler=args.scheduler, durability=args.durability, seed=args.seed,
         mode=mode, prefetch=PrefetchConfig() if args.prefetch else None,
-        admission=args.admission)
+        admission=args.admission, prefix_cache=args.prefix_cache)
     eng = server.engine
 
     if args.workload == "legacy":
@@ -165,7 +191,9 @@ def main():
                 max_new_tokens=args.max_new_tokens,
                 ttft_slo_s=slo_s if klass == "latency" else None,
                 e2e_slo_s=slo_s * 10 if (slo_s and klass == "latency")
-                else None))
+                else None,
+                prefix_share=args.prefix_share,
+                prefix_len=args.prefix_len))
         workload = Workload(
             num_requests=args.num_requests, arrival=args.workload,
             rate=args.arrival_rate, seed=args.seed, tenants=tuple(tenants),

@@ -79,7 +79,9 @@ from repro.configs.base import ModelConfig
 from repro.core.allocator import HarvestAllocator
 from repro.core.monitor import PeerMonitor
 from repro.core.prefetch import Prefetcher, PrefetchConfig
+from repro.core.prefix_cache import PrefixCache, PrefixCacheConfig
 from repro.core.runtime import HarvestRuntime
+from repro.core.store import Residency
 from repro.core.tiers import H100_NVLINK, HardwareModel
 from repro.models import model as M
 from repro.serving.admission import ADMISSION, AdmissionPolicy, AdmissionView
@@ -109,6 +111,8 @@ class RequestRecord:
     preemptions: int
     ttft_slo_s: Optional[float] = None
     e2e_slo_s: Optional[float] = None
+    #: prompt blocks served from the prefix cache instead of prefilled
+    cached_prefix_blocks: int = 0
 
     @property
     def queue_wait_s(self) -> Optional[float]:
@@ -292,6 +296,18 @@ class EngineStats:
                 parts.append(f"{d} occ={occ:.0%} "
                              f"churn={dev.get(f'{d}.churn', 0.0)/2**20:.2f}MiB")
             lines.append("  devices: " + "  ".join(parts))
+        pfx = self.metrics.get("prefix")
+        if pfx and pfx.get("lookups"):
+            lb = pfx.get("lookup_blocks", 0)
+            hb = pfx.get("hit_blocks", 0)
+            rate = hb / lb if lb else 0.0          # zero-division guarded
+            peer = pfx.get("peer_hits", 0) / hb if hb else 0.0
+            lines.append(
+                f"  prefix: hit rate {rate:.0%} ({hb}/{lb} blocks)  "
+                f"saved-from-prefill {hb} blocks  peer-hit {peer:.0%}  "
+                f"cow {pfx.get('cow_splits', 0)}  "
+                f"evicted {pfx.get('evictions', 0)}  "
+                f"cached {pfx.get('nodes', 0)}")
         co = self.metrics.get("coalesce")
         if co and (co.get("batches") or co.get("solo")
                    or co.get("striped_objects")):
@@ -338,7 +354,8 @@ class HarvestServingEngine:
                  temperature: float = 0.0, seed: int = 0,
                  overlap_reloads: bool = True, mode: str = "sync",
                  prefetch: Optional[PrefetchConfig] = None,
-                 admission: "str | AdmissionPolicy" = "all"):
+                 admission: "str | AdmissionPolicy" = "all",
+                 prefix_cache: "bool | PrefixCacheConfig" = False):
         assert cfg.has_kv_cache or cfg.family == "ssm"
         assert mode in ("sync", "async"), f"unknown clock mode {mode!r}"
         # the engine runs over ONE HarvestRuntime; the allocator/monitor/
@@ -392,6 +409,24 @@ class HarvestServingEngine:
             self.prefetcher = Prefetcher(
                 self.kv_mgr, runtime.transfers, prefetch,
                 planner=self._planner, metrics=runtime.metrics)
+
+        # harvested prefix cache (PR 6): cross-request KV sharing keyed on
+        # token-block digests; False (default) keeps every legacy path —
+        # and the seed goldens — bit-exact, clock included
+        self._pcache: Optional[PrefixCache] = None
+        if prefix_cache:
+            assert self.L_kv, "prefix cache needs a paged KV cache"
+            npre = (cfg.modality.num_prefix_embeddings
+                    if cfg.modality else 0)
+            assert npre == 0, \
+                "prefix cache keys on token blocks only — prefix-embedding " \
+                "models cannot be content-addressed by tokens"
+            self._pcache = PrefixCache(
+                self.kv_mgr,
+                prefix_cache if isinstance(prefix_cache, PrefixCacheConfig)
+                else None,
+                metrics=runtime.metrics)
+        self.prefix_cache = self._pcache
 
         if self.L_kv:
             self.pool_k = jnp.zeros((self.L_kv, self.n_slots, block_size,
@@ -583,6 +618,38 @@ class HarvestServingEngine:
             self._sync_clock()
 
     # ------------------------------------------------------------ prefill
+    def _adopt_prefix(self, r: Request) -> List[Tuple[int, tuple]]:
+        """Prefix-cache lookup for a (re)prefill: lease each matched
+        content block zero-copy, or COW-split it when another live request
+        already holds the lease (the decode kernel maps each pool slot to
+        exactly one batch row).  The matched chain's only clock cost is
+        its reloads — charged critical, exactly like a resume."""
+        matched = self._pcache.match(r.prompt + r.output)
+        t = 0.0
+        for j, ckey in matched:
+            st = self.kv_mgr.store.table[ckey].state
+            tier = ("local_hits" if st is Residency.LOCAL else
+                    "peer_hits" if st is Residency.PEER else "host_hits")
+            self._pcache.stats[tier] += 1
+            if self.kv_mgr.lessee_of(ckey) is not None:
+                slot, reload_ops, alloc_ops = self.kv_mgr.cow_split(
+                    r.req_id, j, ckey)
+                self._pcache.stats["cow_splits"] += 1
+                t += self._charge_critical(reload_ops)
+                self._charge_writeback(alloc_ops)
+                src = self.kv_mgr.store.table[ckey].local_slot
+                self.pool_k = self.pool_k.at[:, slot].set(self.pool_k[:, src])
+                self.pool_v = self.pool_v.at[:, slot].set(self.pool_v[:, src])
+            else:
+                t += self._charge_critical(
+                    self.kv_mgr.adopt_block(r.req_id, j, ckey))
+                slot = self.kv_mgr.store.table[ckey].local_slot
+            self.slot_req[slot] = r.row
+            self.slot_base[slot] = j * self.bs
+        if self.mode == "sync":
+            self.stats.clock_s += t
+        return matched
+
     def _prefill(self, r: Request) -> None:
         prefix = r.prompt + r.output            # rollback re-prefills output
         n = len(prefix)
@@ -603,9 +670,19 @@ class HarvestServingEngine:
                 jnp.arange(s_all)[:, None], (1, s_all, 3))
         logits, out = self._prefill_fn(self.params, batch)
         row = r.row
-        # simulated prefill cost: read weights once + prefix compute
-        # (the same estimate deadline admission sheds against)
-        prefill_t = self._est_prefill_s(r)
+        # prefix-cache lookup: adopt (or COW-split) the longest cached
+        # block chain BEFORE the prefill window — a hit's only cost is
+        # its (possibly peer->local) reload, charged on the critical path
+        matched = self._adopt_prefix(r) if self._pcache is not None \
+            and self.L_kv else []
+        r.cached_prefix_blocks = len(matched)
+        # simulated prefill cost: read weights once + compute of the
+        # UNMATCHED suffix — prefill starts from the divergence point (the
+        # same estimate deadline admission sheds against).  The REAL
+        # forward above still spans the whole prefix: the repo's "real
+        # compute for token fidelity, simulated clock for cost" pattern.
+        prefill_t = max((n - len(matched) * self.bs) * self._t_flop_tok,
+                        self._t_weights)
         self.stats.prefill_s += prefill_t
         if self.mode == "sync":
             self.stats.clock_s += prefill_t
@@ -621,7 +698,7 @@ class HarvestServingEngine:
             if npre:   # prefix embeddings occupy the first npre positions
                 k, v = k[:, :, npre:], v[:, :, npre:]
             nb = math.ceil(n / self.bs)
-            for j in range(nb):
+            for j in range(len(matched), nb):
                 slot, ops = self.kv_mgr.allocate_block(r.req_id, j, j * self.bs)
                 self._charge_writeback(ops)
                 lo, hi = j * self.bs, min((j + 1) * self.bs, n_pad)
@@ -753,6 +830,10 @@ class HarvestServingEngine:
         compute window.  Deadline-aware admission sheds a queued request
         once even this cannot land inside its TTFT SLO."""
         n = len(req.prompt) + len(req.output)
+        if self._pcache is not None:
+            # shedding decisions see the post-cache prefill cost: a cached
+            # prefix starts its prefill from the divergence point
+            n -= self._pcache.probe(req.prompt + req.output)
         return max(n * self._t_flop_tok, self._t_weights)
 
     def _shed(self, r: Request, now: float) -> None:
@@ -772,7 +853,8 @@ class HarvestServingEngine:
             first_token_t=r.first_token_t, finish_t=r.finish_t,
             prompt_tokens=len(r.prompt), output_tokens=len(r.output),
             preemptions=r.preempt_count, ttft_slo_s=r.ttft_slo_s,
-            e2e_slo_s=r.e2e_slo_s))
+            e2e_slo_s=r.e2e_slo_s,
+            cached_prefix_blocks=r.cached_prefix_blocks))
 
     def _admit(self) -> None:
         """Admission: the :class:`AdmissionPolicy` gates/orders the queue
@@ -982,6 +1064,10 @@ class HarvestServingEngine:
             self.free_rows.append(r.row)
             for slot in np.nonzero(self.slot_req == r.row)[0]:
                 self.slot_req[slot] = -1
+            if self._pcache is not None and self.L_kv:
+                # publish-on-retire: the prompt's full blocks transfer to
+                # the trie (zero copy) instead of being freed below
+                self._pcache.publish(r.req_id, r.prompt)
             self.kv_mgr.free_request(r.req_id)
             if self.prefetcher is not None:
                 self.prefetcher.cancel_owner(r.req_id)

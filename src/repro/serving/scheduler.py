@@ -47,6 +47,8 @@ class Request:
     enqueue_step: int = 0              # scheduler step index at enqueue
     decode_steps: int = 0
     needs_prefill: bool = True         # (re)prefill required (new / rolled back)
+    cached_prefix_blocks: int = 0      # prompt blocks served by the prefix
+    #                                  # cache at the last (re)prefill
     # ---- request-lifecycle API (SLO class, arrival clock, streaming) ----
     arrival_t: float = 0.0             # clock time the request becomes visible
     slo: str = "throughput"            # latency | throughput | batch

@@ -119,7 +119,13 @@ class HarvestServer:
 
     Every engine kwarg passes through (``scheduler``, ``mode``,
     ``prefetch``, ``admission``, pool geometry, …); the server adds the
-    clock-driven request lifecycle on top.  The legacy engine surface
+    clock-driven request lifecycle on top.  ``prefix_cache=True`` (or a
+    :class:`~repro.core.prefix_cache.PrefixCacheConfig`) enables the
+    harvested prefix cache: retired prompts' KV blocks are published into
+    a radix trie over the block store and later requests sharing the
+    prefix skip that part of prefill (``stats.summary()`` reports the hit
+    rate; per-request savings land in
+    ``RequestRecord.cached_prefix_blocks``).  The legacy engine surface
     stays available underneath as ``server.engine`` — goldens and the
     PR 2–4 pipeline tests run bit-exact through either door.
     """

@@ -121,7 +121,16 @@ ARRIVALS = {"poisson": poisson_arrivals, "bursty": bursty_arrivals,
 # ---------------------------------------------------------------- tenants
 @dataclass(frozen=True)
 class TenantSpec:
-    """One traffic class in a multi-tenant mix."""
+    """One traffic class in a multi-tenant mix.
+
+    ``prefix_share`` is the fraction of this tenant's requests that carry
+    a shared system prompt, drawn from a per-tenant pool of
+    ``num_prefixes`` prompts of length ``prefix_len`` (prepended to the
+    request's own body).  This is the traffic shape the harvested prefix
+    cache (:mod:`repro.core.prefix_cache`) monetises — production
+    multi-tenant serving is dominated by a few system prompts per tenant.
+    The default 0.0 generates the legacy stream bit-exactly.
+    """
     name: str
     weight: float = 1.0
     slo: str = "throughput"            # latency | throughput | batch
@@ -130,6 +139,9 @@ class TenantSpec:
     max_new_tokens: LengthSpec = 16
     ttft_slo_s: Optional[float] = None
     e2e_slo_s: Optional[float] = None
+    prefix_share: float = 0.0          # fraction carrying a shared prefix
+    num_prefixes: int = 4              # size of the tenant's prompt pool
+    prefix_len: LengthSpec = 32        # shared system-prompt length
 
     def __post_init__(self):
         if self.weight <= 0:
@@ -138,6 +150,12 @@ class TenantSpec:
         if self.slo not in SLO_CLASSES:
             raise ValueError(f"unknown SLO class {self.slo!r}; expected "
                              f"one of {SLO_CLASSES}")
+        if not 0.0 <= self.prefix_share <= 1.0:
+            raise ValueError(f"prefix_share must be in [0, 1], "
+                             f"got {self.prefix_share}")
+        if self.num_prefixes <= 0:
+            raise ValueError(f"num_prefixes must be positive, "
+                             f"got {self.num_prefixes}")
 
 
 @dataclass
@@ -170,12 +188,15 @@ class Workload:
                              f"{(*ARRIVALS, 'trace')}")
 
     def generate(self) -> List[ServeRequest]:
-        # independent child streams for arrival times vs request bodies:
-        # the arrival process may consume a rate-dependent number of
-        # draws (diurnal thinning), and the cross-rate invariant "rate
-        # re-times but never re-draws prompts" must hold structurally
-        arrival_rng, rng = (np.random.default_rng(s) for s in
-                            np.random.SeedSequence(self.seed).spawn(2))
+        # independent child streams for arrival times vs request bodies vs
+        # shared prefixes: the arrival process may consume a rate-dependent
+        # number of draws (diurnal thinning), and the cross-rate invariant
+        # "rate re-times but never re-draws prompts" must hold structurally.
+        # The prefix stream is third, so enabling prefix_share never
+        # perturbs the two legacy streams (seed-stable goldens).
+        arrival_rng, rng, prefix_rng = (
+            np.random.default_rng(s) for s in
+            np.random.SeedSequence(self.seed).spawn(3))
         if self.arrival == "trace":
             times = trace_arrivals(self.arrival_kwargs["times"])
             if len(times) != self.num_requests:
@@ -191,13 +212,24 @@ class Workload:
         picks = rng.choice(len(self.tenants), size=self.num_requests,
                            p=weights)
         lo, hi = self.vocab
+        # per-tenant shared system-prompt pools, from the prefix stream
+        pools: Dict[str, List[List[int]]] = {
+            ten.name: [list(prefix_rng.integers(
+                lo, hi, size=sample_length(prefix_rng, ten.prefix_len)))
+                for _ in range(ten.num_prefixes)]
+            for ten in self.tenants if ten.prefix_share > 0}
         out: List[ServeRequest] = []
         for t, pick in zip(times, picks):
             ten = self.tenants[pick]
             n_prompt = sample_length(rng, ten.prompt_len)
             n_out = sample_length(rng, ten.max_new_tokens)
+            prompt = list(rng.integers(lo, hi, size=n_prompt))
+            if ten.prefix_share > 0 and \
+                    prefix_rng.random() < ten.prefix_share:
+                pool = pools[ten.name]
+                prompt = pool[int(prefix_rng.integers(len(pool)))] + prompt
             out.append(ServeRequest(
-                prompt=list(rng.integers(lo, hi, size=n_prompt)),
+                prompt=prompt,
                 max_new_tokens=n_out,
                 arrival_t=self.start_t + float(t),
                 slo=ten.slo, priority=ten.priority, tenant=ten.name,

@@ -1,0 +1,588 @@
+"""Harvested prefix cache (PR 6): radix-trie cross-request KV sharing.
+
+Covers the tentpole subsystem:
+  * chained block digests: position-dependent, collision iff identical
+    full prefix, partial tail blocks excluded;
+  * publish-on-retire (rekey, zero copy), dedup of already-cached
+    content, and the refcount contract — the trie's hold is the base
+    ownership, every lease is one extra reference, whichever of
+    {trie eviction, lessee retire} happens last performs the free;
+  * the ``free_request`` double-free regression: a retiring lessee can
+    never free a block the trie (or a later lessee) still references;
+  * adopt-or-COW: one lessee per content block, the second concurrent
+    consumer gets a private copy whose payload is never aliased;
+  * trie eviction: leaf-first LRU, leased leaves unevictable;
+  * tier transparency: published blocks ride the store's eviction /
+    revocation ladder under their stable content key (including the
+    revocation-callback rekey);
+  * property tests (hypothesis): random publish/adopt/free/evict
+    interleavings preserve refcount conservation and longest-prefix
+    consistency;
+  * end-to-end: a cache-enabled engine decodes bit-identical tokens to a
+    cache-disabled one, records per-request ``cached_prefix_blocks``,
+    and spends strictly less prefill time in a compute-bound regime;
+  * satellites: shared-prefix workload generation (seeded, stream-stable)
+    and the ``EngineStats.summary()`` prefix line.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (H100_NVLINK, HarvestRuntime, PrefixCache,
+                        PrefixCacheConfig, Residency, block_digests)
+from repro.serving import TenantSpec, Workload
+from repro.serving.engine import EngineStats
+
+MiB = 2**20
+BS = 4
+
+
+def _mgr(slots=16, budget_mib=256):
+    cfg = get_config("yi-6b").reduced()
+    rt = HarvestRuntime({1: budget_mib * MiB})
+    kv = rt.kv_manager(cfg, block_size=BS, num_local_slots=slots,
+                       store_payload=True)
+    return kv, rt
+
+
+def _prefill_blocks(kv, req, tokens):
+    """Simulate a prefill: allocate and fill the request's non-adopted
+    blocks, with a content-determined payload per block."""
+    nb = math.ceil(len(tokens) / BS)
+    for j in range(nb):
+        if (req, j) in kv.shared or (req, j) in kv.table:
+            continue
+        kv.allocate_block(req, j, j * BS)
+        kv.table[(req, j)].filled = min(BS, len(tokens) - j * BS)
+        kv.write_payload(req, j, np.asarray(
+            tokens[j * BS:(j + 1) * BS], dtype=np.float64))
+
+
+def _serve(kv, pc, req, tokens):
+    """One request's block-table lifecycle: match, adopt-or-COW, prefill
+    the rest.  Returns the matched chain."""
+    matched = pc.match(tokens)
+    for j, ckey in matched:
+        if kv.lessee_of(ckey) is not None:
+            kv.cow_split(req, j, ckey)
+        else:
+            kv.adopt_block(req, j, ckey)
+    _prefill_blocks(kv, req, tokens)
+    return matched
+
+
+# ---------------------------------------------------------------------------
+# digests
+# ---------------------------------------------------------------------------
+
+
+def test_digests_chained_and_position_dependent():
+    a = [1, 2, 3, 4, 5, 6, 7, 8]
+    assert len(block_digests(a, 4)) == 2
+    # identical prefixes share the chain
+    assert block_digests(a + [9], 4) == block_digests(a, 4)
+    # same block content at a different position gets a different digest
+    rep = [1, 2, 3, 4, 1, 2, 3, 4]
+    d = block_digests(rep, 4)
+    assert d[0] != d[1]
+    # diverging first block changes every later digest
+    b = [9, 2, 3, 4, 5, 6, 7, 8]
+    assert block_digests(b, 4)[1] != block_digests(a, 4)[1]
+    # partial tail blocks are never digested
+    assert block_digests([1, 2, 3], 4) == []
+
+
+def test_digests_validate_block_size():
+    with pytest.raises(ValueError):
+        block_digests([1, 2], 0)
+
+
+# ---------------------------------------------------------------------------
+# publish / match / refcounts
+# ---------------------------------------------------------------------------
+
+
+def test_publish_rekeys_and_match_hits():
+    kv, _ = _mgr()
+    pc = PrefixCache(kv)
+    toks = list(range(10, 19))             # 2 full blocks + 1-token tail
+    _prefill_blocks(kv, 0, toks)
+    assert pc.publish(0, toks) == 2
+    # the full blocks transferred to content keys (zero copy, same entry)
+    assert (0, 0) not in kv.table and (0, 1) not in kv.table
+    assert len(pc) == 2 and pc.stats["nodes"] == 2
+    kv.free_request(0)                     # frees only the private tail
+    m = pc.match(toks)
+    assert [j for j, _ in m] == [0, 1]
+    # payloads followed the rekey
+    for j, ckey in m:
+        np.testing.assert_array_equal(
+            kv.store.read_payload(ckey),
+            np.asarray(toks[j * BS:(j + 1) * BS], dtype=np.float64))
+    assert pc.stats["hit_blocks"] == 2 and pc.stats["hit_tokens"] == 2 * BS
+
+
+def test_publish_dedup_frees_private_twin():
+    kv, _ = _mgr()
+    pc = PrefixCache(kv)
+    toks = list(range(8))
+    _prefill_blocks(kv, 0, toks)
+    pc.publish(0, toks)
+    kv.free_request(0)
+    # request 1 prefills the SAME prompt privately (no adoption)
+    _prefill_blocks(kv, 1, toks)
+    assert pc.publish(1, toks) == 0
+    assert pc.stats["dedup"] == 2
+    kv.free_request(1)                     # private twins free normally
+    assert (1, 0) not in kv.table and (1, 1) not in kv.table
+    assert len(pc) == 2                    # trie entries untouched
+    assert all(pc._entry_alive(n) is not None for n in pc.nodes.values())
+
+
+def test_free_request_double_free_regression():
+    """A retiring lessee must drop a reference, not free the trie's block
+    — and a second free_request must be a no-op (the double-free class
+    this PR routes through the store refcount)."""
+    kv, _ = _mgr()
+    pc = PrefixCache(kv)
+    toks = list(range(8))
+    _prefill_blocks(kv, 0, toks)
+    pc.publish(0, toks)
+    kv.free_request(0)
+    freed0 = kv.stats["freed"]
+
+    m = _serve(kv, pc, 1, toks)
+    assert len(m) == 2
+    for _, ckey in m:
+        assert kv.store.table[ckey].refcount == 1
+    kv.free_request(1)                     # lease returns: refcount drop
+    assert kv.stats["freed"] == freed0, \
+        "retiring a lessee freed a block the trie still references"
+    assert kv.stats["ref_drops"] >= 2
+    for _, ckey in m:
+        assert kv.store.table[ckey].refcount == 0
+        assert pc._entry_alive(pc.nodes[ckey[1]]) is not None
+    kv.free_request(1)                     # idempotent: nothing left to free
+    assert kv.stats["freed"] == freed0
+    # the cache still serves the prefix
+    assert len(pc.match(toks)) == 2
+
+
+def test_last_holder_frees_trie_eviction_vs_lessee_retire():
+    """Whichever of {trie eviction, lessee retire} happens LAST frees."""
+    kv, _ = _mgr()
+    pc = PrefixCache(kv, PrefixCacheConfig(capacity_blocks=1))
+    toks = list(range(8))                  # 2 blocks > capacity 1
+    _prefill_blocks(kv, 0, toks)
+    pc.publish(0, toks)                    # capacity evicts the leaf (block 1)
+    kv.free_request(0)
+    assert len(pc) == 1 and pc.stats["evictions"] == 1
+    (j, ckey), = pc.match(toks[:BS])
+    kv.adopt_block(1, j, ckey)
+    # order A: trie eviction first (leased -> survives), retire frees
+    pc._unlink(pc.nodes[ckey[1]], "evictions")
+    assert ckey in kv.store.table, "leased entry freed under the lessee"
+    freed0 = kv.stats["freed"]
+    kv.free_request(1)
+    assert ckey not in kv.store.table and kv.stats["freed"] == freed0 + 1
+
+
+def test_leased_leaf_unevictable():
+    kv, _ = _mgr()
+    pc = PrefixCache(kv, PrefixCacheConfig(capacity_blocks=4))
+    toks = list(range(4))
+    _prefill_blocks(kv, 0, toks)
+    pc.publish(0, toks)
+    kv.free_request(0)
+    (j, ckey), = pc.match(toks)
+    kv.adopt_block(1, j, ckey)
+    # flood the trie past capacity with other one-block prompts
+    for r in range(2, 10):
+        other = [100 * r + i for i in range(4)]
+        _prefill_blocks(kv, r, other)
+        pc.publish(r, other)
+        kv.free_request(r)
+    assert len(pc) <= 4 + 1                # leased leaf may overflow by one
+    assert ckey in kv.store.table and ckey[1] in pc.nodes, \
+        "capacity eviction dropped a leased leaf"
+    kv.free_request(1)
+
+
+# ---------------------------------------------------------------------------
+# adopt-or-COW
+# ---------------------------------------------------------------------------
+
+
+def test_second_concurrent_consumer_cow_splits():
+    kv, _ = _mgr()
+    pc = PrefixCache(kv)
+    toks = list(range(8))
+    _prefill_blocks(kv, 0, toks)
+    pc.publish(0, toks)
+    kv.free_request(0)
+
+    m1 = _serve(kv, pc, 1, toks)           # adopts (no other lessee)
+    assert [kv.lessee_of(ck) for _, ck in m1] == [1, 1]
+    assert kv.resolve((1, 0)) == m1[0][1]
+    m2 = _serve(kv, pc, 2, toks)           # same blocks: must COW
+    # both matched blocks became private copies, not second leases
+    assert (2, 0) in kv.table and (2, 1) in kv.table
+    assert kv.resolve((2, 0)) == (2, 0)
+    assert [kv.lessee_of(ck) for _, ck in m2] == [1, 1]
+    # COW never aliases payloads: equal content, distinct buffers
+    for j, ckey in m2:
+        shared = kv.store.read_payload(ckey)
+        private = kv.read_payload(2, j)
+        np.testing.assert_array_equal(shared, private)
+        assert not np.shares_memory(shared, private)
+        private[...] = -1.0
+        assert not np.array_equal(kv.store.read_payload(ckey), private)
+    kv.free_request(1)
+    kv.free_request(2)
+    assert not kv.lessee and not kv.shared
+
+
+def test_adopt_block_rejects_double_lease():
+    kv, _ = _mgr()
+    pc = PrefixCache(kv)
+    toks = list(range(4))
+    _prefill_blocks(kv, 0, toks)
+    pc.publish(0, toks)
+    kv.free_request(0)
+    (j, ckey), = pc.match(toks)
+    kv.adopt_block(1, j, ckey)
+    with pytest.raises(AssertionError):
+        kv.adopt_block(2, j, ckey)
+
+
+# ---------------------------------------------------------------------------
+# tier ladder transparency
+# ---------------------------------------------------------------------------
+
+
+def test_published_blocks_ride_tiers_and_survive_revocation():
+    """A published block demoted to peer stays matchable under its stable
+    content key; external revocation falls back to host (backed mode) —
+    which requires the revocation callback to follow the rekey."""
+    kv, rt = _mgr(slots=2)
+    pc = PrefixCache(kv)
+    toks = list(range(8))
+    _prefill_blocks(kv, 0, toks)
+    kv.evict_request(0)                    # both blocks now PEER
+    pc.publish(0, toks)
+    kv.free_request(0)
+    m = pc.match(toks)
+    assert len(m) == 2
+    states = [kv.store.table[ck].state for _, ck in m]
+    assert all(s is Residency.PEER for s in states)
+    rt.allocator.update_budget(1, 0)       # revoke the whole peer budget
+    states = [kv.store.table[ck].state for _, ck in m]
+    assert all(s is Residency.HOST for s in states), \
+        "revocation missed the rekeyed entry (stale callback key)"
+    # still matchable; adoption reloads from host
+    m2 = pc.match(toks)
+    assert len(m2) == 2
+    ops = kv.adopt_block(3, 0, m2[0][1])
+    assert ops and kv.store.table[m2[0][1]].state is Residency.LOCAL
+    kv.free_request(3)
+
+
+def test_lossy_revocation_prunes_chain():
+    cfg = get_config("yi-6b").reduced()
+    rt = HarvestRuntime({1: 256 * MiB})
+    kv = rt.kv_manager(cfg, block_size=BS, num_local_slots=2,
+                       durability="lossy", store_payload=True)
+    pc = PrefixCache(kv)
+    toks = list(range(8))
+    _prefill_blocks(kv, 0, toks)
+    kv.evict_request(0)
+    pc.publish(0, toks)
+    kv.free_request(0)
+    rt.allocator.update_budget(1, 0)       # lossy: blocks go LOST
+    assert pc.match(toks) == []
+    assert pc.stats["lost_pruned"] >= 1 and len(pc) == 0
+
+
+def test_probe_is_side_effect_free():
+    kv, _ = _mgr()
+    pc = PrefixCache(kv)
+    toks = list(range(8))
+    _prefill_blocks(kv, 0, toks)
+    pc.publish(0, toks)
+    kv.free_request(0)
+    before = dict(pc.stats)
+    assert pc.probe(toks + [99]) == 2 * BS
+    assert pc.probe([99] + toks) == 0
+    assert dict(pc.stats) == before
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis)
+# ---------------------------------------------------------------------------
+
+
+def _assert_invariants(kv, pc):
+    # refcount conservation: trie hold is base (0); each lease adds one
+    for digest, node in pc.nodes.items():
+        ent = kv.store.table.get(node.key)
+        assert ent is not None, f"trie node {digest} lost its entry"
+        expect = 1 if kv.lessee_of(node.key) is not None else 0
+        assert ent.refcount == expect, \
+            f"refcount {ent.refcount} != {expect} for {node.key}"
+    # no orphaned unleased content entries outside the trie
+    for key in kv.store.table:
+        if isinstance(key, tuple) and key[0] == "px" \
+                and key[1] not in pc.nodes:
+            assert kv.lessee_of(key) is not None, \
+                f"orphaned unleased content entry {key}"
+    assert pc.stats["nodes"] == len(pc.nodes)
+
+
+try:                                      # optional dep: only the two
+    from hypothesis import given, settings, strategies as st  # noqa: E402
+    _HAS_HYPOTHESIS = True
+except ImportError:                       # property tests skip, not the file
+    _HAS_HYPOTHESIS = False
+
+    def given(*a, **k):                   # no-op decorators so the module
+        return lambda fn: fn              # still imports without the dep
+
+    settings = given
+
+    class st:                             # noqa: N801 — strategy stub
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+    st = st()
+
+needs_hypothesis = pytest.mark.skipif(
+    not _HAS_HYPOTHESIS,
+    reason="property tests need the optional hypothesis dep")
+
+
+@needs_hypothesis
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(1, 3)),
+                min_size=1, max_size=12),
+       st.integers(1, 6))
+def test_trie_interleavings_preserve_invariants(seq, capacity):
+    """Random publish/adopt/COW/free/evict interleavings: refcounts
+    conserve, matches are consistent longest prefixes, COW never aliases.
+
+    Prompts are chains over 3 distinct content blocks, so shared prefixes
+    (and concurrent leases, via the two-live-requests window) arise
+    naturally."""
+    kv, _ = _mgr(slots=24, budget_mib=512)
+    pc = PrefixCache(kv, PrefixCacheConfig(capacity_blocks=capacity))
+    blocks = [[v] * BS for v in (7, 8, 9)]
+    live = []
+    for req, (first, nblocks) in enumerate(seq):
+        toks = sum((blocks[(first + k) % 3] for k in range(nblocks)), [])
+        if len(live) == 2:                 # keep two requests in flight
+            kv.free_request(live.pop(0))
+        matched = pc.match(toks)
+        digests = block_digests(toks, BS)
+        # longest-prefix consistency: contiguous from 0, digests line up
+        assert [j for j, _ in matched] == list(range(len(matched)))
+        for j, ckey in matched:
+            assert ckey == ("px", digests[j])
+            assert pc._entry_alive(pc.nodes[digests[j]]) is not None
+        for j, ckey in matched:
+            if kv.lessee_of(ckey) is not None:
+                kv.cow_split(req, j, ckey)
+                private = kv.read_payload(req, j)
+                shared = kv.store.read_payload(ckey)
+                if private is not None and shared is not None:
+                    assert not np.shares_memory(shared, private)
+            else:
+                kv.adopt_block(req, j, ckey)
+        _prefill_blocks(kv, req, toks)
+        pc.publish(req, toks)
+        live.append(req)
+        _assert_invariants(kv, pc)
+    for req in live:
+        kv.free_request(req)
+    _assert_invariants(kv, pc)
+    assert not kv.lessee and not kv.shared
+    # with no leases left, capacity is a hard bound
+    assert len(pc) <= capacity
+
+
+@needs_hypothesis
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 2), min_size=1, max_size=8))
+def test_match_agrees_with_digest_model(firsts):
+    """match() returns exactly the longest published prefix — checked
+    against a pure-python digest-set model (no eviction pressure)."""
+    kv, _ = _mgr(slots=32, budget_mib=512)
+    pc = PrefixCache(kv, PrefixCacheConfig(capacity_blocks=1024))
+    blocks = [[v] * BS for v in (4, 5, 6)]
+    published = set()
+    for req, first in enumerate(firsts):
+        toks = sum((blocks[(first + k) % 3] for k in range(3)), [])
+        digests = block_digests(toks, BS)
+        expect = 0
+        while expect < len(digests) and digests[expect] in published:
+            expect += 1
+        assert len(pc.match(toks)) == expect
+        _serve(kv, pc, req, toks)
+        pc.publish(req, toks)
+        published.update(digests)
+        kv.free_request(req)
+
+
+# ---------------------------------------------------------------------------
+# workload generation (satellite)
+# ---------------------------------------------------------------------------
+
+
+def _tenant(**kw):
+    kw.setdefault("prompt_len", (4, 10))
+    kw.setdefault("max_new_tokens", 4)
+    return TenantSpec("chat", **kw)
+
+
+def test_workload_prefix_share_validation():
+    with pytest.raises(ValueError):
+        _tenant(prefix_share=1.5)
+    with pytest.raises(ValueError):
+        _tenant(prefix_share=0.5, num_prefixes=0)
+
+
+def test_workload_shared_prefixes_deterministic_and_pooled():
+    w = Workload(num_requests=40, rate=1e4, seed=7,
+                 tenants=(_tenant(prefix_share=0.7, num_prefixes=2,
+                                  prefix_len=8),))
+    a, b = w.generate(), w.generate()
+    assert [r.prompt for r in a] == [r.prompt for r in b]
+    assert [r.arrival_t for r in a] == [r.arrival_t for r in b]
+    # carriers draw from a pool of exactly num_prefixes distinct prefixes
+    prefixes = {tuple(r.prompt[:8]) for r in a if len(r.prompt) > 10}
+    assert 1 <= len(prefixes) <= 2
+    share = sum(len(r.prompt) > 10 for r in a) / len(a)
+    assert 0.4 < share < 1.0               # ~0.7 of 40 draws
+
+
+def test_workload_prefix_stream_is_additive():
+    """prefix_share=0 consumes nothing from the prefix stream (knob
+    changes are invisible), and share>0 only PREPENDS to the legacy
+    bodies — arrivals and body draws are untouched."""
+    base = Workload(num_requests=24, rate=1e4, seed=11,
+                    tenants=(_tenant(prefix_share=0.0),))
+    knobs = Workload(num_requests=24, rate=1e4, seed=11,
+                     tenants=(_tenant(prefix_share=0.0, num_prefixes=9,
+                                      prefix_len=99),))
+    assert [r.prompt for r in base.generate()] == \
+        [r.prompt for r in knobs.generate()]
+    shared = Workload(num_requests=24, rate=1e4, seed=11,
+                      tenants=(_tenant(prefix_share=0.6, prefix_len=8),))
+    for r0, r1 in zip(base.generate(), shared.generate()):
+        assert r1.arrival_t == r0.arrival_t
+        assert r1.prompt[-len(r0.prompt):] == r0.prompt
+        assert len(r1.prompt) in (len(r0.prompt), len(r0.prompt) + 8)
+
+
+def test_workload_prefix_stream_survives_retiming():
+    """Rate changes re-time arrivals but never re-draw prompts or
+    prefix-carrier picks."""
+    slow = Workload(num_requests=24, rate=1e3, seed=5,
+                    tenants=(_tenant(prefix_share=0.5, prefix_len=8),))
+    fast = Workload(num_requests=24, rate=1e5, seed=5,
+                    tenants=(_tenant(prefix_share=0.5, prefix_len=8),))
+    assert [r.prompt for r in slow.generate()] == \
+        [r.prompt for r in fast.generate()]
+
+
+# ---------------------------------------------------------------------------
+# stats summary (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_summary_prefix_line_and_guards():
+    s = EngineStats()
+    s.metrics = {"prefix": {k: 0 for k in ("lookups", "lookup_blocks",
+                                           "hit_blocks", "peer_hits")}}
+    assert "prefix:" not in s.summary()    # all-zero: no line, no crash
+    s.metrics = {"prefix": {"lookups": 4, "lookup_blocks": 8,
+                            "hit_blocks": 4, "peer_hits": 1,
+                            "cow_splits": 2, "evictions": 1, "nodes": 3}}
+    line = [ln for ln in s.summary().splitlines() if "prefix:" in ln]
+    assert line and "50%" in line[0] and "peer-hit 25%" in line[0]
+    # hits without lookup_blocks (degenerate) must not divide by zero
+    s.metrics = {"prefix": {"lookups": 1}}
+    assert "0%" in [ln for ln in s.summary().splitlines()
+                    if "prefix:" in ln][0]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: bit identity + prefill savings
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def served_model():
+    import jax
+    from repro.models import model as M
+    cfg = dataclasses.replace(get_config("yi-6b").reduced(), num_layers=2)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# compute-bound regime: prefill flops dominate the weights-read floor for
+# prompts beyond ~9 tokens, so cached-prefix savings are visible in TTFT
+COMPUTE_BOUND_HW = dataclasses.replace(H100_NVLINK, peak_flops=3e13)
+
+
+def _run(served_model, prompts, *, prefix_cache, max_batch=2, **kw):
+    from repro.serving import HarvestServer
+    cfg, params = served_model
+    runtime = HarvestRuntime({1: 64 * MiB}, hardware=COMPUTE_BOUND_HW)
+    kw.setdefault("scheduler", "fair")
+    srv = HarvestServer(cfg, params, runtime=runtime, max_batch=max_batch,
+                        block_size=8, num_local_slots=10,
+                        prefix_cache=prefix_cache, **kw)
+    for p in prompts:
+        srv.engine.submit(p, 8)
+    stats = srv.engine.run()
+    return [r.output for r in srv.engine.finished], stats
+
+
+def test_e2e_cache_hit_bit_identity(served_model):
+    """The acceptance bit: decode under the cache is bit-identical to
+    decode without it — adoption changes where prefill KV comes from,
+    never its values — while hits, COW splits and per-request savings
+    are recorded and prefill time strictly drops."""
+    shared = list(range(3, 27))            # 3 full blocks at bs=8
+    prompts = [shared + [40 + i] for i in range(4)]
+    out_off, s_off = _run(served_model, prompts, prefix_cache=False)
+    out_on, s_on = _run(served_model, prompts, prefix_cache=True)
+    assert out_on == out_off, "prefix-cache hits changed decoded tokens"
+    pfx = s_on.metrics["prefix"]
+    assert pfx["hit_blocks"] >= 6 and pfx["published"] >= 3
+    assert s_on.prefill_s < s_off.prefill_s, \
+        "cached prefixes did not reduce prefill time (compute-bound)"
+    saved = [r.cached_prefix_blocks for r in s_on.requests]
+    assert sorted(saved) == [0, 0, 3, 3]   # first pair prefills, rest hit
+    assert all(r.cached_prefix_blocks == 0 for r in s_off.requests)
+    s_on.check_clock_identity()
+    assert "prefix:" in s_on.summary()
+
+
+def test_e2e_sequential_hits_lower_ttft(served_model):
+    """Back-to-back identical prompts (max_batch=1, FCFS): every later
+    request adopts the whole published prefix and its TTFT — measured
+    from its own admission — beats the cold request's."""
+    shared = list(range(50, 74))
+    prompts = [list(shared) for _ in range(3)]
+    out_on, s_on = _run(served_model, prompts, prefix_cache=True,
+                        max_batch=1, scheduler="fcfs")
+    out_off, _ = _run(served_model, prompts, prefix_cache=False,
+                      max_batch=1, scheduler="fcfs")
+    assert out_on == out_off
+    recs = sorted(s_on.requests, key=lambda r: r.req_id)
+    assert [r.cached_prefix_blocks for r in recs] == [0, 3, 3]
+    cold = recs[0].first_token_t - recs[0].admit_t
+    for warm in recs[1:]:
+        assert warm.first_token_t - warm.admit_t < cold
