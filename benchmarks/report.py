@@ -104,7 +104,8 @@ def section_claims():
     names = ["fig2_cluster_cdf", "fig3_transfer_latency", "table1_model_zoo",
              "fig5_moe_throughput", "fig6_offload_sweep", "fig7_kv_latency",
              "fig8_peer_scaling", "fig9_coalescing", "fig10_slo_serving",
-             "fig11_prefix_sharing", "roofline"]
+             "fig11_prefix_sharing", "fig12_continuous_batching",
+             "roofline"]
     rows = []
     for n in names:
         p = RESULTS_DIR / f"{n}.json"

@@ -17,7 +17,7 @@ import time
 from benchmarks.common import RESULTS_DIR, Check, summarize_checks
 
 BENCHES = ["fig2", "fig3", "table1", "fig5", "fig6", "fig7", "fig8",
-           "fig9", "fig10", "fig11", "roofline"]
+           "fig9", "fig10", "fig11", "fig12", "roofline"]
 
 
 def _call(name: str, fast: bool, hw: str):
@@ -52,6 +52,9 @@ def _call(name: str, fast: bool, hw: str):
     if name == "fig11":
         from benchmarks import fig11_prefix_sharing as m
         return m.run(RESULTS_DIR, hw=hw, fast=fast)
+    if name == "fig12":
+        from benchmarks import fig12_continuous_batching as m
+        return m.run(RESULTS_DIR, hw=hw, fast=fast)
     if name == "roofline":
         from benchmarks import roofline as m
         return m.run(RESULTS_DIR)
@@ -67,7 +70,8 @@ def main(argv=None) -> int:
                     choices=["h100-nvlink-2gpu", "tpu-v5e"],
                     help="hardware family for the per-family benchmarks "
                          "(fig8 topology sweep, fig10 SLO serving, fig11 "
-                         "prefix sharing): NVLink mesh vs TPU v5e ICI torus")
+                         "prefix sharing, fig12 continuous batching): "
+                         "NVLink mesh vs TPU v5e ICI torus")
     args = ap.parse_args(argv)
 
     names = args.only.split(",") if args.only else BENCHES

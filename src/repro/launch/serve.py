@@ -29,6 +29,14 @@ skip that part of prefill — the summary prints the hit rate):
 
   PYTHONPATH=src python -m repro.launch.serve --workload poisson \
       --prefix-cache --prefix-share 0.8 --scheduler fair
+
+Continuous batching (iteration-level slot refill is on for async mode;
+chunked prefill interleaves long prompts with decode steps, and the
+speculative-decode seam charges draft/verify windows on the same clock
+— the summary prints batch occupancy + bubble time):
+
+  PYTHONPATH=src python -m repro.launch.serve --workload poisson \
+      --chunk-prefill-tokens 32 --spec-draft 4 --spec-accept-rate 0.7
 """
 from __future__ import annotations
 
@@ -112,6 +120,19 @@ def main():
     ap.add_argument("--admission", default="all",
                     choices=["all", "headroom", "deadline"],
                     help="admission policy in front of the scheduler")
+    ap.add_argument("--chunk-prefill-tokens", type=int, default=None,
+                    metavar="N",
+                    help="split prefills into resumable chunks of N tokens "
+                         "interleaved with decode steps (implies --mode "
+                         "async); long prompts stop stalling latency-class "
+                         "decodes")
+    ap.add_argument("--spec-draft", type=int, default=0, metavar="K",
+                    help="speculative-decode seam: charge K draft tokens + "
+                         "one verify pass per landed token on the simulated "
+                         "clock (0 = off; emitted tokens are unchanged)")
+    ap.add_argument("--spec-accept-rate", type=float, default=0.7,
+                    help="per-position draft acceptance probability for "
+                         "--spec-draft (default 0.7)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.monitor_interval_us and not args.with_churn:
@@ -127,13 +148,21 @@ def main():
         ap.error("--prefix-share needs a lifecycle workload (--workload "
                  "poisson|bursty|diurnal): the legacy path draws prompts "
                  "without tenant prompt pools")
+    if args.chunk_prefill_tokens is not None and args.chunk_prefill_tokens <= 0:
+        ap.error(f"--chunk-prefill-tokens must be positive, got "
+                 f"{args.chunk_prefill_tokens}")
+    if args.spec_draft < 0:
+        ap.error(f"--spec-draft must be >= 0, got {args.spec_draft}")
+    if args.spec_draft and not 0.0 <= args.spec_accept_rate <= 1.0:
+        ap.error(f"--spec-accept-rate must be in [0, 1], got "
+                 f"{args.spec_accept_rate}")
 
     from repro.configs import get_config
     from repro.core import (ClusterTrace, ClusterTraceConfig, CoalesceConfig,
                             HarvestRuntime, PrefetchConfig,
                             TopologyAwarePolicy, get_topology)
     from repro.models import model as M
-    from repro.serving import TenantSpec, Workload
+    from repro.serving import SpecDecodeConfig, TenantSpec, Workload
 
     cfg = get_config(args.arch).reduced()
     params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
@@ -159,13 +188,18 @@ def main():
         monitor_interval_s=(args.monitor_interval_us * 1e-6
                             if args.monitor_interval_us else None))
 
-    mode = "async" if (args.prefetch or coalesce is not None) else args.mode
+    mode = "async" if (args.prefetch or coalesce is not None
+                       or args.chunk_prefill_tokens is not None) else args.mode
+    spec = (SpecDecodeConfig(draft_tokens=args.spec_draft,
+                             accept_rate=args.spec_accept_rate)
+            if args.spec_draft else None)
     server = runtime.server(
         cfg, params, max_batch=args.max_batch, block_size=args.block_size,
         num_local_slots=args.local_slots,
         scheduler=args.scheduler, durability=args.durability, seed=args.seed,
         mode=mode, prefetch=PrefetchConfig() if args.prefetch else None,
-        admission=args.admission, prefix_cache=args.prefix_cache)
+        admission=args.admission, prefix_cache=args.prefix_cache,
+        chunk_prefill_tokens=args.chunk_prefill_tokens, spec_decode=spec)
     eng = server.engine
 
     if args.workload == "legacy":

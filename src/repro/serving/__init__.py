@@ -2,7 +2,7 @@ from repro.serving.admission import (ADMISSION, AdmissionPolicy,
                                      AdmissionView, KVHeadroomAdmission,
                                      SLODeadlineAdmission)
 from repro.serving.engine import (EngineStats, HarvestServingEngine,
-                                  RequestRecord)
+                                  RequestRecord, SpecDecodeConfig)
 from repro.serving.scheduler import (SCHEDULERS, SLO_CLASSES,
                                      CompletelyFairScheduler, FCFSScheduler,
                                      Request)

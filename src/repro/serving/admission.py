@@ -34,7 +34,8 @@ class AdmissionView:
     def __init__(self, *, now: float, free_rows: int, num_slots: int,
                  pinned_blocks: int, num_running: int,
                  blocks_needed: Callable[[Request], int],
-                 est_prefill_s: Callable[[Request], float]):
+                 est_prefill_s: Callable[[Request], float],
+                 pending_prefill_s: float = 0.0):
         self.now = now
         self.free_rows = free_rows
         self.num_slots = num_slots              # local KV pool capacity
@@ -42,6 +43,9 @@ class AdmissionView:
         self.num_running = num_running
         self.blocks_needed = blocks_needed      # per-request working set
         self.est_prefill_s = est_prefill_s      # lower-bound service time
+        #: prefill seconds already committed ahead of this admission pass
+        #: (in-flight chunked prefills of running requests)
+        self.pending_prefill_s = pending_prefill_s
 
 
 class AdmissionPolicy:
@@ -100,6 +104,13 @@ class SLODeadlineAdmission(AdmissionPolicy):
     survivors are ordered priority-desc, deadline-asc, then FIFO.
     Requests that already produced a token are never shed — their TTFT is
     history and their KV investment is sunk.
+
+    The reachability check walks the queue in admission order carrying a
+    prefill *backlog*: the in-flight chunked-prefill seconds the engine
+    already committed (``view.pending_prefill_s``) plus the estimated
+    prefill of every request kept ahead in this same pass.  Without the
+    backlog each request is judged as if it would prefill first, so the
+    policy admits a convoy whose tail it then misses.
     """
 
     name = "deadline"
@@ -110,20 +121,24 @@ class SLODeadlineAdmission(AdmissionPolicy):
         self.slack = slack
 
     def select(self, waiting, view):
-        keep: List[Request] = []
-        shed: List[Request] = []
-        for r in waiting:
-            ddl = r.ttft_deadline_t
-            if (ddl is not None and r.first_token_t is None
-                    and view.now + view.est_prefill_s(r) * self.slack > ddl):
-                shed.append(r)
-            else:
-                keep.append(r)
         inf = float("inf")
-        keep.sort(key=lambda r: (
+        order = sorted(waiting, key=lambda r: (
             -r.priority,
             r.ttft_deadline_t if r.ttft_deadline_t is not None else inf,
             r.arrival_t, r.req_id))
+        keep: List[Request] = []
+        shed: List[Request] = []
+        backlog = view.pending_prefill_s
+        for r in order:
+            ddl = r.ttft_deadline_t
+            est = view.est_prefill_s(r)
+            if (ddl is not None and r.first_token_t is None
+                    and view.now + backlog + est * self.slack > ddl):
+                shed.append(r)
+                continue
+            keep.append(r)
+            if r.needs_prefill:
+                backlog += est
         return keep, shed
 
 

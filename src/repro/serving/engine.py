@@ -41,16 +41,28 @@ Generated tokens are REAL (greedy/temperature over the model's logits)
 and identical across modes: the pipeline changes *when* bytes move, never
 *where* a read is served from.
 
+Continuous batching (async mode): the engine schedules at *iteration*
+granularity, not batch granularity.  ``_retire`` frees a batch row and a
+same-step refill pass re-admits into it immediately, so a row never
+idles across a step boundary while work is queued (``q.batch.occupancy``
+in the transfer metrics proves it).  Long prompts prefill in resumable
+chunks of ``chunk_prefill_tokens`` interleaved with decode steps — the
+chunk rides the decode pass's weight read, so its marginal cost is its
+flops and latency-class decodes are never stalled behind a whole
+prompt.  A ``SpecDecodeConfig`` seam charges speculative draft/verify
+windows on the same clock without changing emitted tokens.
+
 Accounting identity (asserted by ``EngineStats.check_clock_identity``)::
 
     clock_s == prefill_s + compute_s + (reload_s - writeback_s)
-               - hidden_s + idle_s
+               - hidden_s + idle_s + bubble_s
 
 ``reload_s`` is every simulated transfer second; ``writeback_s`` the
 subset charged off the critical path (eviction write-outs); ``hidden_s``
 the critical-path transfer seconds absorbed under compute windows;
 ``idle_s`` the request-free gaps a clock-driven arrival process leaves
-between bursts.
+between bursts; ``bubble_s`` the windows the batch sat empty while work
+was queued but not admissible (capacity or policy holds).
 
 Request lifecycle (the PR 5 front door — :mod:`repro.serving.server`
 wraps this engine in the :class:`HarvestServer` facade)::
@@ -69,7 +81,7 @@ from __future__ import annotations
 import heapq
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -155,6 +167,65 @@ class RequestRecord:
         return True
 
 
+@dataclass(frozen=True)
+class SpecDecodeConfig:
+    """Speculative-decoding *cost seam*: a scenario knob that charges
+    draft + verify windows on the transfer-engine clock without changing
+    which tokens the engine emits.
+
+    Per accepted token the simulated decode window becomes::
+
+        (draft_tokens * draft_cost_frac * base + verify) / E[accepted]
+
+    where ``base`` is the plain decode window, ``verify`` is one batched
+    forward over ``draft_tokens + 1`` positions per row, and
+    ``E[accepted] = 1 + a1 + a1*a2 + ...`` over the per-position
+    ``accept_rate`` schedule (the verify pass always lands one token —
+    greedy spec-decode semantics).  Emitted tokens stay bit-identical:
+    the seam models *when* tokens land, a real draft model plugs in
+    later with a calibrated slot already wired through stats, serve
+    flags and the fig12 benchmark.
+    """
+
+    draft_tokens: int = 4
+    #: acceptance probability per draft position: one float (flat
+    #: schedule) or a tuple of length ``draft_tokens``
+    accept_rate: Union[float, Tuple[float, ...]] = 0.7
+    #: draft-model cost as a fraction of the target decode window
+    draft_cost_frac: float = 0.1
+
+    def __post_init__(self):
+        if self.draft_tokens <= 0:
+            raise ValueError(
+                f"draft_tokens must be positive, got {self.draft_tokens}")
+        if not isinstance(self.accept_rate, (int, float)):
+            if len(self.accept_rate) != self.draft_tokens:
+                raise ValueError(
+                    f"accept_rate schedule has {len(self.accept_rate)} "
+                    f"entries for {self.draft_tokens} draft positions")
+        if any(not 0.0 <= a <= 1.0 for a in self.schedule()):
+            raise ValueError(
+                f"accept_rate entries must be in [0, 1], got "
+                f"{self.accept_rate!r}")
+        if not 0.0 < self.draft_cost_frac <= 1.0:
+            raise ValueError(
+                f"draft_cost_frac must be in (0, 1], got "
+                f"{self.draft_cost_frac}")
+
+    def schedule(self) -> Tuple[float, ...]:
+        if isinstance(self.accept_rate, (int, float)):
+            return (float(self.accept_rate),) * self.draft_tokens
+        return tuple(float(a) for a in self.accept_rate)
+
+    def expected_accepted(self) -> float:
+        """Expected tokens landed per verify pass (always >= 1)."""
+        e, p = 1.0, 1.0
+        for a in self.schedule():
+            p *= a
+            e += p
+        return e
+
+
 def _pct(xs: List[float], q: float) -> float:
     """Nearest-rank percentile; 0.0 on an empty sample (guarded)."""
     if not xs:
@@ -173,6 +244,7 @@ class EngineStats:
     hidden_s: float = 0.0     # critical transfer seconds hidden under compute
     stall_s: float = 0.0      # async: time the step waited on its reads
     idle_s: float = 0.0       # request-free gaps between clocked arrivals
+    bubble_s: float = 0.0     # batch empty while work queued (not admissible)
     steps: int = 0
     tokens_out: int = 0
     recomputes: int = 0
@@ -240,10 +312,12 @@ class EngineStats:
         exactly once.  (The pre-refactor engine silently dropped prefill- and
         preemption-time eviction transfers from the clock; they are now the
         explicit ``writeback_s`` class.  Clock-driven arrivals add the
-        ``idle_s`` class: request-free gaps the engine slept through.)"""
+        ``idle_s`` class: request-free gaps the engine slept through.
+        Continuous batching adds ``bubble_s``: windows the batch sat empty
+        while queued work was not admissible.)"""
         expect = (self.prefill_s + self.compute_s
                   + self.reload_s - self.writeback_s - self.hidden_s
-                  + self.idle_s)
+                  + self.idle_s + self.bubble_s)
         if not math.isclose(self.clock_s, expect, rel_tol=rel,
                             abs_tol=abs_tol):
             raise AssertionError(
@@ -251,7 +325,7 @@ class EngineStats:
                 f"prefill {self.prefill_s!r} + compute {self.compute_s!r} + "
                 f"reload {self.reload_s!r} - writeback {self.writeback_s!r} "
                 f"- hidden {self.hidden_s!r} + idle {self.idle_s!r} "
-                f"= {expect!r}")
+                f"+ bubble {self.bubble_s!r} = {expect!r}")
         return True
 
     def summary(self) -> str:
@@ -271,6 +345,14 @@ class EngineStats:
             f"  preemptions {self.preemptions}   recomputes {self.recomputes}"
             f"   idle {self.idle_s * ms:.3f} ms   rejected {self.rejected}",
         ]
+        occ = self.metrics.get("transfer", {}).get("q.batch.occupancy")
+        if occ is not None or self.bubble_s:
+            qocc = self.metrics.get("transfer", {}).get("q.batch.q_occupancy")
+            lines.append(
+                "  batch occupancy "
+                + (f"{occ:.1%} mean" if occ is not None else "n/a")
+                + (f" ({qocc:.1%} while queued)" if qocc is not None else "")
+                + f"   bubble {self.bubble_s * ms:.3f} ms")
         if self.requests:
             classes = [c for c in SLO_CLASSES
                        if any(r.slo == c for r in self.requests)]
@@ -329,7 +411,7 @@ class EngineStats:
             util = min(s_chk / s_obj / ways, 1.0) if ways else 0.0
             lines.append(f"  stripe: objects {s_obj}  chunks {s_chk}  "
                          f"ways {ways}  sub-lane utilization {util:.0%}")
-        for ns in ("prefetch", "transfer", "allocator", "monitor"):
+        for ns in ("prefetch", "transfer", "spec", "allocator", "monitor"):
             counters = self.metrics.get(ns)
             if not counters:
                 continue
@@ -355,7 +437,10 @@ class HarvestServingEngine:
                  overlap_reloads: bool = True, mode: str = "sync",
                  prefetch: Optional[PrefetchConfig] = None,
                  admission: "str | AdmissionPolicy" = "all",
-                 prefix_cache: "bool | PrefixCacheConfig" = False):
+                 prefix_cache: "bool | PrefixCacheConfig" = False,
+                 chunk_prefill_tokens: Optional[int] = None,
+                 spec_decode: Optional[SpecDecodeConfig] = None,
+                 iter_refill: Optional[bool] = None):
         assert cfg.has_kv_cache or cfg.family == "ssm"
         assert mode in ("sync", "async"), f"unknown clock mode {mode!r}"
         # the engine runs over ONE HarvestRuntime; the allocator/monitor/
@@ -477,6 +562,33 @@ class HarvestServingEngine:
         self._step_critical_s = 0.0
         self._append_slot = np.full((self.B,), self.n_slots, np.int32)
         self._append_off = np.zeros((self.B,), np.int32)
+
+        # -------- continuous batching (iteration-level scheduling) --------
+        if chunk_prefill_tokens is not None and chunk_prefill_tokens <= 0:
+            raise ValueError(f"chunk_prefill_tokens must be positive, got "
+                             f"{chunk_prefill_tokens}")
+        assert chunk_prefill_tokens is None or mode == "async", \
+            "chunked prefill interleaves with the event timeline: " \
+            "pass mode='async'"
+        self._chunk_tokens = chunk_prefill_tokens
+        #: prefills finished THIS step (first token pending commit stamp)
+        self._chunk_done: List[Request] = []
+        # iteration-level slot refill: retired rows refill in the same
+        # step.  Default on for the event timeline; sync stays the
+        # bit-exact legacy batch-granularity path.
+        if iter_refill is None:
+            iter_refill = mode == "async"
+        assert not (iter_refill and mode == "sync"), \
+            "per-iteration slot refill needs mode='async' (sync is the " \
+            "bit-exact legacy path)"
+        self._refill = iter_refill
+        self._spec = spec_decode
+        self._spec_stats = (runtime.metrics.counters("spec")
+                            if spec_decode is not None else None)
+        # time-weighted batch-row occupancy over step/bubble windows
+        # (q.batch.* in the transfer namespace; q_* = queue non-empty)
+        self._qbatch = (runtime.metrics.counters("transfer")
+                        if mode == "async" else None)
 
     # ----------------------------------------------------------- payload
     def _on_evict(self, bid, slot):
@@ -650,8 +762,11 @@ class HarvestServingEngine:
             self.stats.clock_s += t
         return matched
 
-    def _prefill(self, r: Request) -> None:
-        prefix = r.prompt + r.output            # rollback re-prefills output
+    def _prefill_forward(self, prefix: List[int]):
+        """One REAL forward over the (padded) prefix; returns
+        ``(logits, out, npre, n_pad)``.  Shared by the inline prefill and
+        the final chunk of a chunked prefill — token fidelity comes from
+        this single full-prefix forward in both paths."""
         n = len(prefix)
         n_pad = self.bs * math.ceil(n / self.bs)
         toks = np.zeros((1, n_pad), np.int32)
@@ -669,6 +784,12 @@ class HarvestServingEngine:
             batch["positions_3d"] = jnp.broadcast_to(
                 jnp.arange(s_all)[:, None], (1, s_all, 3))
         logits, out = self._prefill_fn(self.params, batch)
+        return logits, out, npre, n_pad
+
+    def _prefill(self, r: Request) -> None:
+        prefix = r.prompt + r.output            # rollback re-prefills output
+        n = len(prefix)
+        logits, out, npre, n_pad = self._prefill_forward(prefix)
         row = r.row
         # prefix-cache lookup: adopt (or COW-split) the longest cached
         # block chain BEFORE the prefill window — a hit's only cost is
@@ -681,8 +802,7 @@ class HarvestServingEngine:
         # same estimate deadline admission sheds against).  The REAL
         # forward above still spans the whole prefix: the repo's "real
         # compute for token fidelity, simulated clock for cost" pattern.
-        prefill_t = max((n - len(matched) * self.bs) * self._t_flop_tok,
-                        self._t_weights)
+        prefill_t = self._prefill_window_s(n - len(matched) * self.bs)
         self.stats.prefill_s += prefill_t
         if self.mode == "sync":
             self.stats.clock_s += prefill_t
@@ -726,6 +846,147 @@ class HarvestServingEngine:
         self.row_tokens[row] = r.output[-1]
         self.row_pos[row] = len(r.prompt) + len(r.output) - 1
         r.needs_prefill = False
+
+    # ---------------------------------------------------- chunked prefill
+    def _prefill_chunks(self) -> int:
+        """Advance every in-flight prefill by up to ``chunk_prefill_tokens``
+        tokens total this step (FIFO over the running set), interleaved
+        with the decode pass.  Returns the tokens consumed — the step
+        window charges their flops on top of the decode weight read."""
+        self._chunk_done = []
+        if self._chunk_tokens is None:
+            return 0
+        budget = self._chunk_tokens
+        total = 0
+        for r in list(self.running):
+            if budget <= 0:
+                break
+            if not r.needs_prefill:
+                continue
+            c = self._advance_chunk(r, budget)
+            budget -= c
+            total += c
+            if not r.needs_prefill:
+                self._chunk_done.append(r)
+        return total
+
+    def _advance_chunk(self, r: Request, budget: int) -> int:
+        """One resumable prefill chunk: allocate the chunk's KV blocks
+        (ONE coalesced write-back burst per chunk instead of per prompt)
+        and advance ``prefill_pos``.  The first chunk adopts the cached
+        prefix chain; the last runs the real forward via
+        :meth:`_finish_prefill`."""
+        prefix = r.prompt + r.output
+        n = len(prefix)
+        if r.prefill_pos == 0 and self._pcache is not None and self.L_kv:
+            # chunking starts from the divergence point, like _prefill
+            matched = self._adopt_prefix(r)
+            r.cached_prefix_blocks = len(matched)
+            r.prefill_pos = min(len(matched) * self.bs, n)
+        c = min(budget, n - r.prefill_pos)
+        lo = r.prefill_pos
+        r.prefill_pos += c
+        if self.L_kv and c:
+            ops = []
+            for j in range(lo // self.bs,
+                           math.ceil(r.prefill_pos / self.bs)):
+                if (r.req_id, j) in self.kv_mgr.table:
+                    continue
+                slot, aops = self.kv_mgr.allocate_block(r.req_id, j,
+                                                        j * self.bs)
+                ops.extend(aops)
+                self.slot_req[slot] = r.row
+                self.slot_base[slot] = j * self.bs
+            if ops:
+                self._charge_writeback(ops)
+        if r.prefill_pos >= n:
+            self._finish_prefill(r)
+        return c
+
+    def _finish_prefill(self, r: Request) -> None:
+        """The last chunk: run the REAL forward over the whole prefix
+        (identical to the unchunked call — chunking changes only the
+        clock, never the tokens), fill the pool payloads of every
+        non-cached block, and land the first token.  Its timestamp and
+        stream callback are deferred to :meth:`_commit_first_tokens` —
+        TTFT is the end of the step window the chunk completed in."""
+        prefix = r.prompt + r.output
+        n = len(prefix)
+        logits, out, npre, n_pad = self._prefill_forward(prefix)
+        row = r.row
+        if self.L_kv:
+            k, v = out.kv
+            if npre:
+                k, v = k[:, :, npre:], v[:, :, npre:]
+            nb = math.ceil(n / self.bs)
+            for j in range(r.cached_prefix_blocks, nb):
+                # blocks were allocated chunk by chunk; fill payloads now
+                ent = self.kv_mgr.table[(r.req_id, j)]
+                slot = ent.local_slot
+                lo, hi = j * self.bs, min((j + 1) * self.bs, n_pad)
+                self.pool_k = self.pool_k.at[:, slot, :hi - lo].set(
+                    k[:, 0, lo:hi].astype(jnp.float32))
+                self.pool_v = self.pool_v.at[:, slot, :hi - lo].set(
+                    v[:, 0, lo:hi].astype(jnp.float32))
+                self.slot_req[slot] = row
+                self.slot_base[slot] = j * self.bs
+                ent.filled = min(self.bs, n - lo) if lo < n else 0
+        if out.states is not None:
+            self._set_state_row(row, out.states)
+        nxt = self._sample(np.asarray(logits[0, npre + n - 1]))
+        if not r.output:
+            # a rollback re-prefill replays the prefix without re-emitting
+            r.output.append(int(nxt))
+            self.stats.tokens_out += 1
+        self.row_tokens[row] = r.output[-1]
+        self.row_pos[row] = len(r.prompt) + len(r.output) - 1
+        r.needs_prefill = False
+
+    def _commit_first_tokens(self) -> None:
+        """Stamp + stream the first tokens of prefills that finished this
+        step, at the step window's end — TTFT lands exactly once, at the
+        true first-token time (rollback re-prefills keep their original
+        stamp and never re-stream)."""
+        if not self._chunk_done:
+            return
+        now = self._now()
+        for r in self._chunk_done:
+            if r.first_token_t is None:
+                r.first_token_t = now
+                if r.on_token is not None:
+                    r.on_token(r.output[-1], r)
+        self._chunk_done = []
+
+    def _step_window(self, n_dec: int, chunk_tokens: int,
+                     w_dec: float) -> float:
+        """One iteration's accelerator window.  A prefill chunk rides the
+        decode pass's weight read, so its marginal cost is its flops; a
+        step with no decoders pays a standalone prefill window (which the
+        shared :meth:`_prefill_window_s` floors at one weight read)."""
+        if n_dec == 0:
+            return self._prefill_window_s(chunk_tokens)
+        if chunk_tokens <= 0:
+            return w_dec
+        fused = max((n_dec + chunk_tokens) * self._t_flop_tok,
+                    self._t_weights)
+        base = max(n_dec * self._t_flop_tok, self._t_weights)
+        return w_dec + fused - base
+
+    def _bubble_step(self) -> None:
+        """The batch is empty while work is queued but not admissible
+        (capacity or policy hold).  The legacy engine spun a zero-clock
+        step; on the event timeline that freezes deadline policies and
+        burns ``max_steps``.  Advance to the next event that can change
+        admissibility — the next arrival, else one weight-read window —
+        and charge the gap to its own ``bubble_s`` accounting class."""
+        now = self._now()
+        nxt = self.next_arrival_t()
+        t = nxt if (nxt is not None and nxt > now) else now + self._t_weights
+        dt = t - now
+        self.stats.bubble_s += dt
+        self.runtime.transfers.drain_until(self._clock0 + t)
+        self._sync_clock()
+        self._track_occupancy(dt, 0)
 
     def _sample(self, logits: np.ndarray) -> int:
         if self.temperature <= 0:
@@ -825,16 +1086,31 @@ class HarvestServingEngine:
         as the prefetcher's slot floor, so the two can never diverge."""
         return math.ceil((len(req.prompt) + len(req.output) + 1) / self.bs) + 1
 
+    def _prefill_window_s(self, tokens: int) -> float:
+        """THE prefill cost formula, shared by ``_prefill`` (charging),
+        ``_est_prefill_s`` (admission) and the chunked-prefill windows:
+        one weight read floors the compute of ``tokens`` positions.
+        Chunking changes the cost model in exactly this one place."""
+        return max(max(tokens, 0) * self._t_flop_tok, self._t_weights)
+
+    def _remaining_prefill_s(self, req: Request) -> float:
+        """Prefill seconds still owed to an in-flight chunked prefill."""
+        left = len(req.prompt) + len(req.output) - req.prefill_pos
+        return self._prefill_window_s(left)
+
     def _est_prefill_s(self, req: Request) -> float:
         """Lower-bound service time to the first token: the prefill
-        compute window.  Deadline-aware admission sheds a queued request
-        once even this cannot land inside its TTFT SLO."""
-        n = len(req.prompt) + len(req.output)
-        if self._pcache is not None:
+        compute window over the not-yet-prefilled suffix.  Deadline-aware
+        admission sheds a queued request once even this cannot land
+        inside its TTFT SLO.  With chunked prefill the bound is per-chunk
+        exact: chunks ride decode weight reads, so the remaining work is
+        still flop-bound with a single weight-read floor."""
+        n = len(req.prompt) + len(req.output) - req.prefill_pos
+        if self._pcache is not None and req.prefill_pos == 0:
             # shedding decisions see the post-cache prefill cost: a cached
             # prefix starts its prefill from the divergence point
             n -= self._pcache.probe(req.prompt + req.output)
-        return max(n * self._t_flop_tok, self._t_weights)
+        return self._prefill_window_s(n)
 
     def _shed(self, r: Request, now: float) -> None:
         """Load shedding: reject a queued request without spending a
@@ -869,7 +1145,9 @@ class HarvestServingEngine:
             pinned_blocks=sum(self._blocks_needed(r) for r in self.running),
             num_running=len(self.running),
             blocks_needed=self._blocks_needed,
-            est_prefill_s=self._est_prefill_s)
+            est_prefill_s=self._est_prefill_s,
+            pending_prefill_s=sum(self._remaining_prefill_s(r)
+                                  for r in self.running if r.needs_prefill))
         eligible, shed = self.admission.select(list(self.waiting), view)
         for r in shed:
             self.waiting.remove(r)
@@ -894,7 +1172,10 @@ class HarvestServingEngine:
             self.row_of[r.req_id] = r.row
             self.kv_mgr.pinned.add(r.req_id)
             if r.needs_prefill:
-                self._prefill(r)
+                # chunked mode: the prefill advances in resumable chunks
+                # from the next _prefill_chunks pass instead of inline
+                if self._chunk_tokens is None:
+                    self._prefill(r)
             else:
                 self._resume(r)
 
@@ -916,25 +1197,40 @@ class HarvestServingEngine:
             if self.prefetcher is not None:
                 self.prefetcher.cancel_owner(r.req_id)
             self.kv_mgr.free_request(r.req_id)
-            self._prefill(r)
+            self._restart_prefill(r)
         else:
             self.row_tokens[r.row] = r.output[-1]
             self.row_pos[r.row] = r.pos
         if self.mode == "sync":
             self.stats.clock_s += t
 
-    def _plan_fetches(self) -> List[Tuple[Request, List[Tuple[int, int]]]]:
-        """The read set of the CURRENT step: every running request's blocks
-        up to its decode position.  Only transfers for these blocks may
-        stall the step — everything else (write-backs, prefetches) rides
-        the link lanes in the background."""
+    def _restart_prefill(self, r: Request) -> None:
+        """Lossy-revocation rollback: the whole prefix must be rebuilt.
+        With chunked prefill the rebuild is itself chunked (it resumes
+        from the next ``_prefill_chunks`` pass without re-emitting the
+        first token); otherwise it re-prefills inline, exactly the
+        legacy recompute path."""
+        r.needs_prefill = True
+        r.prefill_pos = 0
+        if self._chunk_tokens is None:
+            self._prefill(r)
+
+    def _plan_fetches(self, reqs: Optional[Sequence[Request]] = None
+                      ) -> List[Tuple[Request, List[Tuple[int, int]]]]:
+        """The read set of the CURRENT step: every decoding request's
+        blocks up to its decode position.  Only transfers for these blocks
+        may stall the step — everything else (write-backs, prefetches)
+        rides the link lanes in the background."""
         if not self.L_kv:
             return []
+        if reqs is None:
+            reqs = self.running
         return [(r, [(r.req_id, j)
                      for j in range(math.ceil((r.pos + 1) / self.bs))])
-                for r in list(self.running)]
+                for r in list(reqs)]
 
-    def _launch_transfers(self, plan) -> float:
+    def _launch_transfers(self, plan, decoding: Optional[List[Request]] = None
+                          ) -> float:
         """Make the planned blocks resident (fetch mode), allocate the
         append blocks the step writes, and charge/queue the transfers.
         Each request's blocks go through one batched
@@ -960,18 +1256,23 @@ class HarvestServingEngine:
                 if self.prefetcher is not None:
                     self.prefetcher.cancel_owner(r.req_id)
                 self.kv_mgr.free_request(r.req_id)
-                self._prefill(r)
-        reload_t += self._allocate_append_blocks()
+                self._restart_prefill(r)
+                if r.needs_prefill and decoding is not None and r in decoding:
+                    # chunked rebuild: the request sits out this step's
+                    # decode (its pool rows are gone until re-prefilled)
+                    decoding.remove(r)
+        reload_t += self._allocate_append_blocks(
+            self.running if decoding is None else decoding)
         return reload_t
 
-    def _allocate_append_blocks(self) -> float:
+    def _allocate_append_blocks(self, reqs: Sequence[Request]) -> float:
         """Allocate a block wherever a position crosses an append boundary.
         The slot must be free before the decode kernel writes, so any
         eviction it forces is on the critical path."""
         self._append_slot = np.full((self.B,), self.n_slots, np.int32)
         self._append_off = np.zeros((self.B,), np.int32)
         t_total = 0.0
-        for r in self.running:
+        for r in reqs:
             pos = r.pos
             j = pos // self.bs
             if self.L_kv:
@@ -987,9 +1288,26 @@ class HarvestServingEngine:
                 ent.filled = max(ent.filled, pos % self.bs + 1)
         return t_total
 
-    def _estimate_compute(self) -> float:
-        """Decode window: weight-read bound below the batch crossover."""
-        return max(len(self.running) * self._t_flop_tok, self._t_weights)
+    def _estimate_compute(self, n_dec: Optional[int] = None) -> float:
+        """Decode window: weight-read bound below the batch crossover.
+        With a :class:`SpecDecodeConfig` the window is the amortized
+        draft+verify cost per landed token (the seam charges speculative
+        clock without changing emitted tokens)."""
+        if n_dec is None:
+            n_dec = len(self.running)
+        base = max(n_dec * self._t_flop_tok, self._t_weights)
+        sd = self._spec
+        if sd is None or n_dec == 0:
+            return base
+        k = sd.draft_tokens
+        draft = k * sd.draft_cost_frac * base
+        verify = max((k + 1) * n_dec * self._t_flop_tok, self._t_weights)
+        st = self._spec_stats
+        st["draft_tokens"] += k * n_dec
+        st["verify_tokens"] += (k + 1) * n_dec
+        st["verify_passes"] += 1
+        st["expected_accepted"] = sd.expected_accepted()
+        return (draft + verify) / sd.expected_accepted()
 
     def _compute(self):
         """Run the real decode kernel over the batch; returns logits."""
@@ -1013,16 +1331,25 @@ class HarvestServingEngine:
             self.states = new_state.states
         return logits
 
-    def _account_step(self, compute_t: float, reload_t: float) -> None:
-        """Advance the simulated clock by one decode step."""
-        self.stats.compute_s += compute_t
+    def _account_step(self, compute_t: float, reload_t: float,
+                      prefill_share: float = 0.0) -> None:
+        """Advance the simulated clock by one decode step.
+        ``prefill_share`` is the slice of the window owed to interleaved
+        prefill chunks (charged to ``prefill_s``, zero on the legacy
+        paths).  Async mode consumes — then clears — the step's critical
+        waits here, so critical transfers charged by an end-of-step
+        refill admission carry into the NEXT step's wait set instead of
+        being orphaned."""
+        self.stats.compute_s += compute_t - prefill_share
+        self.stats.prefill_s += prefill_share
         te = self.runtime.transfers
         if self.mode == "sync":
             step_t = te.overlap(compute_t, reload_t, enabled=self.overlap)
             self.stats.clock_s += step_t
             self.stats.hidden_s += compute_t + reload_t - step_t
             return
-        compute_end = te.now + compute_t
+        t0 = te.now
+        compute_end = t0 + compute_t
         ready = max((tr.ready_t for tr in self._step_waits if not tr.done),
                     default=compute_end)
         end = max(compute_end, ready)
@@ -1030,15 +1357,36 @@ class HarvestServingEngine:
         te.drain_until(end)
         self.stats.stall_s += stall
         self.stats.hidden_s += self._step_critical_s - stall
+        self._step_waits = []
+        self._step_critical_s = 0.0
         self._sync_clock()
+        self._track_occupancy(end - t0, self.B - len(self.free_rows))
 
-    def _commit_and_sample(self, logits) -> None:
-        """Sample one token per running request, commit it, and stream it
+    def _track_occupancy(self, window_s: float, occupied: int) -> None:
+        """Time-weighted batch-row occupancy (``q.batch.*`` counters):
+        ``occupancy`` is the mean over every step/bubble window,
+        ``q_occupancy`` the mean over windows where the ready queue was
+        non-empty — continuous batching's promise is the latter pinned at
+        1.0 whenever capacity allows."""
+        qb = self._qbatch
+        if qb is None or window_s <= 0:
+            return
+        qb["q.batch.row_s"] += occupied * window_s
+        qb["q.batch.cap_s"] += self.B * window_s
+        qb["q.batch.occupancy"] = qb["q.batch.row_s"] / qb["q.batch.cap_s"]
+        if self.waiting:
+            qb["q.batch.q_row_s"] += occupied * window_s
+            qb["q.batch.q_cap_s"] += self.B * window_s
+            qb["q.batch.q_occupancy"] = (qb["q.batch.q_row_s"]
+                                         / qb["q.batch.q_cap_s"])
+
+    def _commit_and_sample(self, logits, reqs: Sequence[Request]) -> None:
+        """Sample one token per decoding request, commit it, and stream it
         to the request's callback (the clock has already advanced past
         this step's window, so the timestamp is the token's ready time)."""
         logits_np = np.asarray(logits)
         now = self._now()
-        for r in self.running:
+        for r in reqs:
             tok = self._sample(logits_np[r.row])
             r.output.append(tok)
             r.decode_steps += 1
@@ -1089,17 +1437,30 @@ class HarvestServingEngine:
             self._admit_arrivals()
         sched_step = self.stats.steps
         self.kv_mgr.pinned = {r.req_id for r in self.running}
-        self._step_waits = []
-        self._step_critical_s = 0.0
+        if self.mode == "sync":
+            # async consumes these in _account_step so refill-time charges
+            # carry into the next step's wait set; sync never queues any
+            self._step_waits = []
+            self._step_critical_s = 0.0
 
         self._preempt(sched_step)
         self._admit()
+        chunk_tokens = self._prefill_chunks()
         if not self.running:
+            if self.mode == "async" and self.waiting:
+                # queued work, empty batch: a scheduling bubble with its
+                # own accounting class (the sync legacy path keeps the
+                # zero-clock spin for bit-exactness)
+                self._bubble_step()
             self.stats.steps += 1
             return bool(self.waiting or self._arrivals)
 
-        plan = self._plan_fetches()
-        reload_t = self._launch_transfers(plan)
+        # the decode set: running minus in-flight prefills minus prefills
+        # that finished THIS step (their first token IS this window's work)
+        decoding = [r for r in self.running
+                    if not r.needs_prefill and r not in self._chunk_done]
+        plan = self._plan_fetches(decoding)
+        reload_t = self._launch_transfers(plan, decoding)
         # coalesce + submit the step's whole critical set: one batched
         # lane occupancy per link direction (no-op without a planner)
         reload_t += self._flush_step_plan()
@@ -1109,7 +1470,9 @@ class HarvestServingEngine:
         # reads depend on has already been made local above, so the step
         # itself is safe — the revocation hits the resident-in-peer tail)
         self._poll_pressure()
-        compute_t = self._estimate_compute()
+        n_dec = len(decoding)
+        w_dec = self._estimate_compute(n_dec) if n_dec else 0.0
+        compute_t = self._step_window(n_dec, chunk_tokens, w_dec)
         if self.prefetcher is not None:
             # worst-case slots the next allocations may claim: one append
             # block per running request + the head-of-line waiter's whole
@@ -1127,10 +1490,21 @@ class HarvestServingEngine:
                 # the saved setup inside a coalesced batch)
                 self.stats.reload_s += op.lane_s
                 self.stats.hidden_s += op.lane_s
-        logits = self._compute()
-        self._account_step(compute_t, reload_t)
-        self._commit_and_sample(logits)
+        logits = self._compute() if n_dec else None
+        self._account_step(compute_t, reload_t,
+                           prefill_share=compute_t - w_dec)
+        if logits is not None:
+            self._commit_and_sample(logits, decoding)
+        self._commit_first_tokens()
         self._retire()
+        if self._refill and self.free_rows:
+            # iteration-level slot refill: rows freed by _retire and
+            # arrivals that landed inside this step's window meet NOW,
+            # not at the top of the next step — a row never idles across
+            # a step boundary while work is queued
+            self._admit_arrivals()
+            if self.waiting:
+                self._admit()
 
         if self._timeline_ticks is not None:
             self._poll_pressure()
@@ -1158,6 +1532,21 @@ class HarvestServingEngine:
     def finalize(self) -> EngineStats:
         """Snapshot the unified metrics and assert the clock identity.
         Idempotent — ``run``/``run_until`` call it after every drive."""
+        if self.mode == "async" and (self._step_waits
+                                     or self._step_critical_s):
+            # a truncated run (max_steps) can leave refill-time critical
+            # transfers unconsumed; classify them exactly like a step
+            # would so the clock identity stays exact
+            te = self.runtime.transfers
+            ready = max((tr.ready_t for tr in self._step_waits
+                         if not tr.done), default=te.now)
+            stall = max(ready - te.now, 0.0)
+            te.drain_until(max(ready, te.now))
+            self.stats.stall_s += stall
+            self.stats.hidden_s += self._step_critical_s - stall
+            self._step_waits = []
+            self._step_critical_s = 0.0
+            self._sync_clock()
         self.stats.metrics = self.runtime.stats()
         self.stats.check_clock_identity()
         return self.stats

@@ -47,6 +47,9 @@ class Request:
     enqueue_step: int = 0              # scheduler step index at enqueue
     decode_steps: int = 0
     needs_prefill: bool = True         # (re)prefill required (new / rolled back)
+    prefill_pos: int = 0               # tokens already prefilled (chunked
+    #                                  # prefill resumes from here; a rollback
+    #                                  # re-prefill resets it to 0)
     cached_prefix_blocks: int = 0      # prompt blocks served by the prefix
     #                                  # cache at the last (re)prefill
     # ---- request-lifecycle API (SLO class, arrival clock, streaming) ----
