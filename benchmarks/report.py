@@ -100,12 +100,39 @@ def section_metrics():
     print(md_table(["artifact", "namespace", "counter", "value"], rows))
 
 
+def section_fidelity():
+    """Fidelity-tier counters from the fig13 artifact: quantized demotes
+    and dequantizing reloads, link bytes saved, and the dequantize share
+    of the clock, per capacity/SLO cell."""
+    p = RESULTS_DIR / "fig13_fidelity_tiers.json"
+    if not p.exists():
+        print("_no fig13 artifact yet — run `python -m benchmarks.run "
+              "--only fig13`_")
+        return
+    payload = json.loads(p.read_text())
+    rows = []
+    for r in payload.get("rows", []):
+        fid = r["fidelity"]
+        clock = fid["clock_s"]
+        share = fid["dequant_s"] / clock if clock else 0.0
+        rows.append([
+            payload.get("hw", "-"), r["capacity"], r["slo"],
+            "yes" if r["tokens_match"] else "no",
+            fid["demote_quantized"], fid["reload_dequantized"],
+            f"{fid['bytes_saved'] / 2**10:.1f}",
+            f"{r['link_bytes_ratio']:.2f}x",
+            f"{share:.2%}"])
+    print(md_table(["hw", "capacity", "class", "tokens=", "demotes",
+                    "dequant reloads", "KiB saved", "link ratio",
+                    "dequant share"], rows))
+
+
 def section_claims():
     names = ["fig2_cluster_cdf", "fig3_transfer_latency", "table1_model_zoo",
              "fig5_moe_throughput", "fig6_offload_sweep", "fig7_kv_latency",
              "fig8_peer_scaling", "fig9_coalescing", "fig10_slo_serving",
              "fig11_prefix_sharing", "fig12_continuous_batching",
-             "roofline"]
+             "fig13_fidelity_tiers", "roofline"]
     rows = []
     for n in names:
         p = RESULTS_DIR / f"{n}.json"
@@ -137,6 +164,9 @@ if __name__ == "__main__":
     if a.section in ("claims", "all"):
         print("\n### Paper-claim checks\n")
         section_claims()
+    if a.section in ("fidelity", "all"):
+        print("\n### Fidelity tiers (fig13)\n")
+        section_fidelity()
     if a.section in ("metrics", "all"):
         print("\n### Runtime metrics (transfer queues, prefetch)\n")
         section_metrics()

@@ -17,7 +17,7 @@ import time
 from benchmarks.common import RESULTS_DIR, Check, summarize_checks
 
 BENCHES = ["fig2", "fig3", "table1", "fig5", "fig6", "fig7", "fig8",
-           "fig9", "fig10", "fig11", "fig12", "roofline"]
+           "fig9", "fig10", "fig11", "fig12", "fig13", "roofline"]
 
 
 def _call(name: str, fast: bool, hw: str):
@@ -55,6 +55,9 @@ def _call(name: str, fast: bool, hw: str):
     if name == "fig12":
         from benchmarks import fig12_continuous_batching as m
         return m.run(RESULTS_DIR, hw=hw, fast=fast)
+    if name == "fig13":
+        from benchmarks import fig13_fidelity_tiers as m
+        return m.run(RESULTS_DIR, hw=hw, fast=fast)
     if name == "roofline":
         from benchmarks import roofline as m
         return m.run(RESULTS_DIR)
@@ -70,8 +73,8 @@ def main(argv=None) -> int:
                     choices=["h100-nvlink-2gpu", "tpu-v5e"],
                     help="hardware family for the per-family benchmarks "
                          "(fig8 topology sweep, fig10 SLO serving, fig11 "
-                         "prefix sharing, fig12 continuous batching): "
-                         "NVLink mesh vs TPU v5e ICI torus")
+                         "prefix sharing, fig12 continuous batching, fig13 "
+                         "fidelity tiers): NVLink mesh vs TPU v5e ICI torus")
     args = ap.parse_args(argv)
 
     names = args.only.split(",") if args.only else BENCHES

@@ -31,7 +31,8 @@ from repro.core.coalesce import CoalesceConfig, TransferPlanner
 from repro.core.kv_manager import (BlockEntry, KVOffloadManager, ReloadOp,
                                    ReloadPlan)
 from repro.core.monitor import ClusterTrace, ClusterTraceConfig, PeerMonitor
-from repro.core.policy import (BestFitPolicy, FairnessPolicy, LocalityPolicy,
+from repro.core.policy import (FIDELITY_POLICIES, BestFitPolicy,
+                               FairnessPolicy, FidelityPolicy, LocalityPolicy,
                                PlacementRequest, StabilityPolicy,
                                TopologyAwarePolicy, WorstFitPolicy)
 from repro.core.prefetch import Prefetcher, PrefetchConfig
@@ -45,7 +46,7 @@ from repro.core.store import (Durability, HarvestStore, LostObjectError,
                               MetricsRegistry, ObjectEntry, Residency,
                               Transfer, TransferEngine, channel_name)
 from repro.core.tiers import (HARDWARE, H100_NVLINK, TOPOLOGIES, TPU_V5E,
-                              HardwareModel, LinkSpec, Tier, Topology,
-                              expert_bytes, get_topology, kv_block_bytes,
-                              kv_entry_bytes, nvlink_2gpu, nvlink_mesh,
-                              pcie_switch, tpu_v5e_torus)
+                              Fidelity, HardwareModel, LinkSpec, Tier,
+                              Topology, expert_bytes, get_topology,
+                              kv_block_bytes, kv_entry_bytes, nvlink_2gpu,
+                              nvlink_mesh, pcie_switch, tpu_v5e_torus)

@@ -131,18 +131,24 @@ class TransferPlanner:
         """
         submitted: List[Transfer] = []
         by_stripe: Dict = {}
-        by_lane: Dict[str, List[Transfer]] = {}
-        lane_order: List[str] = []
+        by_lane: Dict[Tuple[str, "Fidelity"], List[Transfer]] = {}
+        lane_order: List[Tuple[str, "Fidelity"]] = []
         for t in ops:
             if t.parent is not None:
                 # one stripe = the chunks of ONE original transfer: keyed
                 # by direction too, so a write-back and a reload of the
                 # same object never merge into one concurrent stripe (the
                 # reload's chunks must chain behind the write-back via the
-                # parent-key dependency instead)
+                # parent-key dependency instead).  Chunks inherit their
+                # parent's fidelity, so a stripe is fidelity-homogeneous
+                # by construction.
                 by_stripe.setdefault((t.parent, t.src, t.dst), []).append(t)
                 continue
-            ch = self.te.lane_of(t)
+            # batches must be fidelity-homogeneous as well as same-lane:
+            # one coalesced submission models ONE fused gather kernel
+            # call, and one kernel packs one wire dtype — mixed-precision
+            # members split into separate batches instead of merging
+            ch = (self.te.lane_of(t), t.fidelity)
             if ch not in by_lane:
                 lane_order.append(ch)
             by_lane.setdefault(ch, []).append(t)

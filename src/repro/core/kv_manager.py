@@ -54,9 +54,9 @@ DURABILITY = {
     "lossy": Durability.RECONSTRUCTIBLE,
 }
 
-KV_STAT_KEYS = ("evict_to_peer", "evict_to_host", "reload_peer",
-                "reload_host", "revocations", "recomputes", "allocated",
-                "freed", "ref_drops")
+KV_STAT_KEYS = ("evict_to_peer", "evict_to_host", "evict_to_ssd",
+                "reload_peer", "reload_host", "reload_ssd", "revocations",
+                "recomputes", "allocated", "freed", "ref_drops")
 
 
 @dataclass
@@ -100,7 +100,9 @@ class KVOffloadManager:
                  store_payload: bool = False, num_kv_layers: int = 0,
                  client: str = "kv",
                  transfers: Optional[TransferEngine] = None,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 ssd_tier: bool = False,
+                 host_capacity_bytes: Optional[int] = None):
         self.cfg = cfg
         self.allocator = allocator
         self.hw = hardware
@@ -115,7 +117,8 @@ class KVOffloadManager:
             client=client, object_nbytes=self.block_nbytes,
             num_local_slots=num_local_slots,
             durability=DURABILITY[durability], store_payload=store_payload,
-            entry_factory=BlockEntry, stat_keys=KV_STAT_KEYS)
+            entry_factory=BlockEntry, stat_keys=KV_STAT_KEYS,
+            ssd_tier=ssd_tier, host_capacity_bytes=host_capacity_bytes)
         #: shared-block residency: (req, block_idx) -> content key of the
         #: adopted prefix-cache block.  Resolved on every table access.
         self.shared: Dict[BlockId, "ObjectKey"] = {}
@@ -162,6 +165,14 @@ class KVOffloadManager:
     @reload_hook.setter
     def reload_hook(self, fn) -> None:
         self.store.reload_hook = fn
+
+    @property
+    def fidelity_fn(self):
+        return self.store.fidelity_fn
+
+    @fidelity_fn.setter
+    def fidelity_fn(self, fn) -> None:
+        self.store.fidelity_fn = fn
 
     # ------------------------------------------------------------- alloc
     def allocate_block(self, req: int, block_idx: int, base_pos: int

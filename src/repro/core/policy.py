@@ -167,3 +167,72 @@ POLICIES = {
     "stability": StabilityPolicy,
     "topology": TopologyAwarePolicy,     # requires a Topology argument
 }
+
+
+# ---------------------------------------------------------------------------
+# fidelity policy (per-SLO-class demotion precision)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FidelityPolicy:
+    """What precision a KV block demotes at, per SLO class.
+
+    ``mode``:
+      off    — every demotion stays FP16 (the seed behaviour).
+      slo    — per-class mapping: latency-class blocks keep FP16 (their
+               tokens must be bit-identical to the fidelity-off baseline),
+               throughput/batch classes quantize on demote and dequantize
+               on critical reload.  Shared prefix-trie blocks keep
+               ``shared`` fidelity (FP16 by default) because one quantized
+               demotion would degrade every future adopter of the prefix,
+               including latency-class hits.
+      always — every demotion (shared blocks included) rides ``batch``'s
+               fidelity; the maximum-capacity setting for offline fleets.
+    """
+    mode: str = "slo"
+    latency: "Fidelity" = None           # type: ignore[assignment]
+    throughput: "Fidelity" = None        # type: ignore[assignment]
+    batch: "Fidelity" = None             # type: ignore[assignment]
+    shared: "Fidelity" = None            # type: ignore[assignment]
+
+    def __post_init__(self):
+        from repro.core.tiers import Fidelity
+        if self.mode not in ("off", "slo", "always"):
+            raise ValueError(f"FidelityPolicy: unknown mode {self.mode!r} — "
+                             "one of ('off', 'slo', 'always')")
+        defaults = {"latency": Fidelity.FP16, "throughput": Fidelity.INT8,
+                    "batch": Fidelity.INT8, "shared": Fidelity.FP16}
+        for name, default in defaults.items():
+            val = getattr(self, name)
+            if val is None:
+                object.__setattr__(self, name, default)
+            elif not isinstance(val, Fidelity):
+                raise TypeError(f"FidelityPolicy.{name}: expected a "
+                                f"Fidelity, got {val!r}")
+
+    def fidelity_for(self, slo: Optional[str],
+                     shared: bool = False) -> "Fidelity":
+        """The demotion fidelity for a block owned by an ``slo``-class
+        request (``shared=True`` for prefix-trie content blocks)."""
+        from repro.core.tiers import Fidelity
+        if self.mode == "off":
+            return Fidelity.FP16
+        if self.mode == "always":
+            return self.batch
+        if shared:
+            return self.shared
+        return {"latency": self.latency, "throughput": self.throughput,
+                "batch": self.batch}.get(slo or "", Fidelity.FP16)
+
+
+def _fidelity_policy_presets() -> Dict[str, FidelityPolicy]:
+    return {
+        "off": FidelityPolicy(mode="off"),
+        "slo": FidelityPolicy(mode="slo"),
+        "always": FidelityPolicy(mode="always"),
+    }
+
+
+#: CLI-facing presets (``--fidelity-policy`` on launch/serve.py)
+FIDELITY_POLICIES = _fidelity_policy_presets()

@@ -64,6 +64,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.store import MetricsRegistry, ObjectKey, Residency
+from repro.core.tiers import Fidelity
 
 #: counters pre-seeded in the ``prefix`` namespace (stable print order)
 PREFIX_STAT_KEYS = (
@@ -105,9 +106,14 @@ class PrefixCacheConfig:
     ``hot_alpha`` is the hotness-EWMA weight applied on every hit — hit
     blocks (weighted by their interior fan-out) carry higher ``hotness``
     into the store's placement hints, steering them to stable peers.
+    ``fidelity`` is the precision the cache's content is addressed at:
+    digest keys include it (except FP16, which keeps the seed key shape),
+    so a quantized cached block can never alias — and never be served in
+    place of — a full-precision one.
     """
     capacity_blocks: int = 256
     hot_alpha: float = 0.5
+    fidelity: Fidelity = Fidelity.FP16
 
     def __post_init__(self):
         if self.capacity_blocks <= 0:
@@ -116,6 +122,9 @@ class PrefixCacheConfig:
         if not 0.0 <= self.hot_alpha < 1.0:
             raise ValueError(f"hot_alpha must be in [0, 1), "
                              f"got {self.hot_alpha}")
+        if not isinstance(self.fidelity, Fidelity):
+            raise TypeError(f"fidelity must be a Fidelity, "
+                            f"got {self.fidelity!r}")
 
 
 @dataclass(eq=False)
@@ -152,9 +161,17 @@ class PrefixCache:
         self._tick = 0
 
     # ------------------------------------------------------------- helpers
-    @staticmethod
-    def content_key(digest: str) -> ObjectKey:
-        return ("px", digest)
+    def content_key(self, digest: str) -> ObjectKey:
+        """Store key of a cached block's content at the cache's fidelity.
+
+        FP16 keeps the seed's ``("px", digest)`` shape (back-compat with
+        persisted metrics/goldens); a quantized cache appends the fidelity
+        value, so the same prompt content cached at different precisions
+        occupies distinct, never-aliasing store entries.
+        """
+        if self.cfg.fidelity is Fidelity.FP16:
+            return ("px", digest)
+        return ("px", digest, self.cfg.fidelity.value)
 
     def __len__(self) -> int:
         return len(self.nodes)

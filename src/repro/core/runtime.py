@@ -94,13 +94,16 @@ class HarvestRuntime:
     def kv_manager(self, cfg: ModelConfig, *, block_size: int,
                    num_local_slots: int, durability: str = "host_backed",
                    store_payload: bool = False, num_kv_layers: int = 0,
-                   client: str = "kv") -> KVOffloadManager:
+                   client: str = "kv", ssd_tier: bool = False,
+                   host_capacity_bytes: Optional[int] = None
+                   ) -> KVOffloadManager:
         """The paper's §5 application: paged KV cache entries."""
         mgr = KVOffloadManager(
             cfg, self.allocator, self.hardware, block_size, num_local_slots,
             durability=durability, store_payload=store_payload,
             num_kv_layers=num_kv_layers, client=client,
-            transfers=self.transfers, metrics=self.metrics)
+            transfers=self.transfers, metrics=self.metrics,
+            ssd_tier=ssd_tier, host_capacity_bytes=host_capacity_bytes)
         mgr.store.planner = self.planner
         self.stores[client] = mgr.store
         self.clients[client] = mgr
@@ -178,6 +181,16 @@ class HarvestRuntime:
         rides the same reporting pipeline as the counters."""
         out = self.metrics.snapshot()
         out.setdefault("allocator", dict(self.allocator.stats))
+        # live per-store fidelity census: demoted copies currently resident
+        # at a reduced precision (FP16-resident blocks are the baseline and
+        # stay out of the snapshot so fidelity-off runs are unchanged)
+        fid_blocks = {
+            f"{name}.blocks_{f}": n
+            for name, store in sorted(self.stores.items())
+            for f, n in sorted(store.fidelity_counts().items())
+            if n and f != "fp16"}
+        if fid_blocks:
+            out.setdefault("fid", {}).update(fid_blocks)
         out["device"] = {
             f"dev{d}.{k}": v
             for d, view in sorted(self.allocator.device_view().items())

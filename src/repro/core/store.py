@@ -46,7 +46,7 @@ from typing import Callable, Dict, Hashable, Iterable, List, Optional, Set, Tupl
 import numpy as np
 
 from repro.core.allocator import HarvestAllocator, HarvestHandle
-from repro.core.tiers import HardwareModel, Tier, Topology
+from repro.core.tiers import Fidelity, HardwareModel, Tier, Topology
 
 ObjectKey = Hashable
 
@@ -66,6 +66,7 @@ class Residency(enum.Enum):
     LOCAL = "local"
     PEER = "peer"
     HOST = "host"
+    SSD = "ssd"
     LOST = "lost"
 
 
@@ -73,6 +74,7 @@ _RESIDENCY_TIER = {
     Residency.LOCAL: Tier.LOCAL_HBM,
     Residency.PEER: Tier.PEER_HBM,
     Residency.HOST: Tier.HOST_DRAM,
+    Residency.SSD: Tier.LOCAL_SSD,
 }
 _TIER_RESIDENCY = {v: k for k, v in _RESIDENCY_TIER.items()}
 
@@ -145,6 +147,11 @@ class Transfer:
     offset: int = 0          # chunk's byte offset within its parent object
     lane: Optional[str] = None   # forced lane (stripe sub-lanes); None = route
     batch_id: int = 0        # coalesced-batch membership (0 = solo submission)
+    #: precision of the payload ON THE WIRE — ``nbytes`` is already the
+    #: fidelity-scaled wire size; the planner refuses to coalesce or stripe
+    #: transfers of mixed fidelity into one batch (one gather kernel call
+    #: packs one dtype)
+    fidelity: Fidelity = Fidelity.FP16
     # --- timeline fields (live only once submitted) ---
     issue_t: float = 0.0     # simulated time the transfer was enqueued
     ready_t: float = 0.0     # simulated time the payload is usable at dst
@@ -165,6 +172,8 @@ def _link_name(src: Tier, dst: Tier) -> str:
     pair = {src, dst}
     if pair == {Tier.LOCAL_HBM}:
         return "hbm"
+    if Tier.LOCAL_SSD in pair:
+        return "ssd"
     if Tier.HOST_DRAM in pair:
         return "host"
     return "peer"
@@ -261,23 +270,35 @@ class TransferEngine:
         return self.hw.link(src, dst)
 
     def estimate(self, nbytes: int, src: Tier, dst: Tier,
-                 device: Optional[int] = None) -> float:
+                 device: Optional[int] = None,
+                 fidelity: Optional[Fidelity] = None) -> float:
         """Link time of a hypothetical transfer (no accounting) — the
-        topology's per-device link when one is attached and named."""
+        topology's per-device link when one is attached and named.
+        ``fidelity`` scales ``nbytes`` (a full-precision object size) down
+        to the wire size that precision actually moves."""
+        if fidelity is not None:
+            nbytes = fidelity.wire_bytes(nbytes)
         if self.topology is not None:
             return self.topology.transfer_time(nbytes, src, dst, device)
         return self.hw.transfer_time(nbytes, src, dst)
 
     def transfer(self, key: ObjectKey, nbytes: int, src: Tier, dst: Tier,
                  extra_latency: float = 0.0, client: str = "default",
-                 device: Optional[int] = None) -> Transfer:
-        seconds = self.estimate(nbytes, src, dst, device) + extra_latency
+                 device: Optional[int] = None,
+                 fidelity: Optional[Fidelity] = None) -> Transfer:
+        """Mint a pending transfer of a full-precision-size-``nbytes``
+        object.  A quantized ``fidelity`` moves (and accounts) only the
+        wire bytes of that precision; FP16 (the default) is byte-exact
+        with the seed accounting."""
+        fid = fidelity or Fidelity.FP16
+        wire = fid.wire_bytes(nbytes)
+        seconds = self.estimate(wire, src, dst, device) + extra_latency
         link = _link_name(src, dst)
         self._stats[f"{client}.{link}_s"] += seconds
         self._stats[f"{client}.{link}_n"] += 1
-        self._stats[f"{client}.{link}_bytes"] += nbytes
-        return Transfer(key, src, dst, nbytes, seconds, client=client,
-                        device=device)
+        self._stats[f"{client}.{link}_bytes"] += wire
+        return Transfer(key, src, dst, wire, seconds, client=client,
+                        device=device, fidelity=fid)
 
     def schedule(self, transfers: Iterable[Transfer],
                  overlap_links: bool = False) -> float:
@@ -357,21 +378,26 @@ class TransferEngine:
         ``ready_t`` is stamped at each member's cumulative byte boundary,
         so a waiter on one object never waits for the whole batch's tail.
 
-        Members that route to a different lane, or whose object has an
-        unresolved in-flight transfer (same-key ordering), fall back to the
-        solo :meth:`submit` path — a dependency must not stall the batch.
+        Members that route to a different lane, carry a different wire
+        fidelity (one batched submission models one fused gather kernel
+        call, and one kernel packs one dtype), or whose object has an
+        unresolved in-flight transfer (same-key ordering), fall back to
+        the solo :meth:`submit` path — a dependency must not stall the
+        batch.
         """
         members = list(members)
         if not members:
             return []
         out: List[Transfer] = []
         ch = self.lane_of(members[0])
+        fid = members[0].fidelity
         batched: List[Transfer] = []
         solo: List[Transfer] = []
         for t in members:
             lane_t = self.lane_of(t)
             dep = self._key_busy.get(t.dep_key)
-            if lane_t != ch or (dep is not None and not dep.done):
+            if (lane_t != ch or t.fidelity is not fid
+                    or (dep is not None and not dep.done)):
                 solo.append(t)
             else:
                 batched.append(t)
@@ -571,7 +597,11 @@ class ObjectEntry:
     host_copy: bool = False                  # an authoritative host copy exists
     hotness: float = 0.0                     # EWMA of client-defined heat
     pinned: bool = False                     # never evicted from local
-    nbytes: int = 0
+    nbytes: int = 0                          # FULL-precision payload size
+    #: precision of the DEMOTED copy (peer/host/SSD parking + wire format).
+    #: The local slot always holds full precision: quantize-on-demote sets
+    #: this, dequantize-on-reload clears it back to FP16.
+    fidelity: Fidelity = Fidelity.FP16
     #: extra holders beyond the base owner (prefix-cache leases).  While
     #: positive, :meth:`HarvestStore.release` drops one reference instead
     #: of freeing — a retiring request can never free a block the trie (or
@@ -594,8 +624,12 @@ class HarvestStore:
 
     #: every counter the store itself may bump — clients pre-seed a subset
     EVENTS = ("allocated", "freed", "evict_to_peer", "evict_to_host",
-              "reload_peer", "reload_host", "revocations", "recomputes",
-              "migrations", "demotions")
+              "evict_to_ssd", "reload_peer", "reload_host", "reload_ssd",
+              "revocations", "recomputes", "migrations", "demotions")
+
+    #: pre-seeded ``fid.*`` counters (the fidelity-policy metrics contract)
+    FID_KEYS = ("bytes_saved", "demote_quantized", "reload_dequantized",
+                "quant_s", "dequant_s")
 
     def __init__(self, allocator: HarvestAllocator, transfers: TransferEngine,
                  *, client: str = "default", object_nbytes: int = 0,
@@ -605,13 +639,21 @@ class HarvestStore:
                  metrics: Optional[MetricsRegistry] = None,
                  owner_fn: Optional[Callable[[ObjectKey], Hashable]] = None,
                  entry_factory: Callable[..., ObjectEntry] = ObjectEntry,
-                 stat_keys: Iterable[str] = ()):
+                 stat_keys: Iterable[str] = (),
+                 ssd_tier: bool = False,
+                 host_capacity_bytes: Optional[int] = None):
         self.allocator = allocator
         self.transfers = transfers
         self.client = client
         self.object_nbytes = object_nbytes
         self.durability = durability
         self.entry_factory = entry_factory
+        #: cold tier below host: RECONSTRUCTIBLE evictions that find no
+        #: peer room park on local NVMe instead of paying for host DRAM,
+        #: and BACKED write-backs overflow to it once ``host_capacity_bytes``
+        #: is exhausted.  Off by default — the seed ladder is unchanged.
+        self.ssd_tier = ssd_tier
+        self.host_capacity_bytes = host_capacity_bytes
         # owners group keys for pinning / bulk eviction / bulk release; the
         # default matches (request_id, block_idx)-style composite keys
         self.owner_fn = owner_fn or (
@@ -641,6 +683,14 @@ class HarvestStore:
         # alongside the placement
         self.evict_hook: Optional[Callable[[ObjectKey, int], None]] = None
         self.reload_hook: Optional[Callable[[ObjectKey, int], None]] = None
+        #: fidelity policy hook: maps an object key to the
+        #: :class:`~repro.core.tiers.Fidelity` its demoted copy travels at.
+        #: None (default) keeps every demotion at FP16 — the seed-exact
+        #: path.  Set by the serving engine from its per-SLO
+        #: :class:`~repro.core.policy.FidelityPolicy`.
+        self.fidelity_fn: Optional[Callable[[ObjectKey], Fidelity]] = None
+        self.fid_stats = (metrics or transfers.metrics).counters(
+            "fid", keys=self.FID_KEYS)
 
     def _prepare(self, ops: List[Transfer]) -> List[Transfer]:
         """Planner pass over freshly minted transfers (striping); identity
@@ -766,6 +816,25 @@ class HarvestStore:
             raise RuntimeError(
                 f"{self.client}: local pool exhausted — no evictable object")
         ent = self.table[victim]
+        # the fidelity the demoted copy travels at is decided BEFORE the
+        # evict hook fires: the embedding layer (the serving engine's
+        # quantize-on-demote path) reads ``ent.fidelity`` to pick the
+        # kernel that packs the payload out of the pool
+        fid = Fidelity.FP16
+        if self.fidelity_fn is not None:
+            fid = self.fidelity_fn(victim) or Fidelity.FP16
+        ent.fidelity = fid
+        quant_s = 0.0
+        if fid.is_quantized:
+            # fused quantize_demote: one full-precision read pass over the
+            # block through local HBM, charged on the same clock as the
+            # eviction transfer it feeds
+            quant_s = ent.nbytes / self.transfers.hw.hbm_bw
+            self.fid_stats["demote_quantized"] += 1
+            self.fid_stats["quant_s"] += quant_s
+            self.fid_stats["bytes_saved"] += \
+                ent.nbytes - fid.wire_bytes(ent.nbytes)
+            self.fid_stats[f"demote_{fid.value}"] += 1
         if self.evict_hook is not None:
             self.evict_hook(victim, ent.local_slot)
         if self.num_local_slots is not None:
@@ -774,12 +843,15 @@ class HarvestStore:
         self.lru.pop(victim, None)
 
         ops: List[Transfer] = []
+        wire = fid.wire_bytes(ent.nbytes)
         # hints: "refs" marks shared prefix-cache blocks (hot trie
         # interiors) — placement policies steer them to stable peers,
         # because revoking a block many future requests would hit costs
-        # more than revoking a private one
+        # more than revoking a private one.  A quantized block asks the
+        # allocator for its WIRE size — half (int8/fp8) or a quarter
+        # (int4) of the peer slot a full-precision block would take.
         h = self.allocator.harvest_alloc(
-            ent.nbytes, hints={"hot": ent.hotness, "refs": ent.refcount},
+            wire, hints={"hot": ent.hotness, "refs": ent.refcount},
             client=self.client)
         if h is not None:
             ent.state = Residency.PEER
@@ -789,19 +861,50 @@ class HarvestStore:
                     key, handle.device))
             ops.append(self.transfers.transfer(
                 victim, ent.nbytes, Tier.LOCAL_HBM, Tier.PEER_HBM,
-                client=self.client, device=h.device))
+                extra_latency=quant_s, client=self.client, device=h.device,
+                fidelity=fid))
             self.stats["evict_to_peer"] += 1
             self.stats[f"dev{h.device}.evictions"] += 1
             if ent.durability is Durability.BACKED:
                 ent.host_copy = True   # written back asynchronously
+        elif self._ssd_rung(ent, wire):
+            # cold tier: RECONSTRUCTIBLE objects get a durable option
+            # cheaper than host DRAM (and strictly better than LOST);
+            # BACKED write-backs land here once host capacity is spent
+            ent.state = Residency.SSD
+            ent.host_copy = False      # the SSD copy is the backing copy
+            ops.append(self.transfers.transfer(
+                victim, ent.nbytes, Tier.LOCAL_HBM, Tier.LOCAL_SSD,
+                extra_latency=quant_s, client=self.client, fidelity=fid))
+            self.stats["evict_to_ssd"] += 1
         else:
             ent.state = Residency.HOST
             ent.host_copy = True       # the host write IS the eviction
             ops.append(self.transfers.transfer(
                 victim, ent.nbytes, Tier.LOCAL_HBM, Tier.HOST_DRAM,
-                client=self.client))
+                extra_latency=quant_s, client=self.client, fidelity=fid))
             self.stats["evict_to_host"] += 1
         return ops
+
+    def _ssd_rung(self, ent: ObjectEntry, wire: int) -> bool:
+        """Whether a peer-less eviction takes the SSD rung instead of host:
+        RECONSTRUCTIBLE objects always do (they otherwise pay host DRAM
+        for payloads the class declared droppable), BACKED objects only
+        once the host budget is spent."""
+        if not self.ssd_tier:
+            return False
+        if ent.durability is Durability.RECONSTRUCTIBLE:
+            return True
+        return (self.host_capacity_bytes is not None
+                and self._host_wire_bytes() + wire > self.host_capacity_bytes)
+
+    def _host_wire_bytes(self) -> int:
+        """Wire bytes currently parked in HOST residency (the overflow
+        meter for ``host_capacity_bytes``; async BACKED peer copies are
+        not counted — they are shadows, not placements)."""
+        return sum(e.fidelity.wire_bytes(e.nbytes)
+                   for e in self.table.values()
+                   if e.state is Residency.HOST)
 
     def evict_owner(self, owner) -> List[Transfer]:
         """Preemption support (paper §6.3): push ALL of an owner's local
@@ -841,15 +944,29 @@ class HarvestStore:
                 self.stats[f"dev{device}.reloads"] += 1
                 self.allocator.harvest_free(ent.handle)
                 ent.handle = None
+        elif ent.state is Residency.SSD:
+            self.stats["reload_ssd"] += 1
         else:
             self.stats["reload_host"] += 1
+        fid = ent.fidelity
+        dequant_s = 0.0
+        if fid.is_quantized:
+            # fused dequantize_reload: one full-precision write pass back
+            # into the local pool, charged on the reload's critical path
+            dequant_s = ent.nbytes / self.transfers.hw.hbm_bw
+            self.fid_stats["reload_dequantized"] += 1
+            self.fid_stats["dequant_s"] += dequant_s
         ent.state = Residency.LOCAL
         ent.local_slot = slot
         if self.reload_hook is not None:
+            # the hook runs while ``ent.fidelity`` still names the wire
+            # precision — the embedding layer picks its dequantize kernel
+            # from it
             self.reload_hook(key, slot)
         ops.append(self.transfers.transfer(
-            key, ent.nbytes, src, Tier.LOCAL_HBM, client=self.client,
-            device=device))
+            key, ent.nbytes, src, Tier.LOCAL_HBM, extra_latency=dequant_s,
+            client=self.client, device=device, fidelity=fid))
+        ent.fidelity = Fidelity.FP16   # the local slot holds full precision
         return self._prepare(ops)
 
     # ------------------------------------------------------ promote / demote
@@ -864,7 +981,8 @@ class HarvestStore:
         if ent.state is not Residency.HOST:
             return None
         h = self.allocator.harvest_alloc(
-            ent.nbytes, hints={"hot": ent.hotness, "refs": ent.refcount},
+            ent.fidelity.wire_bytes(ent.nbytes),
+            hints={"hot": ent.hotness, "refs": ent.refcount},
             client=self.client)
         if h is None:
             return None
@@ -876,7 +994,7 @@ class HarvestStore:
             ent.host_copy = False   # the class does not pay for host backing
         op = self.transfers.transfer(key, ent.nbytes, Tier.HOST_DRAM,
                                      Tier.PEER_HBM, client=self.client,
-                                     device=h.device)
+                                     device=h.device, fidelity=ent.fidelity)
         self.stats["migrations"] += 1
         self.stats[f"dev{h.device}.migrations"] += 1
         return op if self.planner is None else self._prepare([op])
@@ -940,6 +1058,14 @@ class HarvestStore:
         out = {r.value: 0 for r in Residency}
         for ent in self.table.values():
             out[ent.state.value] += 1
+        return out
+
+    def fidelity_counts(self) -> Dict[str, int]:
+        """Tracked objects per demoted-copy fidelity (LOCAL objects are
+        full precision by construction and count under fp16)."""
+        out = {f.value: 0 for f in Fidelity}
+        for ent in self.table.values():
+            out[ent.fidelity.value] += 1
         return out
 
     def owner_keys(self, owner) -> List[ObjectKey]:

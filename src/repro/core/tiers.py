@@ -28,6 +28,54 @@ class Tier(enum.Enum):
     LOCAL_HBM = "local"    # compute device HBM (authoritative for hot state)
     PEER_HBM = "peer"      # harvested peer-device HBM (transient, revocable)
     HOST_DRAM = "host"     # host memory (authoritative backing store)
+    LOCAL_SSD = "ssd"      # local NVMe cold tier (capacity, not speed)
+
+
+class Fidelity(enum.Enum):
+    """Precision a KV block travels and parks at on the cold tiers.
+
+    Full fidelity (FP16) is the wire format the seed shipped: a block's
+    ``nbytes`` IS what moves.  The quantized fidelities shrink the wire
+    and parking footprint by an integer ratio (per-block absmax scale —
+    see ``kernels/harvest_copy``): INT8 and FP8-e4m3 halve a bf16 block,
+    INT4 packs two weights per byte for a 4x cut.  The LOCAL slot always
+    holds full precision — fidelity is a property of the *demoted* copy,
+    cleared when the block is dequantized back on reload.
+    """
+    FP16 = "fp16"
+    INT8 = "int8"
+    FP8 = "fp8"
+    INT4 = "int4"
+
+    @property
+    def ratio(self) -> Tuple[int, int]:
+        """(numerator, denominator) of quantized-bytes / fp16-bytes."""
+        return _FIDELITY_RATIO[self]
+
+    @property
+    def is_quantized(self) -> bool:
+        return self is not Fidelity.FP16
+
+    def wire_bytes(self, nbytes: int) -> int:
+        """Bytes a block of full-precision size ``nbytes`` occupies at
+        this fidelity: exact for FP16 (seed goldens stay bit-exact), the
+        integer-ratio cut plus one f32 per-block scale otherwise."""
+        if self is Fidelity.FP16:
+            return int(nbytes)
+        num, den = _FIDELITY_RATIO[self]
+        return int(nbytes) * num // den + FIDELITY_SCALE_BYTES
+
+
+_FIDELITY_RATIO = {
+    Fidelity.FP16: (1, 1),
+    Fidelity.INT8: (1, 2),
+    Fidelity.FP8: (1, 2),
+    Fidelity.INT4: (1, 4),
+}
+
+#: per-block quantization metadata (one f32 absmax scale) that rides the
+#: wire with every quantized block
+FIDELITY_SCALE_BYTES = 4
 
 
 @dataclass(frozen=True)
@@ -51,6 +99,11 @@ class LinkSpec:
         return self.bandwidth / max(self.paths, 1)
 
 
+# Local NVMe used when a preset does not calibrate its own: a datacenter
+# gen4 drive sustains ~5 GB/s at ~120 us submission+seek overhead.
+DEFAULT_SSD_LINK = LinkSpec(bandwidth=5e9, latency=120e-6)
+
+
 @dataclass(frozen=True)
 class HardwareModel:
     name: str
@@ -59,11 +112,16 @@ class HardwareModel:
     hbm_bw: float          # bytes/s local HBM
     peak_flops: float      # bf16 FLOP/s per chip
     hbm_bytes: int         # HBM capacity per device
+    ssd_link: LinkSpec = DEFAULT_SSD_LINK   # local NVMe cold-tier path
 
     def link(self, src: Tier, dst: Tier) -> LinkSpec:
         pair = {src, dst}
         if pair == {Tier.LOCAL_HBM}:
             return LinkSpec(self.hbm_bw, 0.0)
+        if Tier.LOCAL_SSD in pair:
+            # SSD checked before host: a host->SSD spill and a
+            # device->SSD writeback both bottleneck on the drive
+            return self.ssd_link
         if Tier.HOST_DRAM in pair:
             return self.host_link
         return self.peer_link
@@ -86,6 +144,9 @@ H100_NVLINK = HardwareModel(
     hbm_bw=3.35e12,
     peak_flops=989e12,
     hbm_bytes=80 * 2**30,
+    # local NVMe (gen5 datacenter drive behind the same PCIe switch as the
+    # host path): ~6.5 GB/s effective sequential, ~110 us submission cost
+    ssd_link=LinkSpec(bandwidth=6.5e9, latency=110e-6),
 )
 
 # TPU v5e-class chip (the production-mesh target of this repo).
@@ -99,6 +160,9 @@ TPU_V5E = HardwareModel(
     hbm_bw=819e9,
     peak_flops=197e12,
     hbm_bytes=16 * 2**30,
+    # host-attached NVMe over the shared gen3-class host interconnect:
+    # ~3 GB/s effective, ~175 us submission cost
+    ssd_link=LinkSpec(bandwidth=3e9, latency=175e-6),
 )
 
 HARDWARE = {m.name: m for m in (H100_NVLINK, TPU_V5E)}
@@ -145,6 +209,8 @@ class Topology:
         pair = {src, dst}
         if pair == {Tier.LOCAL_HBM}:
             return LinkSpec(self.hardware.hbm_bw, 0.0)
+        if Tier.LOCAL_SSD in pair:
+            return self.hardware.ssd_link
         if Tier.HOST_DRAM in pair:
             return self.hardware.host_link
         return self.peer_link(device)

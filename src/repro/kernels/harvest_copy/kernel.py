@@ -24,6 +24,8 @@ Grids: (num_blocks_to_copy, chunks_per_block).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -134,6 +136,157 @@ def harvest_copy(src_pool, dst_pool, src_ids, dst_ids, *, chunk: int = 512,
         interpret=interpret,
     )(src_ids.astype(jnp.int32), dst_ids.astype(jnp.int32), src_pool,
       dst_pool)
+    return out[:, :elems] if padded != elems else out
+
+
+# ---------------------------------------------------------------------------
+# fidelity kernels: quantize-on-demote / dequantize-on-reload
+# ---------------------------------------------------------------------------
+
+#: symmetric quantization range per wire fidelity (e4m3's largest finite
+#: value is 448; int4 packs two's-complement nibbles, so ±7 keeps the
+#: packing sign-safe)
+FIDELITY_QMAX = {"int8": 127.0, "fp8": 448.0, "int4": 7.0}
+
+#: storage dtype of the packed value plane per wire fidelity
+FIDELITY_QDTYPE = {"int8": jnp.int8, "fp8": jnp.float8_e4m3fn,
+                   "int4": jnp.uint8}
+
+
+def _packed_width(elems: int, fidelity: str) -> int:
+    """Columns of the packed value plane for a block of ``elems`` weights
+    (int4 packs two nibbles per byte; a non-divisible tail pads)."""
+    return (elems + 1) // 2 if fidelity == "int4" else elems
+
+
+def _quantize_kernel(ids_ref, src_ref, val_ref, scale_ref, *, fidelity):
+    """One grid step = one gathered block row: absmax scale, quantize,
+    pack — no dense full-precision staging of the batch.  The ``(None,
+    width)`` BlockSpecs squeeze the slot dim, so refs are 1-D here."""
+    row = src_ref[...].astype(jnp.float32).reshape(-1)
+    absmax = jnp.max(jnp.abs(row))
+    # all-zero blocks quantize to zeros with a unit scale instead of a NaN
+    scale = jnp.where(absmax == 0.0, 1.0, absmax / FIDELITY_QMAX[fidelity])
+    scale_ref[...] = jnp.full(scale_ref.shape, scale, dtype=jnp.float32)
+    x = row / scale
+    if fidelity == "int8":
+        out = jnp.clip(jnp.round(x), -127, 127).astype(jnp.int8)
+    elif fidelity == "fp8":
+        out = x.astype(jnp.float8_e4m3fn)
+    else:  # int4: two's-complement nibbles, two weights per byte
+        q = jnp.clip(jnp.round(x), -7, 7).astype(jnp.int32)
+        q = q.reshape(-1, 2)
+        out = ((q[:, 0] & 15) | ((q[:, 1] & 15) << 4)).astype(jnp.uint8)
+    val_ref[...] = out.reshape(val_ref.shape)
+
+
+def _dequantize_kernel(ids_ref, val_ref, scale_ref, dst_in_ref, dst_ref,
+                       *, fidelity):
+    scale = scale_ref[...].reshape(-1)[0]
+    q = val_ref[...].reshape(-1)
+    if fidelity == "int4":
+        b = q.astype(jnp.int32)
+        lo = b & 15
+        lo = lo - 2 * (lo & 8)          # sign-extend the nibble
+        hi = (b >> 4) & 15
+        hi = hi - 2 * (hi & 8)
+        x = jnp.stack([lo, hi], axis=-1).reshape(-1).astype(jnp.float32)
+    else:
+        x = q.astype(jnp.float32)
+    dst_ref[...] = (x * scale).reshape(dst_ref.shape).astype(dst_ref.dtype)
+
+
+def quantize_demote(src_pool, slot_ids, *, fidelity: str = "int8",
+                    interpret: bool = True):
+    """Fused gather→quantize→pack for a demotion batch.
+
+    ``src_pool``: (n_slots, block_elems) float pool; ``slot_ids``: (m,)
+    rows being demoted.  Returns ``(values, scales)`` — the packed wire
+    payload (m, packed_width) in the fidelity's storage dtype and the
+    per-block f32 absmax scales (m, 1).  One pass: the source BlockSpec
+    chases the slot list exactly like ``harvest_gather``, so the batch is
+    never staged densely at full precision.
+    """
+    if fidelity not in FIDELITY_QMAX:
+        raise ValueError(f"quantize_demote: unknown fidelity {fidelity!r} — "
+                         f"one of {sorted(FIDELITY_QMAX)}")
+    n_slots, elems = src_pool.shape
+    _check_slot_ids(slot_ids, n_slots, "quantize_demote")
+    m = slot_ids.shape[0]
+    # int4 packs nibble pairs: pad an odd block width (the pad lane
+    # quantizes to zero and is sliced off on reload)
+    padded = elems + (elems % 2 if fidelity == "int4" else 0)
+    if padded != elems:
+        src_pool = jnp.pad(src_pool, ((0, 0), (0, padded - elems)))
+    width = _packed_width(padded, fidelity)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((None, padded), lambda i, ids: (ids[i], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, width), lambda i, ids: (i, 0)),
+            pl.BlockSpec((None, 1), lambda i, ids: (i, 0)),
+        ],
+    )
+    values, scales = pl.pallas_call(
+        functools.partial(_quantize_kernel, fidelity=fidelity),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((m, width), FIDELITY_QDTYPE[fidelity]),
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(slot_ids.astype(jnp.int32), src_pool)
+    return values, scales
+
+
+def dequantize_reload(dst_pool, values, scales, slot_ids, *,
+                      fidelity: str = "int8", interpret: bool = True):
+    """Fused unpack→dequantize→scatter for a reload batch.
+
+    Writes ``values[i] * scales[i]`` into ``dst_pool[slot_ids[i]]``; the
+    output aliases the destination pool (``input_output_aliases``) so
+    every slot outside the reload set is preserved bit-exactly.  Returns
+    the updated pool.  ``slot_ids`` must be unique — two reloads landing
+    in one slot is a plan bug, not a race to resolve here.
+    """
+    if fidelity not in FIDELITY_QMAX:
+        raise ValueError(f"dequantize_reload: unknown fidelity {fidelity!r} "
+                         f"— one of {sorted(FIDELITY_QMAX)}")
+    n_slots, elems = dst_pool.shape
+    _check_slot_ids(slot_ids, n_slots, "dequantize_reload")
+    m = slot_ids.shape[0]
+    padded = elems + (elems % 2 if fidelity == "int4" else 0)
+    width = _packed_width(padded, fidelity)
+    assert values.shape == (m, width), \
+        f"dequantize_reload: values shape {values.shape} != ({m}, {width})"
+    if padded != elems:
+        dst_pool_in = jnp.pad(dst_pool, ((0, 0), (0, padded - elems)))
+    else:
+        dst_pool_in = dst_pool
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((None, width), lambda i, ids: (i, 0)),
+            pl.BlockSpec((None, 1), lambda i, ids: (i, 0)),
+            pl.BlockSpec((None, padded), lambda i, ids: (ids[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((None, padded), lambda i, ids: (ids[i], 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_dequantize_kernel, fidelity=fidelity),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(dst_pool_in.shape, dst_pool.dtype),
+        # operand 3 = dst_pool (after the id list, values and scales):
+        # aliasing it into the output preserves untouched slots
+        input_output_aliases={3: 0},
+        interpret=interpret,
+    )(slot_ids.astype(jnp.int32), values, scales, dst_pool_in)
     return out[:, :elems] if padded != elems else out
 
 

@@ -133,6 +133,19 @@ def main():
     ap.add_argument("--spec-accept-rate", type=float, default=0.7,
                     help="per-position draft acceptance probability for "
                          "--spec-draft (default 0.7)")
+    ap.add_argument("--fidelity-policy", default="off",
+                    help="per-SLO-class demotion precision: 'off' keeps "
+                         "every demoted block FP16, 'slo' quantizes "
+                         "throughput/batch-class blocks to int8 on demote "
+                         "(latency class stays bit-exact), 'always' "
+                         "quantizes every demotion including shared prefix "
+                         "blocks (max capacity, offline fleets)")
+    ap.add_argument("--cold-tier", action="store_true",
+                    help="add the LOCAL_SSD cold tier below host DRAM: "
+                         "reconstructible evictions take the cheaper SSD "
+                         "rung instead of LOST, durable write-backs "
+                         "overflow host onto SSD (needs --mode async: the "
+                         "ladder charges the event timeline)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.monitor_interval_us and not args.with_churn:
@@ -156,6 +169,14 @@ def main():
     if args.spec_draft and not 0.0 <= args.spec_accept_rate <= 1.0:
         ap.error(f"--spec-accept-rate must be in [0, 1], got "
                  f"{args.spec_accept_rate}")
+    if args.fidelity_policy not in ("off", "slo", "always"):
+        ap.error(f"unknown --fidelity-policy {args.fidelity_policy!r} "
+                 "(one of: off, slo, always)")
+    if args.cold_tier and args.mode != "async" and not (
+            args.prefetch or args.coalesce or args.stripe
+            or args.chunk_prefill_tokens is not None):
+        ap.error("--cold-tier needs --mode async: the SSD rung of the "
+                 "eviction ladder charges the event timeline")
 
     from repro.configs import get_config
     from repro.core import (ClusterTrace, ClusterTraceConfig, CoalesceConfig,
@@ -199,7 +220,8 @@ def main():
         scheduler=args.scheduler, durability=args.durability, seed=args.seed,
         mode=mode, prefetch=PrefetchConfig() if args.prefetch else None,
         admission=args.admission, prefix_cache=args.prefix_cache,
-        chunk_prefill_tokens=args.chunk_prefill_tokens, spec_decode=spec)
+        chunk_prefill_tokens=args.chunk_prefill_tokens, spec_decode=spec,
+        fidelity_policy=args.fidelity_policy, cold_tier=args.cold_tier)
     eng = server.engine
 
     if args.workload == "legacy":

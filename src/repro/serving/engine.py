@@ -90,11 +90,13 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.allocator import HarvestAllocator
 from repro.core.monitor import PeerMonitor
+from repro.core.policy import FIDELITY_POLICIES, FidelityPolicy
 from repro.core.prefetch import Prefetcher, PrefetchConfig
 from repro.core.prefix_cache import PrefixCache, PrefixCacheConfig
 from repro.core.runtime import HarvestRuntime
 from repro.core.store import Residency
-from repro.core.tiers import H100_NVLINK, HardwareModel
+from repro.core.tiers import H100_NVLINK, Fidelity, HardwareModel
+from repro.kernels.harvest_copy.ops import dequantize_blocks, quantize_blocks
 from repro.models import model as M
 from repro.serving.admission import ADMISSION, AdmissionPolicy, AdmissionView
 from repro.serving.scheduler import SCHEDULERS, SLO_CLASSES, Request
@@ -411,6 +413,24 @@ class EngineStats:
             util = min(s_chk / s_obj / ways, 1.0) if ways else 0.0
             lines.append(f"  stripe: objects {s_obj}  chunks {s_chk}  "
                          f"ways {ways}  sub-lane utilization {util:.0%}")
+        fid = self.metrics.get("fid")
+        if fid and (fid.get("demote_quantized") or fid.get("bytes_saved")):
+            per_tier = {k[len("demote_"):]: v for k, v in fid.items()
+                        if k.startswith("demote_")
+                        and k != "demote_quantized" and v}
+            resident = sum(v for k, v in fid.items() if ".blocks_" in k)
+            share = (fid.get("dequant_s", 0.0) / self.clock_s
+                     if self.clock_s else 0.0)   # zero-division guarded
+            lines.append(
+                "  fidelity: quantized demotes "
+                f"{fid.get('demote_quantized', 0)}"
+                + ("".join(f"  {n}:{c}" for n, c in sorted(per_tier.items()))
+                   if per_tier else "")
+                + f"  resident {resident}  "
+                f"dequant reloads {fid.get('reload_dequantized', 0)}  "
+                f"link bytes saved {fid.get('bytes_saved', 0) / 2**20:.2f}"
+                f" MiB  dequant {fid.get('dequant_s', 0.0) * ms:.3f} ms "
+                f"({share:.1%} of clock)")
         for ns in ("prefetch", "transfer", "spec", "allocator", "monitor"):
             counters = self.metrics.get(ns)
             if not counters:
@@ -440,7 +460,10 @@ class HarvestServingEngine:
                  prefix_cache: "bool | PrefixCacheConfig" = False,
                  chunk_prefill_tokens: Optional[int] = None,
                  spec_decode: Optional[SpecDecodeConfig] = None,
-                 iter_refill: Optional[bool] = None):
+                 iter_refill: Optional[bool] = None,
+                 fidelity_policy: "str | FidelityPolicy | None" = None,
+                 cold_tier: bool = False,
+                 host_capacity_bytes: Optional[int] = None):
         assert cfg.has_kv_cache or cfg.family == "ssm"
         assert mode in ("sync", "async"), f"unknown clock mode {mode!r}"
         # the engine runs over ONE HarvestRuntime; the allocator/monitor/
@@ -472,12 +495,34 @@ class HarvestServingEngine:
         nkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
         self.n_slots = num_local_slots
         self.allocator = runtime.allocator
+
+        # fidelity-tiered demotion: per-SLO-class precision on the demote
+        # path (the store's fidelity_fn seam) + an optional SSD cold tier
+        # under host DRAM.  ``None``/"off" keeps every demotion FP16 —
+        # the seed-exact path, bytes and tokens included.
+        if isinstance(fidelity_policy, str):
+            if fidelity_policy not in FIDELITY_POLICIES:
+                raise ValueError(
+                    f"unknown fidelity policy {fidelity_policy!r}; expected "
+                    f"one of {sorted(FIDELITY_POLICIES)}")
+            fidelity_policy = FIDELITY_POLICIES[fidelity_policy]
+        self._fid_policy: Optional[FidelityPolicy] = (
+            None if (fidelity_policy is None or fidelity_policy.mode == "off")
+            else fidelity_policy)
+        assert not cold_tier or mode == "async", \
+            "the SSD cold tier needs the event timeline: pass mode='async'"
+        #: req_id -> SLO class, resolved by the store's fidelity callback
+        self._req_slo: Dict[int, str] = {}
+
         self.kv_mgr = runtime.kv_manager(
             cfg, block_size=block_size, num_local_slots=num_local_slots,
             durability=durability, store_payload=True,
-            num_kv_layers=self.L_kv)
+            num_kv_layers=self.L_kv, ssd_tier=cold_tier,
+            host_capacity_bytes=host_capacity_bytes)
         self.kv_mgr.evict_hook = self._on_evict
         self.kv_mgr.reload_hook = self._on_reload
+        if self._fid_policy is not None:
+            self.kv_mgr.fidelity_fn = self._fidelity_for
 
         # transfer coalescing/striping: runtimes built with a
         # CoalesceConfig carry a TransferPlanner; like prefetch it needs
@@ -590,6 +635,29 @@ class HarvestServingEngine:
         self._qbatch = (runtime.metrics.counters("transfer")
                         if mode == "async" else None)
 
+    # ----------------------------------------------------------- fidelity
+    def _fidelity_for(self, key) -> Fidelity:
+        """Store callback: the precision the block being evicted demotes
+        at.  Shared prefix-trie content blocks (``("px", ...)`` keys) have
+        no owning request and take the policy's ``shared`` fidelity;
+        everything else resolves owner -> SLO class -> policy."""
+        shared = bool(key) and isinstance(key, tuple) and key[0] == "px"
+        slo = None if shared else self._req_slo.get(key[0])
+        return self._fid_policy.fidelity_for(slo, shared=shared)
+
+    def _degrade(self, data: np.ndarray, fid: Fidelity) -> np.ndarray:
+        """Round-trip one evicted block's payload through the fused
+        quantize_demote / dequantize_reload kernels, so the stored copy
+        is numerically what the wire carries: a later reload reads back
+        exactly the dequantized values and quantized-class decodes
+        genuinely run on reduced-precision KV."""
+        flat = jnp.asarray(data.reshape(1, -1), jnp.float32)
+        ids = jnp.zeros((1,), jnp.int32)
+        values, scales = quantize_blocks(flat, ids, fidelity=fid.value)
+        deg = dequantize_blocks(jnp.zeros_like(flat), values, scales, ids,
+                                fidelity=fid.value)
+        return np.asarray(deg).reshape(data.shape).astype(data.dtype)
+
     # ----------------------------------------------------------- payload
     def _on_evict(self, bid, slot):
         if self.prefetcher is not None:
@@ -598,6 +666,9 @@ class HarvestServingEngine:
             return
         data = np.stack([np.asarray(self.pool_k[:, slot]),
                          np.asarray(self.pool_v[:, slot])], axis=1)
+        ent = self.kv_mgr.table.get(bid)
+        if ent is not None and ent.fidelity.is_quantized:
+            data = self._degrade(data, ent.fidelity)
         self.kv_mgr.write_payload(*bid, data)
         self.slot_req[slot] = -1
 
@@ -694,6 +765,7 @@ class HarvestServingEngine:
                     e2e_slo_s=e2e_slo_s, on_token=on_token,
                     enqueue_t=arrival_t, enqueue_step=self.stats.steps)
         self._next_id += 1
+        self._req_slo[r.req_id] = slo
         if arrival_t <= now:
             self.waiting.append(r)
         else:
@@ -1420,6 +1492,7 @@ class HarvestServingEngine:
             if self.prefetcher is not None:
                 self.prefetcher.cancel_owner(r.req_id)
             self.row_of.pop(r.req_id, None)
+            self._req_slo.pop(r.req_id, None)
             r.row = None
 
     # -------------------------------------------------------------- step

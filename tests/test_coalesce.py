@@ -113,6 +113,41 @@ def test_coalesce_one_setup_per_lane():
     assert q["q.peer_in.coalesced_saved_s"] == pytest.approx(7 * link.latency)
 
 
+def test_coalesce_refuses_mixed_fidelity_batch():
+    """Regression (fidelity tiers): one coalesced submission models ONE
+    fused gather kernel call packing ONE wire dtype, so transfers of
+    different fidelity on the same lane must split into separate
+    fidelity-homogeneous batches instead of merging."""
+    from repro.core.tiers import Fidelity
+    te = TransferEngine(H100_NVLINK)
+    pl = TransferPlanner(te, CoalesceConfig(max_batch=16))
+    ops = [te.transfer(("fp", i), 64 * KiB, Tier.PEER_HBM, Tier.LOCAL_HBM)
+           for i in range(3)]
+    ops += [te.transfer(("q", i), 64 * KiB, Tier.PEER_HBM, Tier.LOCAL_HBM,
+                        fidelity=Fidelity.INT8) for i in range(3)]
+    done, _eff = pl.submit(ops)
+    by_batch = {}
+    for t in done:
+        assert t.batch_id, "same-lane groups of 3 must still coalesce"
+        by_batch.setdefault(t.batch_id, []).append(t)
+    assert len(by_batch) == 2, "mixed fidelities must split the lane batch"
+    for members in by_batch.values():
+        fids = {t.fidelity for t in members}
+        assert len(fids) == 1, f"fidelity-mixed batch: {fids}"
+        assert len(members) == 3
+    # direct engine-level submission refuses the merge too: the mixed
+    # member rides solo rather than silently joining the batch
+    te2 = TransferEngine(H100_NVLINK)
+    mixed = [te2.transfer(("m", 0), 64 * KiB, Tier.PEER_HBM, Tier.LOCAL_HBM),
+             te2.transfer(("m", 1), 64 * KiB, Tier.PEER_HBM, Tier.LOCAL_HBM),
+             te2.transfer(("m", 2), 64 * KiB, Tier.PEER_HBM, Tier.LOCAL_HBM,
+                          fidelity=Fidelity.INT4)]
+    done2 = te2.submit_coalesced(mixed)
+    batched = [t for t in done2 if t.batch_id]
+    assert all(t.fidelity is Fidelity.FP16 for t in batched)
+    assert not done2[2].batch_id, "the int4 member must go solo"
+
+
 def test_coalesce_respects_same_key_dependency():
     """A member whose object has an in-flight write-back cannot ride the
     batch — it chains behind its dependency on the solo path."""

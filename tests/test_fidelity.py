@@ -1,0 +1,425 @@
+"""Fidelity-tiered KV + SSD cold tier (the fidelity-tiers PR).
+
+Covers the tentpole end to end:
+  * Fidelity wire-byte math (exact FP16 identity, integer quantized
+    ratios + per-block scale overhead);
+  * fidelity-aware TransferEngine estimates and byte accounting;
+  * the HarvestStore demote path: ``fidelity_fn`` decides the precision
+    BEFORE the evict hook fires, the allocator is charged wire bytes,
+    quantize/dequantize compute rides the engine clock, and a reloaded
+    slot is always full precision again;
+  * the SSD cold-tier rung: RECONSTRUCTIBLE evictions take SSD over
+    host when peer allocation fails, BACKED write-backs overflow onto
+    SSD once ``host_capacity_bytes`` is spent, both reload over the
+    calibrated SSD link;
+  * FidelityPolicy per-SLO mapping + validation;
+  * prefix-cache content digests never alias across fidelities;
+  * engine e2e: latency-class tokens bit-identical to the fidelity-off
+    baseline, quantized batch-class decode completes within tolerance,
+    and the constructor/CLI knobs validate their inputs.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (FIDELITY_POLICIES, Fidelity, FidelityPolicy,
+                        HarvestAllocator, HarvestRuntime, KVOffloadManager,
+                        Residency, Tier, TransferEngine)
+from repro.core.prefix_cache import PrefixCache, PrefixCacheConfig
+from repro.core.tiers import (FIDELITY_SCALE_BYTES, H100_NVLINK, TPU_V5E)
+from repro.serving.engine import HarvestServingEngine
+
+MiB = 2**20
+
+
+def _kv(durability, slots=2, budget_mib=64, hw=TPU_V5E, **kw):
+    cfg = get_config("yi-6b").reduced()
+    alloc = HarvestAllocator({0: budget_mib * MiB})
+    kv = KVOffloadManager(cfg, alloc, hw, block_size=16,
+                          num_local_slots=slots, durability=durability, **kw)
+    return kv, alloc
+
+
+# ---------------------------------------------------------------------------
+# Fidelity math
+# ---------------------------------------------------------------------------
+
+
+def test_fp16_wire_bytes_is_exact_identity():
+    """FP16 is the seed path: wire bytes == object bytes, no scale tax —
+    this is what keeps fidelity-off runs byte- and clock-exact."""
+    for nb in (0, 1, 7, 4096, 13 * MiB):
+        assert Fidelity.FP16.wire_bytes(nb) == nb
+    assert not Fidelity.FP16.is_quantized
+
+
+@pytest.mark.parametrize("fid,num,den", [
+    (Fidelity.INT8, 1, 2), (Fidelity.FP8, 1, 2), (Fidelity.INT4, 1, 4)])
+def test_quantized_wire_bytes_ratio(fid, num, den):
+    for nb in (2, 64, 4096, 3 * MiB):
+        assert fid.wire_bytes(nb) == nb * num // den + FIDELITY_SCALE_BYTES
+    assert fid.is_quantized
+
+
+def test_transfer_engine_estimate_scales_by_fidelity():
+    te = TransferEngine(H100_NVLINK)
+    nb = 4 * MiB
+    full = te.estimate(nb, Tier.LOCAL_HBM, Tier.PEER_HBM)
+    int8 = te.estimate(nb, Tier.LOCAL_HBM, Tier.PEER_HBM,
+                       fidelity=Fidelity.INT8)
+    int4 = te.estimate(nb, Tier.LOCAL_HBM, Tier.PEER_HBM,
+                       fidelity=Fidelity.INT4)
+    link = H100_NVLINK.peer_link
+    assert full == pytest.approx(link.latency + nb / link.bandwidth)
+    assert int8 == pytest.approx(
+        link.latency + Fidelity.INT8.wire_bytes(nb) / link.bandwidth)
+    assert int4 < int8 < full
+
+
+def test_transfer_carries_wire_bytes_and_fidelity():
+    te = TransferEngine(TPU_V5E)
+    t = te.transfer(("b", 0), 1 * MiB, Tier.LOCAL_HBM, Tier.PEER_HBM,
+                    fidelity=Fidelity.INT8)
+    assert t.fidelity is Fidelity.INT8
+    assert t.nbytes == Fidelity.INT8.wire_bytes(1 * MiB)
+    # byte counters account what actually crossed the wire
+    snap = te.metrics.snapshot()["transfer"]
+    moved = sum(v for k, v in snap.items() if k.endswith("_bytes"))
+    assert moved == t.nbytes
+
+
+def test_ssd_link_is_calibrated_and_routed():
+    """LOCAL_SSD pairs route over the hardware's ssd_link in both preset
+    families, below the host-DRAM rung in bandwidth."""
+    for hw in (H100_NVLINK, TPU_V5E):
+        est = TransferEngine(hw).estimate(8 * MiB, Tier.LOCAL_SSD,
+                                          Tier.LOCAL_HBM)
+        assert est == pytest.approx(
+            hw.ssd_link.latency + 8 * MiB / hw.ssd_link.bandwidth)
+        assert hw.ssd_link.bandwidth < hw.host_link.bandwidth
+    assert H100_NVLINK.ssd_link.bandwidth > TPU_V5E.ssd_link.bandwidth
+
+
+def test_ssd_transfers_ride_their_own_lanes():
+    te = TransferEngine(H100_NVLINK)
+    out = te.transfer(("s", 0), MiB, Tier.LOCAL_HBM, Tier.LOCAL_SSD)
+    back = te.transfer(("s", 0), MiB, Tier.LOCAL_SSD, Tier.LOCAL_HBM)
+    assert te.lane_of(out) != te.lane_of(back)
+    assert {te.lane_of(out), te.lane_of(back)} == {"ssd_out", "ssd_in"}
+
+
+# ---------------------------------------------------------------------------
+# store demote/reload accounting
+# ---------------------------------------------------------------------------
+
+
+def test_store_quantized_demote_charges_wire_bytes():
+    kv, alloc = _kv("host_backed", slots=1)
+    kv.fidelity_fn = lambda key: Fidelity.INT8
+    kv.allocate_block(0, 0, 0)
+    ops = kv.allocate_block(1, 0, 0)[1]      # evicts (0,0) to peer
+    ent = kv.table[(0, 0)]
+    wire = Fidelity.INT8.wire_bytes(kv.block_nbytes)
+    assert ent.state is Residency.PEER
+    assert ent.fidelity is Fidelity.INT8
+    assert ent.nbytes == kv.block_nbytes, \
+        "bookkeeping size stays full precision; fidelity describes the copy"
+    # the allocator granted a WIRE-sized peer segment (half the slot)
+    assert alloc.device_view()[0]["used"] == wire
+    # the eviction transfer moved wire bytes + the quantize compute pass
+    evict = ops[-1]
+    assert evict.fidelity is Fidelity.INT8 and evict.nbytes == wire
+    te = kv.store.transfers
+    quant_s = kv.block_nbytes / te.hw.hbm_bw
+    assert evict.seconds == pytest.approx(
+        te.estimate(wire, Tier.LOCAL_HBM, Tier.PEER_HBM, device=0) + quant_s)
+    fid = kv.store.fid_stats
+    assert fid["demote_quantized"] == 1 and fid["demote_int8"] == 1
+    assert fid["bytes_saved"] == kv.block_nbytes - wire
+    assert fid["quant_s"] == pytest.approx(quant_s)
+
+
+def test_store_reload_dequantizes_and_restores_fp16():
+    kv, _ = _kv("host_backed", slots=1)
+    kv.fidelity_fn = lambda key: Fidelity.INT4
+    kv.allocate_block(0, 0, 0)
+    kv.allocate_block(1, 0, 0)
+    kv.free_request(1)
+    seen = {}
+    kv.reload_hook = lambda key, slot: seen.setdefault(
+        "fid", kv.table[key].fidelity)
+    ops = kv.ensure_resident(0, 0)
+    ent = kv.table[(0, 0)]
+    te = kv.store.transfers
+    wire = Fidelity.INT4.wire_bytes(kv.block_nbytes)
+    dequant_s = kv.block_nbytes / te.hw.hbm_bw
+    # the hook saw the wire precision (it picks the dequantize kernel)...
+    assert seen["fid"] is Fidelity.INT4
+    # ...but the local slot is full precision again afterwards
+    assert ent.fidelity is Fidelity.FP16
+    assert ops[-1].nbytes == wire
+    assert ops[-1].seconds == pytest.approx(
+        te.estimate(wire, Tier.PEER_HBM, Tier.LOCAL_HBM, device=0)
+        + dequant_s)
+    fid = kv.store.fid_stats
+    assert fid["reload_dequantized"] == 1
+    assert fid["dequant_s"] == pytest.approx(dequant_s)
+
+
+def test_fidelity_decided_before_evict_hook_fires():
+    """The evict hook must be able to read ``ent.fidelity`` to pick the
+    quantize kernel — the regression is deciding the fidelity after."""
+    kv, _ = _kv("host_backed", slots=1)
+    kv.fidelity_fn = lambda key: Fidelity.FP8
+    at_hook = {}
+    kv.evict_hook = lambda key, slot: at_hook.setdefault(
+        key, kv.table[key].fidelity)
+    kv.allocate_block(0, 0, 0)
+    kv.allocate_block(1, 0, 0)
+    assert at_hook[(0, 0)] is Fidelity.FP8
+
+
+def test_default_fidelity_path_is_seed_exact():
+    """No fidelity_fn (the default): every demotion is FP16 and the fid
+    counters never move — byte-for-byte the seed behaviour."""
+    kv, alloc = _kv("host_backed", slots=1)
+    kv.allocate_block(0, 0, 0)
+    kv.allocate_block(1, 0, 0)
+    assert kv.table[(0, 0)].fidelity is Fidelity.FP16
+    assert alloc.device_view()[0]["used"] == kv.block_nbytes
+    assert all(v == 0 for v in kv.store.fid_stats.values())
+    counts = {f: n for f, n in kv.store.fidelity_counts().items() if n}
+    assert counts == {"fp16": 2}
+
+
+def test_fidelity_counts_census():
+    kv, _ = _kv("host_backed", slots=1)
+    kv.fidelity_fn = lambda key: Fidelity.INT8
+    kv.allocate_block(0, 0, 0)
+    kv.allocate_block(1, 0, 0)
+    counts = {f: n for f, n in kv.store.fidelity_counts().items() if n}
+    assert counts == {"fp16": 1, "int8": 1}
+
+
+# ---------------------------------------------------------------------------
+# SSD cold tier
+# ---------------------------------------------------------------------------
+
+
+def test_reconstructible_eviction_takes_ssd_over_host():
+    """With the cold tier on, a RECONSTRUCTIBLE block whose peer
+    allocation fails lands on SSD (durable, cheaper than host) instead
+    of the host write-through."""
+    kv, _ = _kv("lossy", slots=1, budget_mib=0, ssd_tier=True)
+    kv.allocate_block(0, 0, 0)
+    ops = kv.allocate_block(1, 0, 0)[1]
+    ent = kv.table[(0, 0)]
+    assert ent.state is Residency.SSD
+    assert ent.tier is Tier.LOCAL_SSD
+    assert ops[-1].dst is Tier.LOCAL_SSD
+    assert kv.stats["evict_to_ssd"] == 1 and kv.stats["evict_to_host"] == 0
+    # and it reloads over the SSD link, not the host link
+    kv.free_request(1)
+    back = kv.ensure_resident(0, 0)
+    assert kv.stats["reload_ssd"] == 1
+    assert back[-1].src is Tier.LOCAL_SSD
+    assert kv.table[(0, 0)].state is Residency.LOCAL
+
+
+def test_backed_eviction_overflows_host_onto_ssd():
+    """BACKED blocks keep using host DRAM until ``host_capacity_bytes``
+    is spent; the overflow takes the SSD rung."""
+    kv, _ = _kv("host_backed", slots=1, budget_mib=0, ssd_tier=True)
+    # capacity for exactly one full-precision block
+    kv.store.host_capacity_bytes = kv.block_nbytes
+    kv.allocate_block(0, 0, 0)
+    kv.allocate_block(1, 0, 0)      # evicts (0,0): host has room
+    assert kv.table[(0, 0)].state is Residency.HOST
+    kv.allocate_block(2, 0, 0)      # evicts (1,0): host budget spent
+    assert kv.table[(1, 0)].state is Residency.SSD
+    assert kv.stats["evict_to_host"] == 1 and kv.stats["evict_to_ssd"] == 1
+
+
+def test_ssd_off_keeps_the_seed_ladder():
+    kv, _ = _kv("lossy", slots=1, budget_mib=0)
+    kv.allocate_block(0, 0, 0)
+    kv.allocate_block(1, 0, 0)
+    assert kv.table[(0, 0)].state is Residency.HOST
+    assert kv.stats["evict_to_ssd"] == 0
+
+
+# ---------------------------------------------------------------------------
+# FidelityPolicy
+# ---------------------------------------------------------------------------
+
+
+def test_fidelity_policy_slo_mapping():
+    pol = FidelityPolicy(mode="slo")
+    assert pol.fidelity_for("latency") is Fidelity.FP16
+    assert pol.fidelity_for("throughput") is Fidelity.INT8
+    assert pol.fidelity_for("batch") is Fidelity.INT8
+    assert pol.fidelity_for(None) is Fidelity.FP16
+    assert pol.fidelity_for("batch", shared=True) is Fidelity.FP16, \
+        "shared trie blocks default FP16: one demotion serves every class"
+
+
+def test_fidelity_policy_modes_and_overrides():
+    off = FidelityPolicy(mode="off")
+    assert off.fidelity_for("batch") is Fidelity.FP16
+    always = FidelityPolicy(mode="always", batch=Fidelity.INT4)
+    assert always.fidelity_for("latency") is Fidelity.INT4
+    assert always.fidelity_for("batch", shared=True) is Fidelity.INT4
+    custom = FidelityPolicy(mode="slo", throughput=Fidelity.FP8)
+    assert custom.fidelity_for("throughput") is Fidelity.FP8
+
+
+def test_fidelity_policy_validates():
+    with pytest.raises(ValueError, match="mode"):
+        FidelityPolicy(mode="sometimes")
+    with pytest.raises(TypeError, match="Fidelity"):
+        FidelityPolicy(mode="slo", batch="int8")
+    assert set(FIDELITY_POLICIES) == {"off", "slo", "always"}
+
+
+# ---------------------------------------------------------------------------
+# prefix-cache digest non-aliasing
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_digests_never_alias_across_fidelities():
+    """A quantized cached block must never be served where a
+    full-precision one is expected: the content key includes the cache's
+    fidelity, and the FP16 key keeps the legacy 2-tuple shape."""
+    cfg = get_config("yi-6b").reduced()
+    rt = HarvestRuntime({0: 8 * MiB})
+    kv = rt.kv_manager(cfg, block_size=4, num_local_slots=8,
+                       num_kv_layers=2)
+    fp16 = PrefixCache(kv, PrefixCacheConfig(), metrics=rt.metrics)
+    int8 = PrefixCache(kv, PrefixCacheConfig(fidelity=Fidelity.INT8),
+                       metrics=rt.metrics)
+    digest = ("d", 123)
+    assert fp16.content_key(digest) == ("px", digest)
+    assert int8.content_key(digest) == ("px", digest, "int8")
+    assert fp16.content_key(digest) != int8.content_key(digest)
+    with pytest.raises(TypeError, match="Fidelity"):
+        PrefixCacheConfig(fidelity="int8")
+
+
+# ---------------------------------------------------------------------------
+# engine e2e
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def served_model():
+    from repro.models import model as M
+    cfg = dataclasses.replace(get_config("yi-6b").reduced(), num_layers=2)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _run(cfg, params, *, policy=None, slo="batch", mode="sync",
+         durability="host_backed", cold=False, host_cap=None):
+    eng = HarvestServingEngine(
+        cfg, params, max_batch=2, block_size=8, num_local_slots=10,
+        max_seq_len=96, allocator=HarvestAllocator({1: 64 * MiB}),
+        hardware=H100_NVLINK, scheduler="fair", mode=mode,
+        durability=durability, fidelity_policy=policy, cold_tier=cold,
+        host_capacity_bytes=host_cap)
+    prompts = [[2 + i, 5, 7, 11, 13 + i] for i in range(4)]
+    reqs = [eng.submit_request(prompt=p, max_new_tokens=12, slo=slo)
+            for p in prompts]
+    stats = eng.run(max_steps=800)
+    return eng, [tuple(r.output) for r in reqs], stats
+
+
+def test_latency_class_tokens_bit_identical(served_model):
+    """The headline fidelity-off equivalence: when only latency-class
+    traffic runs, the slo policy demotes everything at FP16 and tokens,
+    bytes and clock match the fidelity-off baseline exactly."""
+    cfg, params = served_model
+    _, tok_off, st_off = _run(cfg, params, slo="latency")
+    eng, tok_slo, st_slo = _run(cfg, params, policy="slo", slo="latency")
+    assert tok_off == tok_slo
+    assert st_off.clock_s == st_slo.clock_s
+    assert eng.runtime.stats()["fid"]["demote_quantized"] == 0
+
+
+def test_batch_class_quantizes_and_decodes_within_tolerance(served_model):
+    """Batch-class traffic under the slo policy rides int8: demotions
+    quantize, reloads dequantize, the clock is no worse than fidelity-off
+    (fewer wire bytes beat the added quantize pass), and decode still
+    emits every token."""
+    cfg, params = served_model
+    _, tok_off, st_off = _run(cfg, params)
+    eng, tok_slo, st_slo = _run(cfg, params, policy="slo")
+    fid = eng.runtime.stats()["fid"]
+    assert fid["demote_quantized"] > 0 and fid["reload_dequantized"] > 0
+    assert fid["bytes_saved"] > 0
+    assert st_slo.clock_s <= st_off.clock_s + 1e-12
+    # decode completed: the quantized KV path emitted the full budget
+    assert all(len(t) == 12 for t in tok_slo)
+    assert len(tok_slo) == len(tok_off)
+    st_slo.check_clock_identity()
+
+
+def test_engine_degrade_is_lossy_but_bounded(served_model):
+    cfg, params = served_model
+    eng, _, _ = _run(cfg, params, policy="slo")
+    rng = np.random.default_rng(0)
+    data = rng.normal(size=(2, 2, 8, 2, 4)).astype(np.float32)
+    deg = eng._degrade(data, Fidelity.INT8)
+    assert deg.shape == data.shape and deg.dtype == data.dtype
+    assert not np.array_equal(deg, data), "int8 round-trip must be lossy"
+    absmax = np.abs(data).max()
+    assert np.abs(deg - data).max() <= absmax / 127 + 1e-7
+
+
+def test_engine_cold_tier_reloads_from_ssd(served_model):
+    cfg, params = served_model
+    eng, toks, st = _run(cfg, params, mode="async", durability="lossy",
+                         cold=True)
+    # starve the peer so the ladder reaches the SSD rung
+    eng2, toks2, _ = _run(cfg, params, mode="async", durability="lossy",
+                          cold=True)
+    assert all(len(t) == 12 for t in toks)
+    st.check_clock_identity()
+    # direct starved run: no peer budget at all
+    eng3 = HarvestServingEngine(
+        cfg, params, max_batch=2, block_size=8, num_local_slots=10,
+        max_seq_len=96, allocator=HarvestAllocator({1: 0}),
+        hardware=H100_NVLINK, scheduler="fair", mode="async",
+        durability="lossy", cold_tier=True)
+    reqs = [eng3.submit_request(prompt=[2 + i, 5, 7, 11, 13 + i],
+                                max_new_tokens=12, slo="batch")
+            for i in range(4)]
+    st3 = eng3.run(max_steps=800)
+    assert eng3.kv_mgr.stats["evict_to_ssd"] > 0
+    assert eng3.kv_mgr.stats["reload_ssd"] > 0
+    assert all(len(r.output) == 12 for r in reqs), \
+        "SSD round-trips must not drop tokens"
+    st3.check_clock_identity()
+
+
+def test_engine_knobs_validate(served_model):
+    cfg, params = served_model
+    with pytest.raises(ValueError, match="fidelity policy"):
+        HarvestServingEngine(cfg, params, fidelity_policy="bogus")
+    with pytest.raises(AssertionError, match="event timeline"):
+        HarvestServingEngine(cfg, params, mode="sync", cold_tier=True)
+
+
+def test_serve_cli_validates(monkeypatch, capsys):
+    from repro.launch import serve
+    monkeypatch.setattr("sys.argv",
+                        ["serve", "--fidelity-policy", "bogus"])
+    with pytest.raises(SystemExit):
+        serve.main()
+    assert "fidelity-policy" in capsys.readouterr().err
+    monkeypatch.setattr("sys.argv", ["serve", "--cold-tier"])
+    with pytest.raises(SystemExit):
+        serve.main()
+    assert "--cold-tier needs" in capsys.readouterr().err

@@ -11,11 +11,14 @@ import pytest
 
 from repro.kernels.flash_attention.ops import mha
 from repro.kernels.flash_attention.ref import flash_attention_ref
-from repro.kernels.harvest_copy.ops import (copy_blocks, gather_blocks,
+from repro.kernels.harvest_copy.ops import (copy_blocks, dequantize_blocks,
+                                            gather_blocks, quantize_blocks,
                                             scatter_blocks)
-from repro.kernels.harvest_copy.ref import (harvest_copy_ref,
+from repro.kernels.harvest_copy.ref import (dequantize_reload_ref,
+                                            harvest_copy_ref,
                                             harvest_gather_ref,
-                                            harvest_scatter_ref)
+                                            harvest_scatter_ref,
+                                            quantize_demote_ref)
 from repro.kernels.moe_ffn.ops import expert_ffn
 from repro.kernels.moe_ffn.ref import moe_ffn_ref
 from repro.kernels.paged_attention.ops import decode_attention
@@ -285,3 +288,171 @@ def test_harvest_copy_rejects_out_of_range_ids():
     with pytest.raises(IndexError, match="out of range"):
         copy_blocks(src, dst, jnp.asarray([0, 1], jnp.int32),
                     jnp.asarray([0, -2], jnp.int32), interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# fused quantize-on-demote / dequantize-on-reload
+# ---------------------------------------------------------------------------
+
+#: round-trip error ceiling per wire fidelity, as a fraction of the
+#: block's absmax (int8/int4: half a quantization step with headroom;
+#: fp8 e4m3: 2^-3 relative mantissa step with headroom)
+FID_ERR = {"int8": 1 / 127, "fp8": 0.07, "int4": 1 / 7}
+
+
+@pytest.mark.parametrize("fidelity", ["int8", "fp8", "int4"])
+@pytest.mark.parametrize("n_slots,m,block_elems", [
+    (16, 4, 2048),       # KV-block-sized payloads
+    (8, 8, 256),         # whole pool
+    (6, 2, 129),         # odd element count (int4 packs a padded column)
+    (4, 1, 2),           # minimal block
+])
+def test_quantize_demote_matches_ref(fidelity, n_slots, m, block_elems):
+    rng = np.random.default_rng(12)
+    src = jnp.asarray(rng.normal(size=(n_slots, block_elems)) * 3,
+                      jnp.float32)
+    ids = jnp.asarray(rng.choice(n_slots, size=m, replace=False), jnp.int32)
+    values, scales = quantize_blocks(src, ids, fidelity=fidelity,
+                                     interpret=True)
+    ref_v, ref_s = quantize_demote_ref(src, ids, fidelity=fidelity)
+    np.testing.assert_array_equal(np.asarray(values), np.asarray(ref_v))
+    np.testing.assert_allclose(np.asarray(scales), np.asarray(ref_s),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("fidelity", ["int8", "fp8", "int4"])
+@pytest.mark.parametrize("n_slots,m,block_elems", [
+    (16, 4, 2048),
+    (8, 8, 256),
+    (6, 2, 129),         # odd width: reload slices the padded column off
+])
+def test_quantize_dequantize_roundtrip_bounded(fidelity, n_slots, m,
+                                               block_elems):
+    """Demote → reload must reconstruct every touched block within the
+    documented per-fidelity error bound and leave untouched slots
+    bit-exact (``input_output_aliases`` scatters in place)."""
+    rng = np.random.default_rng(13)
+    src = jnp.asarray(rng.normal(size=(n_slots, block_elems)) * 2,
+                      jnp.float32)
+    dst = jnp.asarray(rng.normal(size=(n_slots, block_elems)), jnp.float32)
+    ids = jnp.asarray(rng.choice(n_slots, size=m, replace=False), jnp.int32)
+
+    values, scales = quantize_blocks(src, ids, fidelity=fidelity,
+                                     interpret=True)
+    got = dequantize_blocks(dst, values, scales, ids, fidelity=fidelity,
+                            interpret=True)
+    ref = dequantize_reload_ref(dst, values, scales, ids, fidelity=fidelity)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+    # per-block error bound relative to the block's absmax
+    for row, sid in enumerate(np.asarray(ids)):
+        orig = np.asarray(src[sid])
+        absmax = np.abs(orig).max()
+        err = np.abs(np.asarray(got[sid]) - orig).max()
+        assert err <= FID_ERR[fidelity] * absmax + 1e-7, \
+            f"{fidelity} row {row}: err {err} > bound"
+    # untouched destination rows preserved bit-exact
+    untouched = np.setdiff1d(np.arange(n_slots), np.asarray(ids))
+    np.testing.assert_array_equal(np.asarray(got[untouched]),
+                                  np.asarray(dst[untouched]))
+
+
+def test_quantize_zero_block_roundtrips_exactly():
+    """An all-zero block must survive (guarded scale, no 0/0)."""
+    src = jnp.zeros((4, 64), jnp.float32)
+    dst = jnp.asarray(np.random.default_rng(14).normal(size=(4, 64)),
+                      jnp.float32)
+    ids = jnp.asarray([1, 3], jnp.int32)
+    for fidelity in ("int8", "fp8", "int4"):
+        values, scales = quantize_blocks(src, ids, fidelity=fidelity,
+                                         interpret=True)
+        got = dequantize_blocks(dst, values, scales, ids, fidelity=fidelity,
+                                interpret=True)
+        np.testing.assert_array_equal(np.asarray(got[ids]),
+                                      np.zeros((2, 64), np.float32))
+
+
+def test_quantize_rejects_bad_inputs():
+    src = jnp.asarray(np.zeros((4, 8)), jnp.float32)
+    ids = jnp.asarray([0, 2], jnp.int32)
+    with pytest.raises(ValueError, match="fidelity"):
+        quantize_blocks(src, ids, fidelity="fp16", interpret=True)
+    with pytest.raises(ValueError, match="2-D"):
+        quantize_blocks(src.reshape(-1), ids, interpret=True)
+    with pytest.raises(TypeError, match="floating"):
+        quantize_blocks(src.astype(jnp.int32), ids, interpret=True)
+    values, scales = quantize_blocks(src, ids, interpret=True)
+    with pytest.raises(ValueError, match="shape"):
+        dequantize_blocks(src, values[:1], scales, ids, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis round-trip properties (skipped on the minimal-deps CI leg)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # minimal-deps environments run without it
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=40, deadline=None)
+    @given(fidelity=st.sampled_from(["int8", "fp8", "int4"]),
+           n_slots=st.integers(1, 10),
+           block_elems=st.integers(1, 300),   # odd widths hit the int4 pad
+           scale_pow=st.integers(-8, 8),
+           seed=st.integers(0, 2**31 - 1),
+           data=st.data())
+    def test_quantize_roundtrip_property(fidelity, n_slots, block_elems,
+                                         scale_pow, seed, data):
+        """For ANY pool shape (ragged tails included), slot subset, and
+        magnitude: the round-trip error stays under the documented bound
+        and untouched slots are preserved bit-exact — never an assert on
+        non-divisible widths."""
+        m = data.draw(st.integers(1, n_slots))
+        rng = np.random.default_rng(seed)
+        src = jnp.asarray(rng.normal(size=(n_slots, block_elems))
+                          * 2.0 ** scale_pow, jnp.float32)
+        dst = jnp.asarray(rng.normal(size=(n_slots, block_elems)),
+                          jnp.float32)
+        ids = jnp.asarray(rng.choice(n_slots, size=m, replace=False),
+                          jnp.int32)
+        values, scales = quantize_blocks(src, ids, fidelity=fidelity,
+                                         interpret=True)
+        got = dequantize_blocks(dst, values, scales, ids, fidelity=fidelity,
+                                interpret=True)
+        for sid in np.asarray(ids):
+            orig = np.asarray(src[sid])
+            absmax = float(np.abs(orig).max())
+            err = float(np.abs(np.asarray(got[sid]) - orig).max())
+            assert err <= FID_ERR[fidelity] * absmax + 1e-12
+        untouched = np.setdiff1d(np.arange(n_slots), np.asarray(ids))
+        np.testing.assert_array_equal(np.asarray(got[untouched]),
+                                      np.asarray(dst[untouched]))
+
+    @settings(max_examples=25, deadline=None)
+    @given(fidelity=st.sampled_from(["int8", "fp8", "int4"]),
+           block_elems=st.integers(1, 200),
+           seed=st.integers(0, 2**31 - 1))
+    def test_quantize_kernel_equals_ref_property(fidelity, block_elems,
+                                                 seed):
+        """The Pallas kernel and the jnp oracle agree bit-exact on packed
+        values for any width, including int4's padded odd column."""
+        rng = np.random.default_rng(seed)
+        src = jnp.asarray(rng.normal(size=(6, block_elems)) * 4, jnp.float32)
+        ids = jnp.asarray([5, 0, 3], jnp.int32)
+        values, scales = quantize_blocks(src, ids, fidelity=fidelity,
+                                         interpret=True)
+        ref_v, ref_s = quantize_demote_ref(src, ids, fidelity=fidelity)
+        np.testing.assert_array_equal(np.asarray(values), np.asarray(ref_v))
+        np.testing.assert_allclose(np.asarray(scales), np.asarray(ref_s),
+                                   rtol=1e-6)
+
+else:
+
+    @pytest.mark.skip(reason="property tests need the optional hypothesis "
+                             "dep")
+    def test_quantize_roundtrip_property():
+        pass
