@@ -1,0 +1,80 @@
+"""CI wall-clock perf gate.
+
+Compares the ``runtime_s`` recorded in benchmark result JSONs against
+the committed baselines in ``benchmarks/perf_baseline.json`` and exits
+non-zero when any measured runtime exceeds ``--factor`` (default 2x)
+times its baseline — a hot-path regression gate, not a latency SLO:
+the baselines carry machine headroom so runner jitter passes and only
+real slowdowns (an accidentally quadratic step loop, a de-hoisted
+constant) trip it.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.perf_gate --hw tpu-v5e \
+        [--results results] [--factor 2.0]
+
+Benchmarks listed in the baseline file but missing from the results
+directory are skipped (the gate only judges what actually ran); a
+result that ran in full (non ``--fast``) mode is skipped too, since
+baselines are calibrated for the fast sweep.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+BASELINE_PATH = Path(__file__).resolve().parent / "perf_baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hw", required=True,
+                    help="hardware leg the results were produced under")
+    ap.add_argument("--results", default=None,
+                    help="results directory (default: repo results/)")
+    ap.add_argument("--factor", type=float, default=2.0,
+                    help="fail when runtime_s > factor * baseline")
+    args = ap.parse_args(argv)
+
+    from benchmarks.common import RESULTS_DIR
+    results_dir = Path(args.results) if args.results else RESULTS_DIR
+    baselines = json.loads(BASELINE_PATH.read_text())
+
+    failed = []
+    for name, per_hw in baselines.items():
+        if name.startswith("_"):
+            continue
+        base = per_hw.get(args.hw)
+        if base is None:
+            continue
+        p = results_dir / f"{name}.json"
+        if not p.exists():
+            print(f"perf-gate: {name}: no result at {p}, skipping")
+            continue
+        payload = json.loads(p.read_text())
+        runtime = payload.get("runtime_s")
+        if runtime is None:
+            print(f"perf-gate: {name}: result has no runtime_s, skipping")
+            continue
+        if not payload.get("fast", False):
+            print(f"perf-gate: {name}: full (non-fast) run, skipping")
+            continue
+        limit = args.factor * base["runtime_s"]
+        verdict = "FAIL" if runtime > limit else "ok"
+        print(f"perf-gate: {name} [{args.hw}]: {runtime:.1f}s "
+              f"(baseline {base['runtime_s']:.1f}s, limit {limit:.1f}s) "
+              f"{verdict}")
+        if runtime > limit:
+            failed.append(name)
+    if failed:
+        print(f"perf-gate: FAILED: {', '.join(failed)} — hot-path "
+              f"runtime regressed past {args.factor}x the committed "
+              f"baseline (benchmarks/perf_baseline.json)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

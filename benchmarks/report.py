@@ -127,12 +127,47 @@ def section_fidelity():
                     "dequant share"], rows))
 
 
+def section_scaleout():
+    """Scale-out artifact (fig14): the disaggregated-vs-colocated knee
+    cells and the scalar-vs-vectorized event-loop walltimes."""
+    p = RESULTS_DIR / "fig14_scaleout.json"
+    if not p.exists():
+        print("_no fig14 artifact yet — run `python -m benchmarks.run "
+              "--only fig14`_")
+        return
+    payload = json.loads(p.read_text())
+    a = payload.get("part_a", {})
+    rows = []
+    for mode in ("colocated", "disaggregated"):
+        cell = a.get(mode, {})
+        rows.append([
+            payload.get("hw", "-"), a.get("topology", "-"), mode,
+            "yes" if a.get("tokens_match") else "no",
+            f"{cell.get('goodput_latency', 0):.0f}",
+            f"{cell.get('slo_attainment_latency', 0):.0%}",
+            f"{cell.get('ttft_p99_latency', 0) * 1e6:.1f}",
+            f"{cell.get('dcn_coalesced', 0):.0f}"])
+    print(md_table(["hw", "topology", "mode", "tokens=", "goodput tok/s",
+                    "SLO%", "ttft99 us", "dcn coalesced"], rows))
+    perf = payload.get("part_c", {}).get("perf", {})
+    if perf:
+        print()
+        print(md_table(
+            ["perf trace", "hosts", "scalar s", "vector s", "speedup",
+             "bit-identical"],
+            [[f"{perf.get('n', 0):,}", perf.get("hosts", "-"),
+              f"{perf.get('scalar_walltime_s', 0):.2f}",
+              f"{perf.get('vector_walltime_s', 0):.2f}",
+              f"{perf.get('speedup', 0):.1f}x",
+              "yes" if perf.get("identical") else "no"]]))
+
+
 def section_claims():
     names = ["fig2_cluster_cdf", "fig3_transfer_latency", "table1_model_zoo",
              "fig5_moe_throughput", "fig6_offload_sweep", "fig7_kv_latency",
              "fig8_peer_scaling", "fig9_coalescing", "fig10_slo_serving",
              "fig11_prefix_sharing", "fig12_continuous_batching",
-             "fig13_fidelity_tiers", "roofline"]
+             "fig13_fidelity_tiers", "fig14_scaleout", "roofline"]
     rows = []
     for n in names:
         p = RESULTS_DIR / f"{n}.json"
@@ -167,6 +202,9 @@ if __name__ == "__main__":
     if a.section in ("fidelity", "all"):
         print("\n### Fidelity tiers (fig13)\n")
         section_fidelity()
+    if a.section in ("scaleout", "all"):
+        print("\n### Scale-out (fig14)\n")
+        section_scaleout()
     if a.section in ("metrics", "all"):
         print("\n### Runtime metrics (transfer queues, prefetch)\n")
         section_metrics()

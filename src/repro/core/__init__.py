@@ -45,8 +45,10 @@ from repro.core.simulator import (AccessModelConfig, ExpertAccessModel,
 from repro.core.store import (Durability, HarvestStore, LostObjectError,
                               MetricsRegistry, ObjectEntry, Residency,
                               Transfer, TransferEngine, channel_name)
-from repro.core.tiers import (HARDWARE, H100_NVLINK, TOPOLOGIES, TPU_V5E,
-                              Fidelity, HardwareModel, LinkSpec, Tier,
-                              Topology, expert_bytes, get_topology,
-                              kv_block_bytes, kv_entry_bytes, nvlink_2gpu,
-                              nvlink_mesh, pcie_switch, tpu_v5e_torus)
+from repro.core.tiers import (HARDWARE, H100_DCN_LINK, H100_NVLINK,
+                              TOPOLOGIES, TPU_V5E, V5E_DCN_LINK, Fidelity,
+                              HardwareModel, LinkSpec, Tier, Topology,
+                              expert_bytes, get_topology, h100_dcn,
+                              kv_block_bytes, kv_entry_bytes, multihost,
+                              nvlink_2gpu, nvlink_mesh, pcie_switch,
+                              tpu_v5e_torus, v5e_dcn)

@@ -124,7 +124,7 @@ class MetricsRegistry:
 # ---------------------------------------------------------------------------
 
 
-@dataclass
+@dataclass(slots=True)
 class Transfer:
     """One simulated tier-to-tier move.
 
@@ -185,7 +185,25 @@ def _link_name(src: Tier, dst: Tier) -> str:
 LEGACY_PEER_DEVICE = 1
 
 
-def channel_name(src: Tier, dst: Tier, device: Optional[int] = None) -> str:
+class _LaneKeys:
+    """Pre-interned per-lane metrics keys (one instance per lane, built on
+    first submission) — the hot submit/drain paths index counters through
+    these instead of re-formatting ``f"q.{ch}.*"`` strings per event."""
+    __slots__ = ("submitted", "first_issue_t", "busy_s", "last_ready_t",
+                 "depth", "peak", "completed")
+
+    def __init__(self, ch: str):
+        self.submitted = f"q.{ch}.submitted"
+        self.first_issue_t = f"q.{ch}.first_issue_t"
+        self.busy_s = f"q.{ch}.busy_s"
+        self.last_ready_t = f"q.{ch}.last_ready_t"
+        self.depth = f"q.{ch}.depth"
+        self.peak = f"q.{ch}.peak"
+        self.completed = f"q.{ch}.completed"
+
+
+def channel_name(src: Tier, dst: Tier, device: Optional[int] = None,
+                 host: int = 0) -> str:
     """Directional lane of a physical link, per peer device.
 
     NVLink / ICI / PCIe are full duplex: writes out of local HBM
@@ -197,12 +215,21 @@ def channel_name(src: Tier, dst: Tier, device: Optional[int] = None) -> str:
     each other; device :data:`LEGACY_PEER_DEVICE` (and transfers naming no
     device) keep the legacy ``peer_in``/``peer_out`` names.  The host path
     is one physical PCIe link regardless of which peer is involved.
+
+    A nonzero ``host`` places the peer device on a REMOTE host: the
+    transfer rides that host's shared ``dcn{h}_in``/``dcn{h}_out`` lane
+    pair instead of a per-device lane — there is one DCN NIC pair per host
+    pair, so a remote host's devices contend for it while distinct remote
+    hosts still pipeline in parallel.
     """
     base = _link_name(src, dst)
     if base == "hbm":
         return base
-    if base == "peer" and device is not None and device != LEGACY_PEER_DEVICE:
-        base = f"peer{device}"
+    if base == "peer":
+        if host:
+            base = f"dcn{host}"
+        elif device is not None and device != LEGACY_PEER_DEVICE:
+            base = f"peer{device}"
     return f"{base}_in" if dst is Tier.LOCAL_HBM else f"{base}_out"
 
 
@@ -235,6 +262,13 @@ class TransferEngine:
         self._inflight: Dict[str, "collections.deque[Transfer]"] = {}
         self._key_busy: Dict[ObjectKey, Transfer] = {}
         self._batch_seq: int = 0
+        # hot-path caches: routed LinkSpec per (src, dst, device) and
+        # pre-interned metrics keys per lane / per (client, link) — the
+        # per-event f-string formatting showed up hot in the 1M-request
+        # sweeps (the keys are invariant per lane, only the counts change)
+        self._spec_cache: Dict[Tuple, "object"] = {}
+        self._lane_keys: Dict[str, _LaneKeys] = {}
+        self._client_keys: Dict[Tuple[str, str], Tuple[str, str, str]] = {}
         # opt-in submit log (benchmarks reconstruct exact per-lane busy
         # intervals from it; off by default — it grows without bound)
         self.record_log: bool = False
@@ -254,20 +288,32 @@ class TransferEngine:
         attached AND the device is one of its peers: a flat
         :class:`HardwareModel` declares ONE peer link, so every peer
         transfer keeps the legacy single lane pair no matter how callers
-        number their devices.
+        number their devices.  A peer device the topology places on a
+        remote host routes to that host's shared ``dcn{h}`` lane pair.
         """
+        host = 0
         if self.topology is None or device not in self.topology.peer_links:
             device = None
-        return channel_name(src, dst, device)
+        elif self.topology.device_hosts:
+            host = self.topology.host_of(device)
+        return channel_name(src, dst, device, host)
 
     def link_spec(self, src: Tier, dst: Tier,
                   device: Optional[int] = None):
         """The :class:`~repro.core.tiers.LinkSpec` a (src, dst, device)
         transfer is charged against — the coalescing/striping layer reads
-        its setup ``latency`` and link-disjoint ``paths`` from here."""
-        if self.topology is not None:
-            return self.topology.link(src, dst, device)
-        return self.hw.link(src, dst)
+        its setup ``latency`` and link-disjoint ``paths`` from here.
+        Routed specs are cached per (src, dst, device): the topology is
+        immutable, and the repeated ``link()`` dict walks (plus the fresh
+        hbm LinkSpec it constructs) showed up hot in the sweep loops."""
+        ck = (src, dst, device)
+        spec = self._spec_cache.get(ck)
+        if spec is None:
+            spec = (self.topology.link(src, dst, device)
+                    if self.topology is not None
+                    else self.hw.link(src, dst))
+            self._spec_cache[ck] = spec
+        return spec
 
     def estimate(self, nbytes: int, src: Tier, dst: Tier,
                  device: Optional[int] = None,
@@ -278,9 +324,7 @@ class TransferEngine:
         to the wire size that precision actually moves."""
         if fidelity is not None:
             nbytes = fidelity.wire_bytes(nbytes)
-        if self.topology is not None:
-            return self.topology.transfer_time(nbytes, src, dst, device)
-        return self.hw.transfer_time(nbytes, src, dst)
+        return self.link_spec(src, dst, device).transfer_time(nbytes)
 
     def transfer(self, key: ObjectKey, nbytes: int, src: Tier, dst: Tier,
                  extra_latency: float = 0.0, client: str = "default",
@@ -294,9 +338,14 @@ class TransferEngine:
         wire = fid.wire_bytes(nbytes)
         seconds = self.estimate(wire, src, dst, device) + extra_latency
         link = _link_name(src, dst)
-        self._stats[f"{client}.{link}_s"] += seconds
-        self._stats[f"{client}.{link}_n"] += 1
-        self._stats[f"{client}.{link}_bytes"] += wire
+        ks = self._client_keys.get((client, link))
+        if ks is None:
+            ks = (f"{client}.{link}_s", f"{client}.{link}_n",
+                  f"{client}.{link}_bytes")
+            self._client_keys[(client, link)] = ks
+        self._stats[ks[0]] += seconds
+        self._stats[ks[1]] += 1
+        self._stats[ks[2]] += wire
         return Transfer(key, src, dst, wire, seconds, client=client,
                         device=device, fidelity=fid)
 
@@ -342,17 +391,21 @@ class TransferEngine:
         q.append(t)
         if self.record_log:
             self.log.append(t)
-        if not self._stats[f"q.{ch}.submitted"]:
-            self._stats[f"q.{ch}.first_issue_t"] = t.issue_t
-        self._stats[f"q.{ch}.submitted"] += 1
-        self._stats[f"q.{ch}.busy_s"] += lane_s
-        self._stats[f"q.{ch}.last_ready_t"] = t.ready_t
-        self._stats[f"q.{ch}.depth"] = len(q)
-        if len(q) > self._stats[f"q.{ch}.peak"]:
-            self._stats[f"q.{ch}.peak"] = len(q)
+        ks = self._lane_keys.get(ch)
+        if ks is None:
+            ks = self._lane_keys[ch] = _LaneKeys(ch)
+        stats = self._stats
+        if not stats[ks.submitted]:
+            stats[ks.first_issue_t] = t.issue_t
+        stats[ks.submitted] += 1
+        stats[ks.busy_s] += lane_s
+        stats[ks.last_ready_t] = t.ready_t
+        stats[ks.depth] = len(q)
+        if len(q) > stats[ks.peak]:
+            stats[ks.peak] = len(q)
         return t
 
-    def submit(self, t: Transfer) -> Transfer:
+    def submit(self, t: Transfer, not_before: float = 0.0) -> Transfer:
         """Enqueue a pending transfer on its directional link lane.
 
         The transfer starts once the lane is free AND any in-flight
@@ -360,15 +413,21 @@ class TransferEngine:
         eviction write-back is still on the wire must wait for it), and
         becomes ready ``seconds`` later.  Per-lane FIFO order is preserved
         by construction: ``ready_t`` is non-decreasing within a lane.
+
+        ``not_before`` floors the start time at a future production event
+        the payload waits on that is NOT itself a transfer — e.g. a
+        disaggregated prefill chunk finishing on its pool worker before
+        its KV blocks can enter the DCN stream.
         """
         ch = self.lane_of(t)
-        start = max(self.now, self._channel_busy.get(ch, 0.0))
+        start = max(self.now, not_before, self._channel_busy.get(ch, 0.0))
         dep = self._key_busy.get(t.dep_key)
         if dep is not None and not dep.done:
             start = max(start, dep.ready_t)
         return self._enqueue(t, ch, t.seconds, start)
 
-    def submit_coalesced(self, members: Iterable[Transfer]) -> List[Transfer]:
+    def submit_coalesced(self, members: Iterable[Transfer],
+                         not_before: float = 0.0) -> List[Transfer]:
         """Submit same-lane transfers as ONE batched lane occupancy.
 
         The batch pays the lane's per-transfer setup latency once (the
@@ -377,6 +436,10 @@ class TransferEngine:
         only its bytes time.  Completion still resolves per member —
         ``ready_t`` is stamped at each member's cumulative byte boundary,
         so a waiter on one object never waits for the whole batch's tail.
+
+        ``not_before`` floors the batch start at a production event that
+        is not itself a transfer (a disaggregated prefill chunk finishing
+        on another host), exactly like :meth:`submit`'s floor.
 
         Members that route to a different lane, carry a different wire
         fidelity (one batched submission models one fused gather kernel
@@ -407,7 +470,8 @@ class TransferEngine:
             setup = self.link_spec(batched[0].src, batched[0].dst,
                                    batched[0].device).latency
             self._batch_seq += 1
-            start = max(self.now, self._channel_busy.get(ch, 0.0))
+            start = max(self.now, not_before,
+                        self._channel_busy.get(ch, 0.0))
             saved = 0.0
             for i, t in enumerate(batched):
                 lane_s = t.seconds if i == 0 else max(t.seconds - setup, 0.0)
@@ -422,7 +486,7 @@ class TransferEngine:
         else:
             solo = batched + solo
         for t in solo:
-            out.append(self.submit(t))
+            out.append(self.submit(t, not_before=not_before))
         return out
 
     def split(self, t: Transfer, ways: int, chunk_nbytes: int
@@ -505,15 +569,19 @@ class TransferEngine:
         if t > self.now:
             self.now = t
         done: List[Transfer] = []
+        key_busy, stats = self._key_busy, self._stats
         for ch, q in self._inflight.items():
+            if not q or q[0].ready_t > self.now:
+                continue
+            ks = self._lane_keys[ch]
             while q and q[0].ready_t <= self.now:
                 tr = q.popleft()
                 tr.done = True
-                if self._key_busy.get(tr.dep_key) is tr:
-                    del self._key_busy[tr.dep_key]
-                self._stats[f"q.{ch}.completed"] += 1
-                self._stats[f"q.{ch}.depth"] = len(q)
+                if key_busy.get(tr.dep_key) is tr:
+                    del key_busy[tr.dep_key]
+                stats[ks.completed] += 1
                 done.append(tr)
+            stats[ks.depth] = len(q)
         return done
 
     def advance(self, seconds: float) -> List[Transfer]:

@@ -185,10 +185,32 @@ class Topology:
     distinct directional lanes in the
     :class:`~repro.core.store.TransferEngine`, so transfers to different
     peers pipeline in parallel on the simulated clock.
+
+    Scale-out: ``device_hosts`` places peer devices on hosts (host 0 is the
+    compute device's own host and the default for unmapped devices).  A
+    device on a remote host is reached over that host's DCN link — its
+    ``peer_links`` entry IS the inter-host :class:`LinkSpec` (the preset
+    factories enforce this), so the flat cost model, coalescing, striping
+    and fidelity wire-bytes all price DCN traffic with no special cases.
+    The :class:`~repro.core.store.TransferEngine` gives each remote host a
+    shared ``dcn{h}_in``/``dcn{h}_out`` lane pair (one NIC per host pair —
+    a host's devices contend for it, unlike per-device NVLink lanes).
     """
     name: str
     hardware: HardwareModel
     peer_links: Dict[int, LinkSpec] = field(default_factory=dict)
+    #: peer device id -> host index (0 = the compute device's host).
+    device_hosts: Dict[int, int] = field(default_factory=dict)
+    #: remote host index -> DCN link from host 0 to that host.
+    dcn_links: Dict[int, LinkSpec] = field(default_factory=dict)
+
+    def __post_init__(self):
+        for d, h in self.device_hosts.items():
+            if d not in self.peer_links:
+                raise ValueError(f"device_hosts names unknown device {d}")
+            if h and h not in self.dcn_links:
+                raise ValueError(f"device {d} on host {h} but no dcn_links "
+                                 f"entry for host {h}")
 
     @property
     def devices(self) -> Tuple[int, ...]:
@@ -198,6 +220,30 @@ class Topology:
     @property
     def num_peers(self) -> int:
         return len(self.peer_links)
+
+    # ------------------------------------------------------------- hosts
+    @property
+    def hosts(self) -> Tuple[int, ...]:
+        """All host indices, ascending (host 0 always present)."""
+        return tuple(sorted({0, *self.device_hosts.values()}))
+
+    @property
+    def num_hosts(self) -> int:
+        return len(self.hosts)
+
+    def host_of(self, device: Optional[int]) -> int:
+        """Host a peer device lives on (0 = local host, the default)."""
+        if device is None:
+            return 0
+        return self.device_hosts.get(device, 0)
+
+    def devices_on(self, host: int) -> Tuple[int, ...]:
+        """Peer device ids on one host, ascending."""
+        return tuple(d for d in self.devices if self.host_of(d) == host)
+
+    def dcn_link(self, host: int) -> LinkSpec:
+        """The DCN link from host 0 to a remote host."""
+        return self.dcn_links[host]
 
     def peer_link(self, device: Optional[int] = None) -> LinkSpec:
         if device is None:
@@ -291,6 +337,62 @@ def tpu_v5e_torus(grid: Tuple[int, int] = (2, 2),
                     TPU_V5E, links)
 
 
+# ---------------------------------------------------------------------------
+# multi-host (DCN) presets
+# ---------------------------------------------------------------------------
+
+# Inter-host datacenter-network links.  A GPU cluster's 4x400G RDMA rails
+# sustain ~50 GB/s effective between one host pair at ~12 us setup
+# (GPUDirect-RDMA, QP already established), spread over many switch-disjoint
+# paths — so chunked striping keeps paying off across hosts.  The TPU-pod
+# DCN path is slimmer: ~25 GB/s effective at ~30 us.
+H100_DCN_LINK = LinkSpec(bandwidth=50e9, latency=12e-6, paths=16)
+V5E_DCN_LINK = LinkSpec(bandwidth=25e9, latency=30e-6, paths=8)
+
+
+def multihost(base: Topology, num_hosts: int, remote_peers: int,
+              dcn: LinkSpec, name: Optional[str] = None) -> Topology:
+    """Extend a single-host topology with ``num_hosts - 1`` remote hosts,
+    each contributing ``remote_peers`` harvestable devices over one shared
+    ``dcn`` link.  Remote device ids continue densely after the local ones;
+    their ``peer_links`` entry is the DCN spec itself so every existing
+    cost-model seam (flat estimate, coalesce, stripe, fidelity wire bytes)
+    prices them correctly with no special-casing."""
+    if num_hosts < 2:
+        raise ValueError(f"num_hosts={num_hosts}: need at least one remote "
+                         "host (use the single-host preset otherwise)")
+    links = dict(base.peer_links)
+    device_hosts = dict(base.device_hosts)
+    nxt = max(links, default=0) + 1
+    for h in range(1, num_hosts):
+        for _ in range(remote_peers):
+            links[nxt] = dcn
+            device_hosts[nxt] = h
+            nxt += 1
+    dcn_links = {h: dcn for h in range(1, num_hosts)}
+    return Topology(name or f"{base.name}-{num_hosts}host",
+                    base.hardware, links, device_hosts, dcn_links)
+
+
+def h100_dcn(num_hosts: int = 2, local_peers: int = 1,
+             remote_peers: int = 3) -> Topology:
+    """Scale-out H100 preset: one NVLink domain plus ``num_hosts - 1``
+    remote hosts harvested over the RDMA fabric.  Each remote host exposes
+    ``remote_peers`` idle GPUs whose HBM is reachable at DCN cost; all of a
+    host's devices share that host's ``dcn{h}`` lane pair."""
+    return multihost(nvlink_mesh(local_peers) if local_peers > 1
+                     else nvlink_2gpu(),
+                     num_hosts, remote_peers, H100_DCN_LINK,
+                     name=f"h100-dcn-{num_hosts}host")
+
+
+def v5e_dcn(num_hosts: int = 2, remote_peers: int = 3) -> Topology:
+    """Scale-out TPU v5e preset: one 2x2 ICI torus plus remote v5e hosts
+    over the pod DCN."""
+    return multihost(tpu_v5e_torus((2, 2)), num_hosts, remote_peers,
+                     V5E_DCN_LINK, name=f"v5e-dcn-{num_hosts}host")
+
+
 #: CLI-facing presets (``--topology`` on launch/serve.py, fig8 sweeps).
 TOPOLOGIES = {
     "nvlink-2gpu": nvlink_2gpu,
@@ -299,6 +401,10 @@ TOPOLOGIES = {
     "pcie-switch-4": lambda: pcie_switch(3),
     "v5e-torus-2x2": lambda: tpu_v5e_torus((2, 2)),
     "v5e-torus-4x2": lambda: tpu_v5e_torus((4, 2)),
+    "h100-dcn-2host": lambda: h100_dcn(2),
+    "h100-dcn-4host": lambda: h100_dcn(4),
+    "v5e-dcn-2host": lambda: v5e_dcn(2),
+    "v5e-dcn-4host": lambda: v5e_dcn(4),
 }
 
 

@@ -7,6 +7,9 @@ from repro.serving.scheduler import (SCHEDULERS, SLO_CLASSES,
                                      CompletelyFairScheduler, FCFSScheduler,
                                      Request)
 from repro.serving.server import HarvestServer, RequestHandle, ServeRequest
+from repro.serving.sweep import (SweepConfig, SweepResult, SweepTrace,
+                                 simulate)
 from repro.serving.workload import (ARRIVALS, TenantSpec, Workload,
                                     bursty_arrivals, diurnal_arrivals,
-                                    poisson_arrivals, trace_arrivals)
+                                    diurnal_arrivals_bulk, poisson_arrivals,
+                                    trace_arrivals)

@@ -94,8 +94,8 @@ from repro.core.policy import FIDELITY_POLICIES, FidelityPolicy
 from repro.core.prefetch import Prefetcher, PrefetchConfig
 from repro.core.prefix_cache import PrefixCache, PrefixCacheConfig
 from repro.core.runtime import HarvestRuntime
-from repro.core.store import Residency
-from repro.core.tiers import H100_NVLINK, Fidelity, HardwareModel
+from repro.core.store import Residency, Transfer
+from repro.core.tiers import H100_NVLINK, Fidelity, HardwareModel, Tier
 from repro.kernels.harvest_copy.ops import dequantize_blocks, quantize_blocks
 from repro.models import model as M
 from repro.serving.admission import ADMISSION, AdmissionPolicy, AdmissionView
@@ -444,6 +444,24 @@ class EngineStats:
         return "\n".join(lines)
 
 
+class _PrefillJob:
+    """One request's in-flight disaggregated prefill: the pool-worker
+    occupancy (``job``), the DCN KV stream (``stream``), and the computed
+    payload the decode pool adopts once the stream lands."""
+    __slots__ = ("r", "job", "stream", "n", "k", "v", "states", "collected")
+
+    def __init__(self, r: Request, job: Transfer, stream: List[Transfer],
+                 n: int, k, v, states):
+        self.r = r
+        self.job = job
+        self.stream = stream
+        self.n = n                      # prefix tokens the payload covers
+        self.k = k                      # (L, n_pad, nkv, hd) numpy, or None
+        self.v = v
+        self.states = states
+        self.collected = False          # moved back to the waiting queue
+
+
 class HarvestServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
                  block_size: int = 16, num_local_slots: int = 24,
@@ -463,7 +481,9 @@ class HarvestServingEngine:
                  iter_refill: Optional[bool] = None,
                  fidelity_policy: "str | FidelityPolicy | None" = None,
                  cold_tier: bool = False,
-                 host_capacity_bytes: Optional[int] = None):
+                 host_capacity_bytes: Optional[int] = None,
+                 disaggregated: bool = False,
+                 prefill_workers: int = 2):
         assert cfg.has_kv_cache or cfg.family == "ssm"
         assert mode in ("sync", "async"), f"unknown clock mode {mode!r}"
         # the engine runs over ONE HarvestRuntime; the allocator/monitor/
@@ -634,6 +654,41 @@ class HarvestServingEngine:
         # (q.batch.* in the transfer namespace; q_* = queue non-empty)
         self._qbatch = (runtime.metrics.counters("transfer")
                         if mode == "async" else None)
+
+        # -------- disaggregated prefill/decode (scale-out) ----------------
+        # Fresh prefills run on a dedicated pool of ``prefill_workers``
+        # accelerators on a REMOTE host; finished KV blocks stream over the
+        # topology's DCN lanes and the decode pool adopts them like a
+        # prefix-cache hit (zero prefill compute on the decode accelerator,
+        # the stream tail attached to the adopting step's wait set).
+        # Tokens are bit-identical to the colocated path: the same single
+        # full-prefix forward produces them either way.
+        self._disagg = bool(disaggregated)
+        if self._disagg:
+            assert mode == "async", \
+                "disaggregated prefill/decode needs the event timeline: " \
+                "pass mode='async'"
+            assert self._pcache is None, \
+                "disaggregated mode and the prefix cache are separate " \
+                "adoption paths — enable one at a time"
+            assert self.L_kv, \
+                "disaggregated prefill streams KV blocks: needs a paged " \
+                "KV cache"
+            topo = runtime.topology
+            assert topo is not None and len(topo.hosts) > 1, \
+                "disaggregated mode streams KV over DCN — attach a " \
+                "multi-host topology (e.g. get_topology('h100-dcn-2host'))"
+            if prefill_workers <= 0:
+                raise ValueError(f"prefill_workers must be positive, got "
+                                 f"{prefill_workers}")
+            # the prefill pool lives on the remote hosts: each request's KV
+            # stream rides one remote device's dcn{h}_in lane, round-robin
+            # over hosts so multi-host presets stream in parallel
+            self._stream_devices = [topo.devices_on(h)[0]
+                                    for h in topo.hosts if h != 0]
+        self._pf_workers = prefill_workers
+        self._pf_jobs: Dict[int, _PrefillJob] = {}
+        self._prefilling: List[Request] = []
 
     # ----------------------------------------------------------- fidelity
     def _fidelity_for(self, key) -> Fidelity:
@@ -1029,6 +1084,163 @@ class HarvestServingEngine:
                     r.on_token(r.output[-1], r)
         self._chunk_done = []
 
+    # ----------------------------------------- disaggregated prefill pool
+    def _pf_ready_t(self) -> Optional[float]:
+        """Engine-clock time the earliest in-flight prefill-pool job
+        finishes (None when the pool is idle or every job is collected) —
+        an idle decode pool fast-forwards to it like a next arrival."""
+        ts = [j.job.ready_t for j in self._pf_jobs.values()
+              if not j.collected]
+        return min(ts) - self._clock0 if ts else None
+
+    def _dispatch_prefills(self) -> None:
+        """Route every fresh prefill in the waiting queue to the prefill
+        pool.  Preempted requests (``needs_prefill`` False) stay for
+        normal admission; pool queueing is the workers' own FIFO lanes."""
+        if not self._disagg:
+            return
+        for r in [w for w in self.waiting if w.needs_prefill]:
+            self.waiting.remove(r)
+            self._dispatch_one(r)
+
+    def _dispatch_one(self, r: Request) -> None:
+        """One disaggregated prefill: run the REAL forward now (tokens are
+        computed exactly as the colocated path computes them), occupy the
+        least-loaded pool worker's lane for the simulated prefill window,
+        and put the finished KV blocks on the DCN wire — each block floored
+        at the simulated time its prefill chunk produces it, so the stream
+        pipelines under the tail of the prefill.
+
+        Accounting keeps the clock identity exact: the window is charged
+        ``prefill_s`` AND ``hidden_s`` (it never occupies the decode
+        accelerator), the stream is charged writeback-style, and any
+        not-yet-landed tail is attached to the ADOPTING step's wait set —
+        where a stall surfaces on the clock like an in-flight reload.
+        """
+        te = self.runtime.transfers
+        prefix = r.prompt + r.output
+        n = len(prefix)
+        logits, out, npre, n_pad = self._prefill_forward(prefix)
+        k = v = None
+        if self.L_kv:
+            kk, vv = out.kv
+            if npre:
+                kk, vv = kk[:, :, npre:], vv[:, :, npre:]
+            k = np.asarray(kk[:, 0].astype(jnp.float32))
+            v = np.asarray(vv[:, 0].astype(jnp.float32))
+
+        # pool worker with the earliest-free lane; FIFO queueing on busy
+        # workers is the lane's busy-until time
+        lanes = [f"pf{i}" for i in range(self._pf_workers)]
+        lane = min(lanes, key=te.channel_busy_until)
+        s0 = te.channel_busy_until(lane)
+        w = self._prefill_window_s(n)
+        job = Transfer(("pf", r.req_id), Tier.LOCAL_HBM, Tier.LOCAL_HBM,
+                       0, w, client="prefill", lane=lane)
+        te.submit(job)
+        self.stats.prefill_s += w
+        self.stats.hidden_s += w
+
+        # stream finished blocks over the DCN lane, round-robin over the
+        # remote hosts.  Block j is produced when its prefill chunk
+        # completes: with chunked prefill that is the chunk boundary
+        # covering it, otherwise the end of the whole window (matching
+        # the colocated engine, where KV lands at the prefill's end).
+        stream: List[Transfer] = []
+        if self.L_kv:
+            dev = self._stream_devices[
+                r.req_id % len(self._stream_devices)]
+            bb = self.kv_mgr.block_nbytes
+            nb = math.ceil(n / self.bs)
+            # blocks produced at the same instant ship as ONE coalesced
+            # DCN batch (PR 4 composition — one wire setup per prefill
+            # chunk instead of per block); with unchunked prefill the
+            # whole request is a single batch
+            groups: Dict[float, List[Transfer]] = {}
+            for j in range(nb):
+                if self._chunk_tokens is not None:
+                    m = min(math.ceil((j + 1) * self.bs / self._chunk_tokens)
+                            * self._chunk_tokens, n)
+                    produced = s0 + min(self._prefill_window_s(m), w)
+                else:
+                    produced = s0 + w
+                tr = te.transfer(("pfs", r.req_id, j), bb,
+                                 Tier.PEER_HBM, Tier.LOCAL_HBM,
+                                 client="kv", device=dev)
+                groups.setdefault(produced, []).append(tr)
+            for produced in sorted(groups):
+                members = groups[produced]
+                te.submit_coalesced(members, not_before=produced)
+                for tr in members:
+                    self.stats.reload_s += tr.seconds
+                    self.stats.writeback_s += tr.seconds
+                    stream.append(tr)
+
+        nxt = self._sample(np.asarray(logits[0, npre + n - 1]))
+        if not r.output:
+            r.output.append(int(nxt))
+            self.stats.tokens_out += 1
+            # TTFT is the prefill pool's job end: the first token goes
+            # straight back to the client from the prefill host — it does
+            # not wait for the KV stream (the stream gates only decode)
+            if r.first_token_t is None:
+                r.first_token_t = (s0 + w) - self._clock0
+        r.prefill_pos = n
+        r.needs_prefill = False
+        self._prefilling.append(r)
+        self._pf_jobs[r.req_id] = _PrefillJob(
+            r, job, stream, n, k, v, out.states)
+
+    def _collect_streams(self) -> None:
+        """Move requests whose pool prefill has finished back into the
+        waiting queue (in job-completion order) for decode admission.
+        The KV stream may still be in flight — adoption attaches its tail
+        to the step's wait set, exactly like an in-flight prefix reload."""
+        if not self._pf_jobs:
+            return
+        ready = sorted((j for j in self._pf_jobs.values()
+                        if not j.collected and j.job.done),
+                       key=lambda j: (j.job.ready_t, j.r.req_id))
+        for j in ready:
+            j.collected = True
+            self._prefilling.remove(j.r)
+            self.waiting.append(j.r)
+
+    def _adopt_streamed(self, r: Request) -> None:
+        """Decode-pool adoption of a streamed prefill: allocate the
+        blocks in the local pool, fill them from the streamed payload, and
+        gate this step's decode on the stream tail.  The shape mirrors
+        prefix-cache adoption — zero prefill compute on this accelerator,
+        eviction write-backs the allocations force charged off-path."""
+        job = self._pf_jobs.pop(r.req_id)
+        n = job.n
+        row = r.row
+        if self.L_kv:
+            n_pad = job.k.shape[1]
+            nb = math.ceil(n / self.bs)
+            for j in range(nb):
+                slot, ops = self.kv_mgr.allocate_block(r.req_id, j,
+                                                       j * self.bs)
+                self._charge_writeback(ops)
+                lo, hi = j * self.bs, min((j + 1) * self.bs, n_pad)
+                self.pool_k = self.pool_k.at[:, slot, :hi - lo].set(
+                    jnp.asarray(job.k[:, lo:hi]))
+                self.pool_v = self.pool_v.at[:, slot, :hi - lo].set(
+                    jnp.asarray(job.v[:, lo:hi]))
+                self.slot_req[slot] = row
+                self.slot_base[slot] = j * self.bs
+                ent = self.kv_mgr.table[(r.req_id, j)]
+                ent.filled = min(self.bs, n - lo) if lo < n else 0
+        if job.states is not None:
+            self._set_state_row(row, job.states)
+        self.row_tokens[row] = r.output[-1]
+        self.row_pos[row] = len(r.prompt) + len(r.output) - 1
+        # stream tail not yet landed: this step waits on it (stall
+        # surfaces on the clock; its seconds were charged at dispatch)
+        self._step_waits.extend(t for t in job.stream if not t.done)
+        if r.on_token is not None:
+            r.on_token(r.output[0], r)
+
     def _step_window(self, n_dec: int, chunk_tokens: int,
                      w_dec: float) -> float:
         """One iteration's accelerator window.  A prefill chunk rides the
@@ -1052,8 +1264,9 @@ class HarvestServingEngine:
         admissibility — the next arrival, else one weight-read window —
         and charge the gap to its own ``bubble_s`` accounting class."""
         now = self._now()
-        nxt = self.next_arrival_t()
-        t = nxt if (nxt is not None and nxt > now) else now + self._t_weights
+        events = [t for t in (self.next_arrival_t(), self._pf_ready_t())
+                  if t is not None and t > now]
+        t = min(events) if events else now + self._t_weights
         dt = t - now
         self.stats.bubble_s += dt
         self.runtime.transfers.drain_until(self._clock0 + t)
@@ -1248,6 +1461,8 @@ class HarvestServingEngine:
                 # from the next _prefill_chunks pass instead of inline
                 if self._chunk_tokens is None:
                     self._prefill(r)
+            elif r.req_id in self._pf_jobs:
+                self._adopt_streamed(r)
             else:
                 self._resume(r)
 
@@ -1502,12 +1717,20 @@ class HarvestServingEngine:
         first; a request-free gap fast-forwards the clock to the next
         arrival (charged as ``idle_s``) instead of spinning steps."""
         self._admit_arrivals()
+        if self._disagg:
+            self._collect_streams()
+            self._dispatch_prefills()
         if not (self.waiting or self.running):
             nxt = self.next_arrival_t()
-            if nxt is None:
+            pf = self._pf_ready_t()
+            events = [t for t in (nxt, pf) if t is not None]
+            if not events:
                 return False
-            self._idle_until(nxt)
+            self._idle_until(min(events))
             self._admit_arrivals()
+            if self._disagg:
+                self._collect_streams()
+                self._dispatch_prefills()
         sched_step = self.stats.steps
         self.kv_mgr.pinned = {r.req_id for r in self.running}
         if self.mode == "sync":
@@ -1526,7 +1749,7 @@ class HarvestServingEngine:
                 # zero-clock spin for bit-exactness)
                 self._bubble_step()
             self.stats.steps += 1
-            return bool(self.waiting or self._arrivals)
+            return bool(self.waiting or self._arrivals or self._pf_jobs)
 
         # the decode set: running minus in-flight prefills minus prefills
         # that finished THIS step (their first token IS this window's work)
@@ -1576,6 +1799,9 @@ class HarvestServingEngine:
             # not at the top of the next step — a row never idles across
             # a step boundary while work is queued
             self._admit_arrivals()
+            if self._disagg:
+                self._collect_streams()
+                self._dispatch_prefills()
             if self.waiting:
                 self._admit()
 

@@ -18,7 +18,7 @@ from typing import Callable, List, Optional
 SLO_CLASSES = ("latency", "throughput", "batch")
 
 
-@dataclass(eq=False)
+@dataclass(eq=False, slots=True)
 class Request:
     """One inference request.
 
@@ -27,7 +27,10 @@ class Request:
     checks (``req in admissible``) compare prompts and outputs, which can
     alias two distinct requests with identical contents; identity (and the
     default ``object`` hash) is the correct notion everywhere the engine
-    and schedulers use containment.
+    and schedulers use containment.  ``slots=True``: a million-request
+    sweep holds every request live at once, and the per-instance dict is
+    both the dominant footprint and a measurable attribute-access cost in
+    the step loop.
 
     Lifecycle timestamps are on the engine's simulated clock (the
     transfer-engine timeline; sync mode derives them from the step

@@ -182,25 +182,39 @@ class HarvestServer:
 
     def run_until(self, t: float, max_steps: int = 100_000) -> EngineStats:
         """Advance the simulated clock to at least absolute time ``t``:
-        serve every request that arrives before ``t``, then idle any
-        remaining gap so the clock lands on ``t``.  Work scheduled after
-        ``t`` stays queued for the next drive.  Steps are atomic — a
-        request admitted just before ``t`` may push the clock past it,
-        in which case the final clock is the completion time of that
-        in-flight step (``max(t, step end)``), never corrected backwards."""
+        serve every request that arrives strictly before ``t``, admit
+        those stamped exactly ``t``, then idle any remaining gap so the
+        clock lands on ``t``.  Work scheduled after ``t`` stays queued
+        for the next drive.  Steps are atomic — a request admitted just
+        before ``t`` may push the clock past it, in which case the final
+        clock is the completion time of that in-flight step
+        (``max(t, step end)``), never corrected backwards.
+
+        The admit-at-``t`` boundary: an arrival stamped exactly ``t`` is
+        inside this drive's horizon — it lands in the waiting queue with
+        ``enqueue_t == t`` (visible to the scheduler, counted by
+        ``finalize``), and its compute runs on the next drive.  Earlier
+        versions compared ``next_arrival >= t`` and broke one event
+        short, idling straight over a trace-replay arrival that landed
+        on the horizon."""
         eng = self.engine
         for _ in range(max_steps):
+            eng._admit_arrivals()
             if eng._now() >= t:
                 break
-            eng._admit_arrivals()
-            if eng.waiting or eng.running:
+            # _pf_jobs: disaggregated prefill streams in flight keep the
+            # drive alive even when nothing is waiting or running — the
+            # engine's idle branch advances to the next stream-ready
+            # event and adopts the finished KV.
+            if eng.waiting or eng.running or eng._pf_jobs:
                 if not eng.step():
                     break
             else:
                 nxt = eng.next_arrival_t()
-                if nxt is None or nxt >= t:
+                if nxt is None or nxt > t:
                     break
                 eng._idle_until(nxt)
         if eng._now() < t:
             eng._idle_until(t)
+        eng._admit_arrivals()
         return eng.finalize()

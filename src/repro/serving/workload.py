@@ -106,6 +106,45 @@ def diurnal_arrivals(rng: np.random.Generator, rate: float, n: int, *,
     return np.asarray(times)
 
 
+def diurnal_arrivals_bulk(rng: np.random.Generator, rate: float, n: int, *,
+                          peak_ratio: float = 3.0,
+                          period_s: Optional[float] = None) -> np.ndarray:
+    """Vectorized :func:`diurnal_arrivals` for million-request traces.
+
+    Same sinusoidal thinned-Poisson process, but candidates are drawn and
+    thinned in numpy chunks instead of one Python-loop draw at a time
+    (~100x faster at n=1e6).  Deterministic given ``rng``, but NOT
+    draw-for-draw identical to the scalar generator — the chunked
+    thinning consumes the random stream in a different order (all gaps,
+    then all acceptance uniforms, per chunk), so the same seed yields a
+    different (equally valid) realisation of the same process.  Use the
+    scalar generator where seed-stable goldens matter; use this for
+    scale sweeps where only the process matters.
+    """
+    if peak_ratio < 1:
+        raise ValueError(f"peak_ratio must be >= 1, got {peak_ratio}")
+    if rate <= 0:
+        raise ValueError(f"arrival rate must be positive, got {rate}")
+    if period_s is None:
+        period_s = n / rate
+    a = (peak_ratio - 1.0) / (peak_ratio + 1.0)
+    lam_max = rate * (1.0 + a)
+    out = np.empty(n)
+    filled, t = 0, 0.0
+    while filled < n:
+        # majorant acceptance averages 1/(1+a) >= 1/2 — oversample ~2.2x
+        # so most traces finish in one or two chunks
+        m = max(1024, int((n - filled) * 2.2))
+        ts = t + np.cumsum(rng.exponential(1.0 / lam_max, size=m))
+        lam = rate * (1.0 + a * np.sin(2 * np.pi * ts / period_s))
+        acc = ts[rng.uniform(size=m) * lam_max <= lam]
+        take = min(acc.size, n - filled)
+        out[filled:filled + take] = acc[:take]
+        filled += take
+        t = float(ts[-1])
+    return out
+
+
 def trace_arrivals(times: Sequence[float]) -> np.ndarray:
     """Replay explicit arrival times (must be sorted, non-negative)."""
     arr = np.asarray(list(times), dtype=float)

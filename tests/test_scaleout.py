@@ -1,0 +1,326 @@
+"""Scale-out tier tests: multi-host topology presets, DCN lane routing
+and charging, PR 4/PR 8 composition (coalesce / stripe / fidelity) on
+DCN lanes, disaggregated prefill/decode, the ``run_until`` horizon
+boundary, and the sweep model's scalar/vectorized loop equivalence.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (H100_DCN_LINK, V5E_DCN_LINK, Fidelity,
+                        MetricsRegistry, Tier, TransferEngine, channel_name,
+                        get_topology)
+from repro.serving import SweepConfig, SweepTrace, simulate
+
+MiB = 1 << 20
+
+
+# ---------------------------------------------------------------------------
+# multi-host topology presets
+# ---------------------------------------------------------------------------
+class TestMultiHostPresets:
+
+    @pytest.mark.parametrize("name,hosts,dcn", [
+        ("h100-dcn-2host", 2, H100_DCN_LINK),
+        ("h100-dcn-4host", 4, H100_DCN_LINK),
+        ("v5e-dcn-2host", 2, V5E_DCN_LINK),
+        ("v5e-dcn-4host", 4, V5E_DCN_LINK),
+    ])
+    def test_preset_geometry(self, name, hosts, dcn):
+        topo = get_topology(name)
+        assert topo.num_hosts == hosts
+        assert topo.hosts == tuple(range(hosts))
+        # host 0 is the local (ICI/NVLink) domain; device 0 lives there
+        assert topo.host_of(0) == 0
+        # every remote host contributes harvestable devices priced at DCN
+        for h in range(1, hosts):
+            devs = topo.devices_on(h)
+            assert devs, f"host {h} exposes no devices"
+            assert topo.dcn_link(h) is dcn
+            for d in devs:
+                assert topo.host_of(d) == h
+                assert topo.peer_links[d] is dcn
+        # devices_on partitions the device set
+        every = [d for h in range(hosts) for d in topo.devices_on(h)]
+        assert sorted(every) == sorted(topo.devices)
+        # budgets cover every harvestable device, local and remote
+        budgets = topo.device_budgets(8 * MiB)
+        assert set(budgets) == set(topo.devices)
+
+    def test_lane_naming(self):
+        P, L = Tier.PEER_HBM, Tier.LOCAL_HBM
+        # remote-host peers share their host's DCN NIC pair
+        assert channel_name(P, L, device=5, host=2) == "dcn2_in"
+        assert channel_name(L, P, device=5, host=2) == "dcn2_out"
+        # local peers keep per-device lanes; device 1 keeps legacy names
+        assert channel_name(P, L, device=3) == "peer3_in"
+        assert channel_name(P, L, device=1) == "peer_in"
+
+    def test_dcn_lane_routing_and_charging(self):
+        topo = get_topology("h100-dcn-2host")
+        te = TransferEngine(topo.hardware, MetricsRegistry(), topology=topo)
+        remote = topo.devices_on(1)[0]
+        assert te.lane_for(Tier.PEER_HBM, Tier.LOCAL_HBM, remote) == "dcn1_in"
+        assert te.lane_for(Tier.LOCAL_HBM, Tier.PEER_HBM, remote) \
+            == "dcn1_out"
+        # the minted transfer is charged the DCN link's time, not NVLink's
+        nb = 4 * MiB
+        t = te.transfer(("kv", 0), nb, Tier.PEER_HBM, Tier.LOCAL_HBM,
+                        device=remote)
+        assert t.seconds == pytest.approx(H100_DCN_LINK.transfer_time(nb))
+        assert t.seconds > topo.hardware.peer_link.transfer_time(nb)
+        te.submit(t)
+        snap = te.metrics.snapshot()["transfer"]
+        assert snap["q.dcn1_in.submitted"] == 1
+        assert snap["q.dcn1_in.busy_s"] == pytest.approx(t.seconds)
+
+    def test_dcn_coalesce_one_setup(self):
+        """PR 4 composition: same-host DCN members batch into one lane
+        occupancy paying the wire setup once; members bound for a
+        different host (a different lane) fall back to solo submission."""
+        topo = get_topology("h100-dcn-4host")
+        te = TransferEngine(topo.hardware, MetricsRegistry(), topology=topo)
+        d1, d2 = topo.devices_on(1)[0], topo.devices_on(2)[0]
+        nb = 2 * MiB
+        mk = lambda k, dev: te.transfer(("kv", k), nb, Tier.PEER_HBM,
+                                        Tier.LOCAL_HBM, device=dev)
+        out = te.submit_coalesced([mk(0, d1), mk(1, d1), mk(2, d2)])
+        assert len(out) == 3
+        snap = te.metrics.snapshot()["transfer"]
+        assert snap["q.dcn1_in.coalesced"] == 1
+        assert snap["q.dcn1_in.coalesced_members"] == 2
+        # the second member dropped its setup latency
+        assert snap["q.dcn1_in.busy_s"] == pytest.approx(
+            H100_DCN_LINK.latency + 2 * nb / H100_DCN_LINK.bandwidth)
+        # the cross-host member rode its own NIC pair, solo
+        assert snap["q.dcn2_in.submitted"] == 1
+        assert "q.dcn2_in.coalesced" not in snap
+
+    def test_dcn_stripe_composition(self):
+        """PR 4 striping on a DCN lane: chunks ride ``dcn{h}_in.s{k}``
+        sub-lanes bounded by the link's path count, bytes conserved."""
+        topo = get_topology("h100-dcn-2host")
+        te = TransferEngine(topo.hardware, MetricsRegistry(), topology=topo)
+        remote = topo.devices_on(1)[0]
+        nb = 64 * MiB
+        t = te.transfer(("kv", 9), nb, Tier.PEER_HBM, Tier.LOCAL_HBM,
+                        device=remote)
+        # ways is capped by the DCN link's path count
+        chunks = te.split(t, ways=2 * H100_DCN_LINK.paths,
+                          chunk_nbytes=4 * MiB)
+        assert len(chunks) == 16
+        assert sum(c.nbytes for c in chunks) == nb
+        lanes = {c.lane for c in chunks}
+        assert lanes == {f"dcn1_in.s{k}"
+                         for k in range(H100_DCN_LINK.paths)}
+        done = te.submit_chunks(chunks)
+        # link-disjoint sub-lanes run concurrently: the stripe finishes
+        # well before the chunks would serialized on one path
+        assert max(c.ready_t for c in done) \
+            < sum(c.seconds for c in chunks)
+        snap = te.metrics.snapshot()["transfer"]
+        assert snap["q.dcn1_in.stripe_chunks"] == 16
+        assert snap["q.dcn1_in.stripe_ways"] == H100_DCN_LINK.paths
+
+    def test_fidelity_wire_bytes_on_dcn(self):
+        """PR 8 composition: a quantized transfer moves (and is charged)
+        only its wire bytes on the DCN link."""
+        topo = get_topology("v5e-dcn-2host")
+        te = TransferEngine(topo.hardware, MetricsRegistry(), topology=topo)
+        remote = topo.devices_on(1)[0]
+        nb = 8 * MiB
+        t = te.transfer(("kv", 1), nb, Tier.LOCAL_HBM, Tier.PEER_HBM,
+                        device=remote, fidelity=Fidelity.INT4)
+        wire = Fidelity.INT4.wire_bytes(nb)
+        assert t.nbytes == wire < nb
+        assert t.seconds == pytest.approx(V5E_DCN_LINK.transfer_time(wire))
+        te.submit(t)
+        snap = te.metrics.snapshot()["transfer"]
+        assert snap["default.peer_bytes"] == wire
+        assert snap["q.dcn1_out.submitted"] == 1
+
+    def test_submit_not_before_floors_start(self):
+        """The production-event floor: a transfer (or coalesced batch)
+        whose payload is minted by a future non-transfer event starts no
+        earlier than that event."""
+        topo = get_topology("h100-dcn-2host")
+        te = TransferEngine(topo.hardware, MetricsRegistry(), topology=topo)
+        remote = topo.devices_on(1)[0]
+        nb = MiB
+        mk = lambda k: te.transfer(("kv", k), nb, Tier.PEER_HBM,
+                                   Tier.LOCAL_HBM, device=remote)
+        t = te.submit(mk(0), not_before=5.0)
+        assert t.ready_t == pytest.approx(5.0 + t.seconds)
+        batch = te.submit_coalesced([mk(1), mk(2)], not_before=9.0)
+        assert batch[0].ready_t == pytest.approx(9.0 + batch[0].seconds)
+        assert batch[1].ready_t > batch[0].ready_t > 9.0
+
+    def test_hot_state_is_slotted(self):
+        """The hot per-event records carry no per-instance dict: a
+        million-request sweep holds every one of them live at once."""
+        from repro.core.store import Transfer
+        from repro.serving.scheduler import Request
+        t = Transfer(("k",), Tier.LOCAL_HBM, Tier.HOST_DRAM, 1, 1e-6)
+        r = Request(req_id=0, prompt=[1], max_new_tokens=1)
+        for obj in (t, r):
+            assert not hasattr(obj, "__dict__")
+            with pytest.raises(AttributeError):
+                obj.not_a_field = 1
+
+
+# ---------------------------------------------------------------------------
+# disaggregated prefill/decode + run_until horizon (real engine)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def served_model():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import model as M
+    cfg = dataclasses.replace(get_config("yi-6b").reduced(), num_layers=2)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _scaleout_server(cfg, params, disaggregated, topo_name="h100-dcn-2host"):
+    from repro.core import (HarvestRuntime, TopologyAwarePolicy,
+                            kv_block_bytes)
+    from repro.serving import HarvestServer
+    topo = get_topology(topo_name)
+    budget = 4 * 5 * kv_block_bytes(cfg, 8)
+    rt = HarvestRuntime(topo.device_budgets(budget), topology=topo,
+                        policy=TopologyAwarePolicy(topo))
+    kw = dict(disaggregated=True, prefill_workers=2) if disaggregated else {}
+    return HarvestServer(cfg, params, runtime=rt, max_batch=2, block_size=8,
+                         num_local_slots=10, scheduler="fcfs", mode="async",
+                         **kw)
+
+
+class TestDisaggregatedServing:
+
+    def test_tokens_bit_identical_and_streams_over_dcn(self, served_model):
+        from repro.serving import TenantSpec, Workload
+        cfg, params = served_model
+        wl = lambda: Workload(
+            num_requests=6, arrival="poisson", rate=4e5, seed=3,
+            vocab=(3, 250),
+            tenants=(TenantSpec("t", prompt_len=(18, 23),
+                                max_new_tokens=8),))
+        outs, stats = {}, {}
+        for disagg in (False, True):
+            srv = _scaleout_server(cfg, params, disagg)
+            stats[disagg] = srv.run(wl(), max_steps=4000)
+            stats[disagg].check_clock_identity()
+            outs[disagg] = [tuple(h.tokens) for h in srv.handles]
+        # disaggregation re-times requests, never re-decodes them
+        assert outs[True] == outs[False]
+        xfer = stats[True].metrics["transfer"]
+        # the prefill pool ran, and its KV streamed over the DCN NIC
+        assert xfer.get("q.pf0.submitted", 0) > 0
+        assert xfer.get("q.dcn1_in.submitted", 0) > 0
+        assert xfer.get("q.dcn1_in.coalesced", 0) > 0
+        coloc_xfer = stats[False].metrics["transfer"]
+        assert "q.pf0.submitted" not in coloc_xfer
+
+    def test_run_until_admits_horizon_arrival(self, served_model):
+        """Regression: an arrival stamped exactly ``t`` is inside
+        ``run_until(t)``'s horizon — it must land in the waiting queue
+        (enqueue at ``t``), while arrivals after ``t`` stay queued.  The
+        old ``next_arrival >= t`` comparison broke one event short."""
+        from repro.serving import ServeRequest
+        cfg, params = served_model
+        srv = _scaleout_server(cfg, params, disaggregated=False)
+        hs = [srv.submit(ServeRequest([2, 5, 7], max_new_tokens=4,
+                                      arrival_t=at))
+              for at in (0.5, 1.0, 1.5)]
+        srv.run_until(1.0)
+        eng = srv.engine
+        # the 0.5 arrival was served outright; the 1.0 arrival was
+        # admitted at the horizon; the 1.5 arrival is still in the future
+        assert hs[0].finished and hs[0].tokens
+        assert eng.next_arrival_t() == 1.5
+        queued = [r for r in eng.waiting if r.req_id == hs[1].req_id]
+        assert queued and queued[0].enqueue_t == pytest.approx(1.0)
+        assert srv.now >= 1.0
+        # the next drive picks the queued work up where the horizon left it
+        srv.run_until(2.0)
+        assert all(h.finished and h.tokens for h in hs)
+
+    def test_run_until_disaggregated_streams_survive_horizon(
+            self, served_model):
+        """A disaggregated drive must not strand in-flight prefill
+        streams: ``run_until`` keeps stepping while ``_pf_jobs`` is
+        non-empty even when nothing is waiting or running."""
+        from repro.serving import ServeRequest
+        cfg, params = served_model
+        srv = _scaleout_server(cfg, params, disaggregated=True)
+        hs = [srv.submit(ServeRequest([2 + i, 5, 7, 11], max_new_tokens=4,
+                                      arrival_t=0.25))
+              for i in range(3)]
+        srv.run_until(1.0)
+        assert all(h.finished and h.tokens for h in hs)
+        assert srv.now >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# sweep model: scalar vs vectorized loop
+# ---------------------------------------------------------------------------
+def _assert_identical(rs, rv):
+    assert rs.clock_s == rv.clock_s
+    np.testing.assert_array_equal(rs.host_clock_s, rv.host_clock_s)
+    np.testing.assert_array_equal(rs.admit_t, rv.admit_t)
+    np.testing.assert_array_equal(rs.first_token_t, rv.first_token_t)
+    np.testing.assert_array_equal(rs.finish_t, rv.finish_t)
+    np.testing.assert_array_equal(rs.tokens, rv.tokens)
+
+
+class TestSweepModel:
+
+    @pytest.mark.parametrize("hosts", [1, 3])
+    @pytest.mark.parametrize("disagg", [False, True])
+    @pytest.mark.parametrize("process", ["poisson", "bursty"])
+    def test_scalar_vector_bit_identical(self, hosts, disagg, process):
+        trace = SweepTrace.generate(process, rate=800.0, n=400, seed=11)
+        cfg = SweepConfig.from_family("h100", hosts=hosts,
+                                      disaggregated=disagg,
+                                      max_batch=4, local_slots=12,
+                                      refill_interval=3)
+        _assert_identical(simulate(trace, cfg, vectorized=False),
+                          simulate(trace, cfg, vectorized=True))
+
+    def test_refill_interval_one_matches_engine_style(self):
+        # per-step refill (no run-leaping headroom) must stay identical
+        trace = SweepTrace.generate("poisson", rate=500.0, n=200, seed=5)
+        cfg = SweepConfig.from_family("v5e", hosts=2, refill_interval=1)
+        _assert_identical(simulate(trace, cfg, vectorized=False),
+                          simulate(trace, cfg, vectorized=True))
+
+    def test_disagg_improves_ttft(self):
+        trace = SweepTrace.generate("diurnal", rate=2e3, n=4000, seed=2)
+        base = SweepConfig.from_family("h100", hosts=4)
+        r_c = simulate(trace, base)
+        r_d = simulate(trace, base.with_(disaggregated=True))
+        assert r_d.ttft(trace).mean() < r_c.ttft(trace).mean()
+        assert r_d.clock_s < r_c.clock_s       # prefill left the decode clock
+
+    def test_trace_generation_is_deterministic(self):
+        a = SweepTrace.generate("diurnal", rate=1e3, n=5000, seed=42)
+        b = SweepTrace.generate("diurnal", rate=1e3, n=5000, seed=42)
+        np.testing.assert_array_equal(a.arrival_t, b.arrival_t)
+        np.testing.assert_array_equal(a.prompt_len, b.prompt_len)
+        np.testing.assert_array_equal(a.out_len, b.out_len)
+        assert np.all(np.diff(a.arrival_t) >= 0)
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            SweepConfig(hosts=0)
+        with pytest.raises(ValueError):
+            SweepConfig(refill_interval=0)
+        with pytest.raises(ValueError):
+            SweepConfig.from_family("a100")
+        with pytest.raises(ValueError):
+            SweepTrace(np.array([2.0, 1.0]), np.array([4, 4]),
+                       np.array([4, 4]))
+        with pytest.raises(ValueError):
+            SweepTrace.generate("weibull")
