@@ -200,6 +200,7 @@ def _part_b(hw: str, fast: bool) -> Tuple[dict, List[Check], List[List[str]]]:
                 "ttft_mean_s": float(ttft.mean()),
                 "ttft_p99_s": float(np.percentile(ttft, 99)),
                 "walltime_s": res.walltime_s,
+                "max_rss_mb": res.max_rss_mb,
             }
             rows.append(row)
             by_key[(hosts, disagg)] = row
@@ -271,6 +272,7 @@ def _part_c(hw: str, fast: bool) -> Tuple[dict, List[Check], List[List[str]]]:
                  "clock_s": res_v.clock_s,
                  "scalar_walltime_s": res_s.walltime_s,
                  "vector_walltime_s": res_v.walltime_s,
+                 "max_rss_mb": res_v.max_rss_mb,
                  "speedup": speedup, "identical": same_p},
     }
     checks = [

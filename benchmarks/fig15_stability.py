@@ -1,0 +1,382 @@
+"""Fig 15 (repo-original) — closed-loop stability control under load
+that crosses the stability boundary.
+
+Every prior serving benchmark picks a *static* admission policy and
+sweeps load past the knee; this one closes the loop.  The
+:class:`~repro.serving.control.StabilityController` estimates per-class
+arrival rate, service time, and KV footprint online, compares the
+offered load against the effective harvestable capacity (a stability
+region in the queueing sense), and — only while the system is outside
+that region — jointly actuates admission shedding, a batch-size cap,
+prefetch throttling, and harvest churn aversion.
+
+Three adversarial scenarios per hardware family, each engineered so
+that **no static policy wins**:
+
+  * **ramp** — a diurnal-style ramp from a quarter of the knee rate to
+    ~3x past it: a fixed admission threshold is either too timid below
+    the knee or too permissive above it.
+  * **storm** — bursty arrivals over a peer topology whose cluster
+    trace fires *synchronized* revocation storms (every peer spikes at
+    once): harvested capacity collapses exactly when the burst lands,
+    so the region boundary itself moves.
+  * **flood** — a two-tenant mix where a deadline-light bulk tenant
+    floods the queue at 6x its normal rate; its requests carry only an
+    e2e deadline, which the static deadline policy never sheds on — the
+    flood eats rows while blowing every deadline it carries.
+
+Per scenario the controller competes against every static admission
+policy (``all``, ``headroom``, ``deadline``) on the *same* seeded
+workload.  Deadlines are calibrated fig10-style, but against the
+*in-region* tail: 8x the latency-class p99 of an uncontrolled run at a
+third of the knee rate.
+
+Headline checks: the controller keeps latency-class p99 TTFT within
+the SLO in every scenario, achieves strictly higher SLO-goodput than
+every static policy, never re-decodes (tokens of every admitted request
+are bit-identical to the uncontrolled run), satisfies the clock
+identity in every cell, and is a bit-exact no-op (tokens AND clock) on
+an in-region workload.
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from benchmarks.common import Check, fmt_table, save_result
+
+NUM_REQUESTS = 32
+MAX_NEW_TOKENS = 10
+BLOCK_SIZE = 8
+LOCAL_SLOTS = 10
+MAX_BATCH = 2
+SEED = 11
+MAX_STEPS = 20_000
+MONITOR_INTERVAL_S = 15e-6   # storm-trace tick cadence on the sim clock
+STATIC_POLICIES = ("all", "headroom", "deadline")
+
+HW_MODELS = {"h100-nvlink-2gpu": "H100_NVLINK", "tpu-v5e": "TPU_V5E"}
+
+
+def _hardware(hw: str):
+    from repro.core import tiers
+    return getattr(tiers, HW_MODELS[hw])
+
+
+def _t_weights(cfg, hw: str) -> float:
+    """The weight-read-bound decode step time the engine itself uses."""
+    pc = cfg.param_counts()
+    return 2 * pc["active"] / _hardware(hw).hbm_bw
+
+
+def _knee_rate(cfg, hw: str) -> float:
+    """Approximate request service rate at full batch: the weight-bound
+    decode step serves MAX_BATCH rows per ``t_weights``, each request
+    needs MAX_NEW_TOKENS steps."""
+    return MAX_BATCH / (MAX_NEW_TOKENS * _t_weights(cfg, hw))
+
+
+def _controller_cfg(rate: float, hw: str, cfg):
+    """Controller clocked fast enough to observe a run of NUM_REQUESTS
+    arrivals: the estimator window holds ~16 inter-arrival gaps, well
+    inside the overload phase of each scenario."""
+    from repro.serving import ControllerConfig
+    t_weights = _t_weights(cfg, hw)
+    window_s = max(16.0 / rate, 8 * t_weights)
+    return ControllerConfig(tick_interval_s=2 * t_weights,
+                            window_s=window_s)
+
+
+def _workloads(rate: float, slo: Optional[Dict[str, float]]):
+    """The three adversarial scenarios (same seeds across policies)."""
+    from repro.serving import TenantSpec, Workload
+    slo = slo or {}
+    lat = dict(slo="latency", priority=1, prompt_len=(18, 23),
+               max_new_tokens=MAX_NEW_TOKENS,
+               ttft_slo_s=slo.get("ttft"), e2e_slo_s=slo.get("e2e"))
+    # a minority best-effort tenant rides along in every scenario, as in
+    # any production mix: e2e deadline only, so the static deadline
+    # policy (which sheds on TTFT reachability) can never shed it and
+    # burns overload capacity serving doomed batch work the controller
+    # sheds as e2e-unreachable
+    bulk = dict(slo="batch", prompt_len=(18, 23),
+                max_new_tokens=MAX_NEW_TOKENS, e2e_slo_s=slo.get("e2e"))
+    return {
+        "ramp": Workload(
+            num_requests=NUM_REQUESTS, arrival="ramp", rate=rate,
+            seed=SEED, vocab=(3, 250),
+            arrival_kwargs={"start_ratio": 0.25, "end_ratio": 4.0},
+            tenants=(TenantSpec("interactive", weight=3, **lat),
+                     TenantSpec("bulk", weight=1, **bulk))),
+        "storm": Workload(
+            num_requests=NUM_REQUESTS, arrival="bursty", rate=1.5 * rate,
+            seed=SEED, vocab=(3, 250),
+            arrival_kwargs={"burst": 6, "duty": 0.3},
+            tenants=(TenantSpec("interactive", weight=3, **lat),
+                     TenantSpec("bulk", weight=1, **bulk))),
+        "flood": Workload(
+            num_requests=NUM_REQUESTS, arrival="flood", rate=0.75 * rate,
+            seed=SEED, vocab=(3, 250),
+            arrival_kwargs={"flood_ratio": 6.0, "flood_start": 0.25,
+                            "flood_frac": 0.45},
+            tenants=(TenantSpec("interactive", weight=2, **lat),
+                     # the flooding tenant is the bulk class itself
+                     TenantSpec("bulk", weight=1, **bulk))),
+    }
+
+
+def _server(cfg, params, hw: str, scenario: str, policy: str, rate: float):
+    from repro.core import (ClusterTrace, ClusterTraceConfig,
+                            HarvestRuntime, TopologyAwarePolicy,
+                            kv_block_bytes, nvlink_mesh, tpu_v5e_torus)
+    from repro.serving import HarvestServer
+
+    block_bytes = kv_block_bytes(cfg, BLOCK_SIZE)
+    budget = 6 * block_bytes
+    if scenario == "storm":
+        topology = (tpu_v5e_torus((3, 1)) if hw == "tpu-v5e"
+                    else nvlink_mesh(2))
+        trace = ClusterTrace(ClusterTraceConfig(
+            num_devices=topology.num_peers, capacity_bytes=budget,
+            seed=SEED, volatility=2.0, correlation=0.6,
+            job_arrival_p=0.15, job_size_frac=(0.4, 0.9),
+            job_lifetime=(4, 16),
+            # synchronized multi-peer revocation storms: every peer
+            # loses storm_frac of its capacity for 4 of every 10 ticks
+            storm_interval=10, storm_duration=4, storm_frac=0.9))
+        runtime = HarvestRuntime(
+            topology.device_budgets(budget), topology=topology,
+            policy=TopologyAwarePolicy(topology), trace=trace,
+            monitor_interval_s=MONITOR_INTERVAL_S,
+            hardware=_hardware(hw))
+    else:
+        runtime = HarvestRuntime({1: 4 * budget}, hardware=_hardware(hw))
+    kwargs = {}
+    if policy == "ctrl":
+        kwargs["controller"] = _controller_cfg(rate, hw, cfg)
+    else:
+        kwargs["admission"] = policy
+    return HarvestServer(cfg, params, runtime=runtime, max_batch=MAX_BATCH,
+                         block_size=BLOCK_SIZE, num_local_slots=LOCAL_SLOTS,
+                         scheduler="fair", mode="async", **kwargs)
+
+
+def _run_cell(cfg, params, hw: str, scenario: str, policy: str,
+              rate: float, workload):
+    srv = _server(cfg, params, hw, scenario, policy, rate)
+    stats = srv.run(workload, max_steps=MAX_STEPS)
+    stats.check_clock_identity()
+    done = {r.req_id for r in stats.records() if r.state == "done"}
+    tokens = {h.req_id: tuple(h.tokens) for h in srv.handles
+              if h.req_id in done}
+    lat = stats.latency_percentiles("latency")
+    ctrl_ns = stats.metrics.get("ctrl", {})
+    return {
+        "scenario": scenario, "policy": policy,
+        "clock_s": stats.clock_s, "tokens": stats.tokens_out,
+        "goodput": stats.goodput(),
+        "goodput_latency": stats.goodput("latency"),
+        "slo_attainment": stats.slo_attainment(),
+        "ttft_p99_latency": lat["ttft_p99"],
+        "e2e_p99_latency": lat["e2e_p99"],
+        "done": len(done), "rejected": stats.rejected,
+        "preemptions": stats.preemptions,
+        "engages": ctrl_ns.get("engages", 0),
+        "engaged_ticks": ctrl_ns.get("engaged_ticks", 0),
+        "ctrl_shed": ctrl_ns.get("shed", 0),
+        "ctrl_deferred": ctrl_ns.get("deferred", 0),
+    }, tokens, stats
+
+
+SLO_MARGIN = 8.0
+
+
+def _calibrate_slo(cfg, params, hw: str, rate: float) -> Dict[str, float]:
+    """8x the uncontrolled system's latency-class p99 at a third of the
+    knee rate — the targets an operator provisions over the *in-region*
+    tail, with enough margin that a request queued behind a couple of
+    service times still meets them.  Calibrating at the knee itself
+    would bake queueing collapse into the SLO and nothing would ever
+    miss it; a bare 2x of the in-region tail (microseconds) would let
+    nothing QUEUED ever meet it."""
+    from repro.serving import TenantSpec, Workload
+    wl = Workload(
+        num_requests=NUM_REQUESTS, arrival="poisson", rate=0.3 * rate,
+        seed=SEED, vocab=(3, 250),
+        tenants=(TenantSpec("interactive", slo="latency", priority=1,
+                            prompt_len=(18, 23),
+                            max_new_tokens=MAX_NEW_TOKENS),))
+    srv = _server(cfg, params, hw, "calib", "all", rate)
+    stats = srv.run(wl, max_steps=MAX_STEPS)
+    lat = stats.latency_percentiles("latency")
+    return {"ttft": SLO_MARGIN * lat["ttft_p99"],
+            "e2e": SLO_MARGIN * lat["e2e_p99"]}
+
+
+def _noop_cell(cfg, params, hw: str, rate: float) -> dict:
+    """In-region workload: the controller must be a bit-exact no-op —
+    identical tokens AND identical clock decomposition."""
+    from repro.serving import TenantSpec, Workload
+    wl = Workload(
+        num_requests=8, arrival="poisson", rate=0.05 * rate, seed=SEED,
+        vocab=(3, 250),
+        tenants=(TenantSpec("interactive", slo="latency",
+                            prompt_len=(6, 18), max_new_tokens=(3, 8)),))
+    out = {}
+    for policy in ("all", "ctrl"):
+        srv = _server(cfg, params, hw, "in_region", policy, rate)
+        stats = srv.run(wl, max_steps=MAX_STEPS)
+        stats.check_clock_identity()
+        out[policy] = {
+            "tokens": [tuple(h.tokens) for h in srv.handles],
+            "clock_s": stats.clock_s, "idle_s": stats.idle_s,
+            "bubble_s": stats.bubble_s,
+            "engages": stats.metrics.get("ctrl", {}).get("engages", 0)}
+    return {
+        "tokens_match": out["ctrl"]["tokens"] == out["all"]["tokens"],
+        "clock_match": (
+            out["ctrl"]["clock_s"] == out["all"]["clock_s"]
+            and out["ctrl"]["idle_s"] == out["all"]["idle_s"]
+            and out["ctrl"]["bubble_s"] == out["all"]["bubble_s"]),
+        "engages": out["ctrl"]["engages"],
+        "clock_s": out["ctrl"]["clock_s"],
+    }
+
+
+def run(out_dir: Path, hw: str = "h100-nvlink-2gpu",
+        fast: bool = False) -> dict:
+    import time
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import model as M
+
+    wall_t0 = time.perf_counter()
+    if hw not in HW_MODELS:
+        raise ValueError(f"unknown hardware family {hw!r}; expected one of "
+                         f"{sorted(HW_MODELS)}")
+    global NUM_REQUESTS
+    n_full = NUM_REQUESTS
+    if fast:
+        NUM_REQUESTS = 24
+
+    try:
+        cfg = dataclasses.replace(get_config("yi-6b").reduced(),
+                                  num_layers=2)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        rate = _knee_rate(cfg, hw)
+
+        noop = _noop_cell(cfg, params, hw, rate)
+        slo = _calibrate_slo(cfg, params, hw, rate)
+        workloads = _workloads(rate, slo)
+
+        rows: List[dict] = []
+        table = []
+        tokens_ok = True
+        snapshot: Optional[Dict[str, dict]] = None
+        for scenario, wl in workloads.items():
+            cells: Dict[str, dict] = {}
+            toks: Dict[str, Dict[int, tuple]] = {}
+            for policy in ("ctrl",) + STATIC_POLICIES:
+                cell, tk, st = _run_cell(cfg, params, hw, scenario, policy,
+                                         rate, wl)
+                cells[policy], toks[policy] = cell, tk
+                rows.append(cell)
+                if scenario == "storm" and policy == "ctrl":
+                    snapshot = st.metrics
+            # every request the controller admitted to completion decoded
+            # the exact tokens the uncontrolled system decoded for it —
+            # admission re-times, never re-decodes
+            uncontrolled = toks["all"]
+            for policy in ("ctrl", "headroom", "deadline"):
+                for rid, t in toks[policy].items():
+                    if rid in uncontrolled and uncontrolled[rid] != t:
+                        tokens_ok = False
+            # the contest metric is the *latency-class* SLO-goodput: that
+            # is the contract the controller protects; the bulk tenant is
+            # best-effort by construction, and the controller may trade a
+            # doomed bulk e2e for latency wins (overall goodput is still
+            # reported per cell)
+            best_static = max(cells[p]["goodput_latency"]
+                              for p in STATIC_POLICIES)
+            ctrl = cells["ctrl"]
+            for policy in ("ctrl",) + STATIC_POLICIES:
+                c = cells[policy]
+                table.append([
+                    scenario, policy, f"{c['goodput_latency']:.0f}",
+                    f"{c['goodput']:.0f}",
+                    f"{c['ttft_p99_latency'] * 1e6:.1f}",
+                    f"{c['slo_attainment']:.0%}", c["done"], c["rejected"],
+                    c["engages"] or ""])
+            ctrl["goodput_lift"] = (ctrl["goodput_latency"] / best_static
+                                    if best_static else float("inf"))
+
+        print(f"Fig 15 — closed-loop stability control ({hw}; SLO = "
+              f"{SLO_MARGIN:g}x in-region p99, knee ~{rate:.0f} req/s):")
+        print(fmt_table(
+            ["scenario", "policy", "lat goodput", "all goodput",
+             "ttft99 us", "SLO%", "done", "shed", "engages"], table))
+        print(f"in-region no-op: tokens_match={noop['tokens_match']} "
+              f"clock_match={noop['clock_match']} "
+              f"engages={noop['engages']}")
+        print()
+
+        ctrl_rows = [r for r in rows if r["policy"] == "ctrl"]
+        checks = [
+            Check("fig15.noop_in_region",
+                  float(noop["tokens_match"] and noop["clock_match"]
+                        and noop["engages"] == 0), lo=1.0,
+                  note="inside the stability region the controller is a "
+                       "bit-exact no-op: identical tokens, clock, idle "
+                       "and bubble time, zero engagements"),
+            Check("fig15.controller_engages",
+                  float(min(r["engages"] for r in ctrl_rows)), lo=1.0,
+                  note="every adversarial scenario drove the controller "
+                       "outside the stability region at least once"),
+            Check("fig15.goodput_strict_win",
+                  min(r["goodput_lift"] for r in ctrl_rows), lo=1.0 + 1e-3,
+                  note="closed-loop control achieves strictly higher "
+                       "latency-class SLO-goodput than EVERY static "
+                       "admission policy in every scenario"),
+            Check("fig15.ttft_bounded",
+                  float(all(r["ttft_p99_latency"] <= slo["ttft"] + 1e-12
+                            for r in ctrl_rows)), lo=1.0,
+                  note="the controller keeps latency-class p99 TTFT "
+                       "within the calibrated SLO in every scenario "
+                       "(static admit-all blows through it)"),
+            Check("fig15.tokens_bit_identical", float(tokens_ok), lo=1.0,
+                  note="every admitted request decodes tokens "
+                       "bit-identical to the uncontrolled run — the "
+                       "control loop re-times and sheds, never "
+                       "re-decodes"),
+        ]
+
+        payload = {"name": "fig15_stability", "hw": hw,
+                   "rate_knee": rate, "slo": slo, "noop": noop,
+                   "rows": rows,
+                   "checks": [c.to_dict() for c in checks],
+                   # wall-clock of this run() — the CI perf gate compares
+                   # the fast runtime against benchmarks/perf_baseline.json
+                   # and fails on a >2x regression
+                   "runtime_s": time.perf_counter() - wall_t0,
+                   "fast": fast,
+                   "metrics": snapshot or {}}
+        save_result(out_dir, "fig15_stability", payload)
+        return payload
+    finally:
+        NUM_REQUESTS = n_full
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks.common import RESULTS_DIR
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hw", default="h100-nvlink-2gpu",
+                    choices=sorted(HW_MODELS))
+    ap.add_argument("--tiny", "--fast", dest="fast", action="store_true",
+                    help="CI mode: fewer requests per cell")
+    args = ap.parse_args()
+    run(RESULTS_DIR, hw=args.hw, fast=args.fast)

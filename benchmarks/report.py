@@ -1,7 +1,7 @@
 """Render EXPERIMENTS.md tables from results/ artifacts.
 
 Usage:  PYTHONPATH=src python -m benchmarks.report \
-            [--section dryrun|roofline|claims|metrics]
+            [--section dryrun|roofline|claims|fidelity|scaleout|stability|metrics]
 Prints markdown; EXPERIMENTS.md embeds the output.
 """
 from __future__ import annotations
@@ -162,12 +162,40 @@ def section_scaleout():
               "yes" if perf.get("identical") else "no"]]))
 
 
+def section_stability():
+    """Stability-control artifact (fig15): per-scenario closed-loop vs
+    static admission cells plus the controller's final region state."""
+    p = RESULTS_DIR / "fig15_stability.json"
+    if not p.exists():
+        print("_no fig15 artifact yet — run `python -m benchmarks.run "
+              "--only fig15`_")
+        return
+    payload = json.loads(p.read_text())
+    rows = []
+    for r in payload.get("rows", []):
+        rows.append([
+            payload.get("hw", "-"), r["scenario"], r["policy"],
+            f"{r['goodput_latency']:.0f}", f"{r['goodput']:.0f}",
+            f"{r['ttft_p99_latency'] * 1e6:.1f}",
+            f"{r['slo_attainment']:.0%}", r["done"], r["rejected"],
+            r["engages"] or "-"])
+    print(md_table(["hw", "scenario", "policy", "lat goodput", "goodput",
+                    "ttft99 us", "SLO%", "done", "shed", "engages"], rows))
+    noop = payload.get("noop", {})
+    if noop:
+        print()
+        print(f"in-region no-op: tokens_match={noop.get('tokens_match')} "
+              f"clock_match={noop.get('clock_match')} "
+              f"engages={noop.get('engages')}")
+
+
 def section_claims():
     names = ["fig2_cluster_cdf", "fig3_transfer_latency", "table1_model_zoo",
              "fig5_moe_throughput", "fig6_offload_sweep", "fig7_kv_latency",
              "fig8_peer_scaling", "fig9_coalescing", "fig10_slo_serving",
              "fig11_prefix_sharing", "fig12_continuous_batching",
-             "fig13_fidelity_tiers", "fig14_scaleout", "roofline"]
+             "fig13_fidelity_tiers", "fig14_scaleout", "fig15_stability",
+             "roofline"]
     rows = []
     for n in names:
         p = RESULTS_DIR / f"{n}.json"
@@ -205,6 +233,9 @@ if __name__ == "__main__":
     if a.section in ("scaleout", "all"):
         print("\n### Scale-out (fig14)\n")
         section_scaleout()
+    if a.section in ("stability", "all"):
+        print("\n### Stability control (fig15)\n")
+        section_stability()
     if a.section in ("metrics", "all"):
         print("\n### Runtime metrics (transfer queues, prefetch)\n")
         section_metrics()

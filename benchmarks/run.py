@@ -17,7 +17,8 @@ import time
 from benchmarks.common import RESULTS_DIR, Check, summarize_checks
 
 BENCHES = ["fig2", "fig3", "table1", "fig5", "fig6", "fig7", "fig8",
-           "fig9", "fig10", "fig11", "fig12", "fig13", "fig14", "roofline"]
+           "fig9", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15",
+           "roofline"]
 
 
 def _call(name: str, fast: bool, hw: str):
@@ -61,6 +62,9 @@ def _call(name: str, fast: bool, hw: str):
     if name == "fig14":
         from benchmarks import fig14_scaleout as m
         return m.run(RESULTS_DIR, hw=hw, fast=fast)
+    if name == "fig15":
+        from benchmarks import fig15_stability as m
+        return m.run(RESULTS_DIR, hw=hw, fast=fast)
     if name == "roofline":
         from benchmarks import roofline as m
         return m.run(RESULTS_DIR)
@@ -77,8 +81,8 @@ def main(argv=None) -> int:
                     help="hardware family for the per-family benchmarks "
                          "(fig8 topology sweep, fig10 SLO serving, fig11 "
                          "prefix sharing, fig12 continuous batching, fig13 "
-                         "fidelity tiers, fig14 scale-out): NVLink mesh vs "
-                         "TPU v5e ICI torus")
+                         "fidelity tiers, fig14 scale-out, fig15 stability "
+                         "control): NVLink mesh vs TPU v5e ICI torus")
     args = ap.parse_args(argv)
 
     names = args.only.split(",") if args.only else BENCHES

@@ -144,6 +144,12 @@ class HarvestAllocator:
         else:
             self.stats = {k: 0 for k in self.STAT_KEYS}
 
+    @property
+    def policy(self) -> PlacementPolicy:
+        """The live placement policy (the stability controller tunes its
+        churn appetite through this)."""
+        return self._policy
+
     # ---------------------------------------------------------------- API
     def harvest_alloc(self, size: int, hints: Optional[dict] = None,
                       client: str = "default") -> Optional[HarvestHandle]:

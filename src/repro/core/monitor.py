@@ -45,6 +45,29 @@ class ClusterTraceConfig:
     # the legacy trace draw-for-draw.
     volatility: float = 1.0
     correlation: float = 0.0
+    # synchronized multi-peer revocation storms: every ``storm_interval``
+    # ticks, ALL devices gain ``storm_frac`` of capacity of external
+    # usage for ``storm_duration`` ticks — the correlation axis pushed to
+    # its limit (a cluster-wide scheduling wave that slams every peer
+    # budget at once, the stability controller's adversarial scenario).
+    # The schedule is deterministic (consumes NO rng draws), so the
+    # default ``None`` keeps seeded legacy traces bit-exact.
+    storm_interval: Optional[int] = None
+    storm_duration: int = 4
+    storm_frac: float = 0.5
+
+    def __post_init__(self):
+        if self.storm_interval is not None:
+            if self.storm_interval <= 0:
+                raise ValueError(f"storm_interval must be positive, got "
+                                 f"{self.storm_interval}")
+            if not 0 < self.storm_duration <= self.storm_interval:
+                raise ValueError(
+                    f"storm_duration must be in (0, storm_interval], got "
+                    f"{self.storm_duration}")
+            if not 0.0 < self.storm_frac <= 1.0:
+                raise ValueError(f"storm_frac must be in (0, 1], got "
+                                 f"{self.storm_frac}")
 
 
 class ClusterTrace:
@@ -96,6 +119,11 @@ class ClusterTrace:
                 self.jobs[d].append((sz, self.t + int(life)))
         job_usage = np.array([sum(sz for sz, _ in js) for js in self.jobs])
         usage = np.clip(self.level + job_usage, 0.0, 1.0)
+        # synchronized storm window: a deterministic tick schedule (no rng
+        # draws — disabled configs stay draw-for-draw legacy-exact)
+        if c.storm_interval is not None \
+                and self.t % c.storm_interval < c.storm_duration:
+            usage = np.clip(usage + c.storm_frac, 0.0, 1.0)
         return (usage * c.capacity_bytes).astype(np.int64)
 
     def sample_usage_fractions(self, n_machines: int, n_snapshots: int = 100

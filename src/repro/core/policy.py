@@ -112,6 +112,11 @@ class TopologyAwarePolicy(PlacementPolicy):
         self.churn_weight = churn_weight
         self.spread_weight = spread_weight
         self.decay = decay
+        #: runtime multiplier on the churn penalty — the stability
+        #: controller raises it during revocation storms so placement
+        #: backs off volatile peers; 1.0 (the default) is bit-exact with
+        #: the pre-controller ranking
+        self.churn_scale = 1.0
         self._recent: Dict[int, float] = {}   # EWMA of recent placements
 
     def rank(self, devices, req):
@@ -126,7 +131,8 @@ class TopologyAwarePolicy(PlacementPolicy):
                                             Tier.LOCAL_HBM, device=d)
             churn = v["churn"] / max(v["budget"], 1)
             lane = self._recent.get(d, 0.0)
-            return t * (1.0 + self.churn_weight * refs * churn
+            return t * (1.0 + self.churn_weight * self.churn_scale
+                        * refs * churn
                         + self.spread_weight * hot * lane)
 
         fitting.sort(key=lambda kv: (score(*kv),

@@ -84,6 +84,11 @@ class Prefetcher:
         self.planner = planner
         self.stats = (metrics or transfers.metrics).counters(
             "prefetch", keys=self.STAT_KEYS)
+        #: runtime budget throttle in (0, 1] — the stability controller
+        #: lowers it when peer revocations spike so speculative traffic
+        #: stops competing with demand reloads; 1.0 is bit-exact with
+        #: the un-throttled prefetcher
+        self.throttle = 1.0
         #: block -> its in-flight speculative reload (claimed or wasted later)
         self.inflight: Dict[ObjectKey, Transfer] = {}
 
@@ -108,12 +113,14 @@ class Prefetcher:
         run_pairs = [(r.req_id, r.pos) for r in running]
         wait_ids = [r.req_id for r in waiting
                     if not r.needs_prefill][:self.cfg.resume_lookahead]
-        budget_end = self.te.now + window_s * self.cfg.window_slack
+        budget_end = (self.te.now
+                      + window_s * self.cfg.window_slack * self.throttle)
+        max_inflight = max(int(self.cfg.max_inflight * self.throttle), 1)
         for bid in self.kv.plan_prefetch(run_pairs, wait_ids,
                                          depth=self.cfg.prefetch_depth):
             if bid in self.inflight:
                 continue
-            if len(self.inflight) >= self.cfg.max_inflight:
+            if len(self.inflight) >= max_inflight:
                 break
             if len(self.kv.free_slots) <= floor:
                 self.stats["skipped_slots"] += 1

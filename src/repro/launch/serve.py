@@ -146,6 +146,24 @@ def main():
                          "rung instead of LOST, durable write-backs "
                          "overflow host onto SSD (needs --mode async: the "
                          "ladder charges the event timeline)")
+    ap.add_argument("--controller", default="off",
+                    choices=["off", "stability"],
+                    help="closed-loop stability controller: estimates "
+                         "arrival/service/KV rates online, computes the "
+                         "stability region, and sheds/defers + caps the "
+                         "batch + throttles prefetch/harvest appetite "
+                         "when the workload leaves it (needs --mode "
+                         "async: the control loop ticks on the event "
+                         "timeline)")
+    ap.add_argument("--ctrl-tick-us", type=float, default=None,
+                    metavar="US",
+                    help="controller tick period in simulated "
+                         "microseconds (default: 8x the weight-pass "
+                         "time)")
+    ap.add_argument("--ctrl-headroom", type=float, default=None,
+                    metavar="FRAC",
+                    help="fraction of effective capacity the engaged "
+                         "controller keeps free (default 0.15)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.monitor_interval_us and not args.with_churn:
@@ -177,13 +195,30 @@ def main():
             or args.chunk_prefill_tokens is not None):
         ap.error("--cold-tier needs --mode async: the SSD rung of the "
                  "eviction ladder charges the event timeline")
+    if args.controller != "off" and args.mode != "async" and not (
+            args.prefetch or args.coalesce or args.stripe
+            or args.chunk_prefill_tokens is not None):
+        ap.error("--controller stability needs --mode async: the control "
+                 "loop ticks on the event timeline")
+    if args.controller == "off" and (args.ctrl_tick_us is not None
+                                     or args.ctrl_headroom is not None):
+        ap.error("--ctrl-tick-us/--ctrl-headroom need --controller "
+                 "stability (there is no control loop to configure)")
+    if args.ctrl_tick_us is not None and args.ctrl_tick_us <= 0:
+        ap.error(f"--ctrl-tick-us must be positive, got "
+                 f"{args.ctrl_tick_us}")
+    if args.ctrl_headroom is not None \
+            and not 0.0 <= args.ctrl_headroom < 0.9:
+        ap.error(f"--ctrl-headroom must be in [0, 0.9), got "
+                 f"{args.ctrl_headroom}")
 
     from repro.configs import get_config
     from repro.core import (ClusterTrace, ClusterTraceConfig, CoalesceConfig,
                             HarvestRuntime, PrefetchConfig,
                             TopologyAwarePolicy, get_topology)
     from repro.models import model as M
-    from repro.serving import SpecDecodeConfig, TenantSpec, Workload
+    from repro.serving import (ControllerConfig, SpecDecodeConfig,
+                               TenantSpec, Workload)
 
     cfg = get_config(args.arch).reduced()
     params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
@@ -214,6 +249,14 @@ def main():
     spec = (SpecDecodeConfig(draft_tokens=args.spec_draft,
                              accept_rate=args.spec_accept_rate)
             if args.spec_draft else None)
+    controller = None
+    if args.controller == "stability":
+        ctrl_kwargs = {}
+        if args.ctrl_tick_us is not None:
+            ctrl_kwargs["tick_interval_s"] = args.ctrl_tick_us * 1e-6
+        if args.ctrl_headroom is not None:
+            ctrl_kwargs["headroom"] = args.ctrl_headroom
+        controller = ControllerConfig(**ctrl_kwargs)
     server = runtime.server(
         cfg, params, max_batch=args.max_batch, block_size=args.block_size,
         num_local_slots=args.local_slots,
@@ -221,7 +264,8 @@ def main():
         mode=mode, prefetch=PrefetchConfig() if args.prefetch else None,
         admission=args.admission, prefix_cache=args.prefix_cache,
         chunk_prefill_tokens=args.chunk_prefill_tokens, spec_decode=spec,
-        fidelity_policy=args.fidelity_policy, cold_tier=args.cold_tier)
+        fidelity_policy=args.fidelity_policy, cold_tier=args.cold_tier,
+        controller=controller)
     eng = server.engine
 
     if args.workload == "legacy":

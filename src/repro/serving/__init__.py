@@ -1,6 +1,10 @@
 from repro.serving.admission import (ADMISSION, AdmissionPolicy,
                                      AdmissionView, KVHeadroomAdmission,
-                                     SLODeadlineAdmission)
+                                     SLODeadlineAdmission,
+                                     StabilityAdmission)
+from repro.serving.control import (ControllerConfig, EwmaMean,
+                                   StabilityController, WindowedRate,
+                                   WindowedSum)
 from repro.serving.engine import (EngineStats, HarvestServingEngine,
                                   RequestRecord, SpecDecodeConfig)
 from repro.serving.scheduler import (SCHEDULERS, SLO_CLASSES,
@@ -11,5 +15,6 @@ from repro.serving.sweep import (SweepConfig, SweepResult, SweepTrace,
                                  simulate)
 from repro.serving.workload import (ARRIVALS, TenantSpec, Workload,
                                     bursty_arrivals, diurnal_arrivals,
-                                    diurnal_arrivals_bulk, poisson_arrivals,
+                                    diurnal_arrivals_bulk, flood_arrivals,
+                                    poisson_arrivals, ramp_arrivals,
                                     trace_arrivals)

@@ -142,6 +142,91 @@ class SLODeadlineAdmission(AdmissionPolicy):
         return keep, shed
 
 
+class StabilityAdmission(AdmissionPolicy):
+    """Closed-loop admission driven by a
+    :class:`~repro.serving.control.StabilityController`.
+
+    While the controller is **disengaged** (the workload sits inside the
+    stability region) the wrapped ``inner`` policy decides verbatim —
+    the controller is a provable no-op.  While **engaged**:
+
+      * requests are ordered priority-desc, TTFT-deadline-carriers
+        first (deadline-asc), then FIFO;
+      * TTFT-unreachable and E2E-unreachable requests are *shed* (the
+        E2E check prices the remaining decode at the uncongested
+        per-token floor, so only the certainly hopeless are claimed —
+        static policies cannot shed a flood of deadline-free-TTFT
+        work, this one can);
+      * deadline-free requests queued longer than
+        ``controller.shed_wait_s()`` are shed — the queue is divergent,
+        waiting longer only grows it;
+      * survivors are admitted only while the controller's
+        regime-dependent row cap (``batch_cap``) and block budget
+        (``eff_blocks * (1 - headroom)``) hold; the rest *defer*.
+
+    Not registered in :data:`ADMISSION` — it needs a live controller,
+    so the engine wires it when constructed with ``controller=``.
+    """
+
+    name = "stability"
+
+    def __init__(self, controller, inner: "AdmissionPolicy | None" = None):
+        self.ctrl = controller
+        self.inner = inner or AdmissionPolicy()
+
+    def select(self, waiting, view):
+        if not self.ctrl.engaged:
+            return self.inner.select(waiting, view)
+        inf = float("inf")
+        order = sorted(waiting, key=lambda r: (
+            -r.priority,
+            r.ttft_deadline_t if r.ttft_deadline_t is not None else inf,
+            r.arrival_t, r.req_id))
+        eligible: List[Request] = []
+        shed: List[Request] = []
+        backlog = view.pending_prefill_s
+        rows = max(self.ctrl.batch_cap - view.num_running, 0)
+        budget = self.ctrl.block_budget(view) - view.pinned_blocks
+        max_wait = self.ctrl.shed_wait_s()
+        slack = self.ctrl.cfg.slack
+        deferred = 0
+        for r in order:
+            ttft_ddl = r.ttft_deadline_t
+            e2e_ddl = r.e2e_deadline_t
+            est = view.est_prefill_s(r) if r.needs_prefill else 0.0
+            if (ttft_ddl is not None and r.first_token_t is None
+                    and view.now + backlog + est * slack > ttft_ddl):
+                shed.append(r)
+                continue
+            if e2e_ddl is not None:
+                rem = max(r.max_new_tokens - len(r.output), 1)
+                eta = (view.now + backlog
+                       + (est + rem * self.ctrl.tpot_plan(r.slo)) * slack)
+                if eta > e2e_ddl:
+                    shed.append(r)
+                    continue
+            if (ttft_ddl is None and e2e_ddl is None
+                    and view.now - r.enqueue_t > max_wait):
+                shed.append(r)
+                continue
+            need = view.blocks_needed(r)
+            if rows <= 0 or need > budget:
+                if not eligible and view.num_running == 0 and rows > 0:
+                    eligible.append(r)   # starvation guard: never deadlock
+                    rows -= 1
+                    continue
+                deferred += 1            # defer, reconsider next step
+                continue
+            rows -= 1
+            budget -= need
+            eligible.append(r)
+            if r.needs_prefill:
+                backlog += est
+        self.ctrl.stats["shed"] += len(shed)
+        self.ctrl.stats["deferred"] += deferred
+        return eligible, shed
+
+
 ADMISSION = {
     "all": AdmissionPolicy,
     "headroom": KVHeadroomAdmission,

@@ -98,7 +98,9 @@ from repro.core.store import Residency, Transfer
 from repro.core.tiers import H100_NVLINK, Fidelity, HardwareModel, Tier
 from repro.kernels.harvest_copy.ops import dequantize_blocks, quantize_blocks
 from repro.models import model as M
-from repro.serving.admission import ADMISSION, AdmissionPolicy, AdmissionView
+from repro.serving.admission import (ADMISSION, AdmissionPolicy,
+                                     AdmissionView, StabilityAdmission)
+from repro.serving.control import ControllerConfig, StabilityController
 from repro.serving.scheduler import SCHEDULERS, SLO_CLASSES, Request
 
 
@@ -275,8 +277,17 @@ class EngineStats:
     def latency_percentiles(self, slo: Optional[str] = None
                             ) -> Dict[str, float]:
         """p50/p99 of TTFT, TPOT (ITL), queue wait and end-to-end latency
-        over the retired records (optionally one SLO class)."""
+        over the retired records (optionally one SLO class).
+
+        All-shed runs (a stability controller under overload may reject
+        every request) yield zero percentiles over an empty sample, never
+        a division error — the summary must stay printable."""
         recs = [r for r in self.records(slo) if r.state == "done"]
+        if not recs:
+            zeros = {"n": 0.0}
+            for name in ("ttft", "tpot", "queue_wait", "e2e"):
+                zeros[f"{name}_p50"] = zeros[f"{name}_p99"] = 0.0
+            return zeros
         out: Dict[str, float] = {"n": float(len(recs))}
         for name, get in (("ttft", lambda r: r.ttft_s),
                           ("tpot", lambda r: r.tpot_s),
@@ -431,6 +442,18 @@ class EngineStats:
                 f"link bytes saved {fid.get('bytes_saved', 0) / 2**20:.2f}"
                 f" MiB  dequant {fid.get('dequant_s', 0.0) * ms:.3f} ms "
                 f"({share:.1%} of clock)")
+        ctrl = self.metrics.get("ctrl")
+        if ctrl and ctrl.get("ticks"):
+            lines.append(
+                f"  ctrl: rho {ctrl.get('rho', 0.0):.2f} "
+                f"(mem {ctrl.get('rho_mem', 0.0):.2f} "
+                f"rows {ctrl.get('rho_rows', 0.0):.2f})  "
+                f"eff {ctrl.get('eff_blocks', 0.0):.1f} blk  "
+                f"{'ENGAGED' if ctrl.get('engaged') else 'idle'}  "
+                f"cap {int(ctrl.get('batch_cap', 0))}  "
+                f"engages {ctrl.get('engages', 0)}  "
+                f"shed {ctrl.get('shed', 0)}  "
+                f"deferred {ctrl.get('deferred', 0)}")
         for ns in ("prefetch", "transfer", "spec", "allocator", "monitor"):
             counters = self.metrics.get(ns)
             if not counters:
@@ -483,7 +506,9 @@ class HarvestServingEngine:
                  cold_tier: bool = False,
                  host_capacity_bytes: Optional[int] = None,
                  disaggregated: bool = False,
-                 prefill_workers: int = 2):
+                 prefill_workers: int = 2,
+                 controller: "str | ControllerConfig | StabilityController "
+                             "| None" = None):
         assert cfg.has_kv_cache or cfg.family == "ssm"
         assert mode in ("sync", "async"), f"unknown clock mode {mode!r}"
         # the engine runs over ONE HarvestRuntime; the allocator/monitor/
@@ -609,6 +634,31 @@ class HarvestServingEngine:
         pc = cfg.param_counts()
         self._t_flop_tok = 2 * pc["active"] / self.hw.peak_flops
         self._t_weights = 2 * pc["active"] / self.hw.hbm_bw
+
+        # closed-loop stability controller (PR 10): estimates load online,
+        # computes the stability region, and actuates admission / batch
+        # cap / prefetch budgets / harvest appetite while engaged.  None
+        # (or "off") keeps every path — tokens AND clock — bit-exact;
+        # even when enabled it only diverges once the workload leaves the
+        # stability region (the no-op property the tests pin).
+        if controller == "off":
+            controller = None
+        elif controller == "stability":
+            controller = StabilityController()
+        elif isinstance(controller, ControllerConfig):
+            controller = StabilityController(controller)
+        elif isinstance(controller, str):
+            raise ValueError(f"unknown controller {controller!r}; expected "
+                             f"'off' or 'stability'")
+        self._controller: Optional[StabilityController] = controller
+        if self._controller is not None:
+            assert mode == "async", \
+                "the stability controller ticks on the event timeline: " \
+                "pass mode='async'"
+            self._controller.attach(self)
+            self.admission = StabilityAdmission(self._controller,
+                                                inner=self.admission)
+        self.controller = self._controller
 
         # timeline-driven pressure: when the monitor carries a tick
         # interval AND the engine runs on the event clock, trace ticks fire
@@ -823,6 +873,8 @@ class HarvestServingEngine:
         self._req_slo[r.req_id] = slo
         if arrival_t <= now:
             self.waiting.append(r)
+            if self._controller is not None:
+                self._controller.on_arrival(r)
         else:
             heapq.heappush(self._arrivals, (arrival_t, r.req_id, r))
         return r
@@ -839,6 +891,8 @@ class HarvestServingEngine:
         while self._arrivals and self._arrivals[0][0] <= now + 1e-15:
             _, _, r = heapq.heappop(self._arrivals)
             self.waiting.append(r)
+            if self._controller is not None:
+                self._controller.on_arrival(r)
             n += 1
         return n
 
@@ -1408,14 +1462,17 @@ class HarvestServingEngine:
         self._record(r)
 
     def _record(self, r: Request) -> None:
-        self.stats.requests.append(RequestRecord(
+        rec = RequestRecord(
             req_id=r.req_id, slo=r.slo, tenant=r.tenant, state=r.state,
             arrival_t=r.arrival_t, enqueue_t=r.enqueue_t, admit_t=r.admit_t,
             first_token_t=r.first_token_t, finish_t=r.finish_t,
             prompt_tokens=len(r.prompt), output_tokens=len(r.output),
             preemptions=r.preempt_count, ttft_slo_s=r.ttft_slo_s,
             e2e_slo_s=r.e2e_slo_s,
-            cached_prefix_blocks=r.cached_prefix_blocks))
+            cached_prefix_blocks=r.cached_prefix_blocks)
+        self.stats.requests.append(rec)
+        if self._controller is not None:
+            self._controller.on_retire(rec, self._blocks_needed(r))
 
     def _admit(self) -> None:
         """Admission: the :class:`AdmissionPolicy` gates/orders the queue
@@ -1439,8 +1496,16 @@ class HarvestServingEngine:
             self._shed(r, now)
         deferred = [w for w in self.waiting if w not in eligible]
         pinned_blocks = view.pinned_blocks
+        # regime-dependent batch cap (stability controller, engaged only):
+        # the `cap < self.B` guard means an uncapped controller leaves the
+        # scheduler's choice set — and with it every admission decision —
+        # bit-exact with the controller-free engine
+        cap = self.B if self._controller is None \
+            else self._controller.batch_cap
         admissible = []
         for cand in eligible:
+            if cap < self.B and len(self.running) + len(admissible) >= cap:
+                break
             need = self._blocks_needed(cand)
             if pinned_blocks + need > self.n_slots or not self.free_rows:
                 break
@@ -1733,6 +1798,12 @@ class HarvestServingEngine:
                 self._dispatch_prefills()
         sched_step = self.stats.steps
         self.kv_mgr.pinned = {r.req_id for r in self.running}
+        # control tick BEFORE admission so this step's shed/defer/cap
+        # decisions see estimates refreshed through the latest arrivals
+        # (covers the bubble path too — each bubble advances the clock,
+        # so an engaged controller keeps ticking toward disengagement)
+        if self._controller is not None:
+            self._controller.poll(self._now())
         if self.mode == "sync":
             # async consumes these in _account_step so refill-time charges
             # carry into the next step's wait set; sync never queues any
@@ -1803,6 +1874,12 @@ class HarvestServingEngine:
                 self._collect_streams()
                 self._dispatch_prefills()
             if self.waiting:
+                # the refill admission sees the post-step clock: a long
+                # stalled step may have carried queued requests past
+                # their deadlines, so the controller must observe the
+                # new time BEFORE this pass (not at the next step's top)
+                if self._controller is not None:
+                    self._controller.poll(self._now())
                 self._admit()
 
         if self._timeline_ticks is not None:

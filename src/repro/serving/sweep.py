@@ -72,6 +72,20 @@ from repro.serving.workload import (LengthSpec, bursty_arrivals,
 __all__ = ["SweepConfig", "SweepTrace", "SweepResult", "simulate"]
 
 
+def _max_rss_mb() -> float:
+    """Process peak RSS in MiB (0.0 where the resource module is absent,
+    e.g. non-POSIX).  ``ru_maxrss`` is KiB on Linux, bytes on macOS —
+    memory regressions in the million-request sweeps show up here next
+    to ``walltime_s``."""
+    try:
+        import resource
+        import sys
+        peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+        return peak / 2**20 if sys.platform == "darwin" else peak / 1024.0
+    except ImportError:
+        return 0.0
+
+
 # ----------------------------------------------------------------- config
 @dataclass(frozen=True)
 class SweepConfig:
@@ -250,6 +264,7 @@ class SweepResult:
     finish_t: np.ndarray
     tokens: np.ndarray                  # decoded tokens per request
     walltime_s: float = 0.0             # real seconds simulate() took
+    max_rss_mb: float = 0.0             # process peak RSS after the run
     metrics: Dict[str, float] = field(default_factory=dict)
 
     def ttft(self, trace: SweepTrace) -> np.ndarray:
@@ -602,4 +617,4 @@ def simulate(trace: SweepTrace, cfg: SweepConfig, *,
         clock_s=float(host_clock.max()) if H else 0.0,
         host_clock_s=host_clock, host=host, admit_t=admit_t,
         first_token_t=first_t, finish_t=finish_t, tokens=outn.copy(),
-        walltime_s=walltime, metrics=mets)
+        walltime_s=walltime, max_rss_mb=_max_rss_mb(), metrics=mets)

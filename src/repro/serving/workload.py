@@ -145,6 +145,71 @@ def diurnal_arrivals_bulk(rng: np.random.Generator, rate: float, n: int, *,
     return out
 
 
+def ramp_arrivals(rng: np.random.Generator, rate: float, n: int, *,
+                  start_ratio: float = 0.25,
+                  end_ratio: float = 2.5,
+                  ramp_s: Optional[float] = None) -> np.ndarray:
+    """Linear rate ramp from ``start_ratio * rate`` to ``end_ratio *
+    rate`` over ``ramp_s`` seconds (then held at the end rate), thinned
+    from a Poisson majorant.
+
+    The stability-controller's adversarial scenario: pick ratios that
+    straddle the engine's saturation point and the ramp drives the
+    system *through* the knee instead of parking on one side of it.
+    ``ramp_s`` defaults to the span ``n`` arrivals cover at the ramp's
+    mean rate, so one run sees the whole climb."""
+    if rate <= 0:
+        raise ValueError(f"arrival rate must be positive, got {rate}")
+    if not 0 < start_ratio < end_ratio:
+        raise ValueError(f"need 0 < start_ratio < end_ratio, got "
+                         f"({start_ratio}, {end_ratio})")
+    if ramp_s is None:
+        ramp_s = n / (rate * 0.5 * (start_ratio + end_ratio))
+    if ramp_s <= 0:
+        raise ValueError(f"ramp_s must be positive, got {ramp_s}")
+    lam_max = rate * end_ratio
+    times, t = [], 0.0
+    while len(times) < n:
+        t += rng.exponential(1.0 / lam_max)
+        frac = min(t / ramp_s, 1.0)
+        lam = rate * (start_ratio + (end_ratio - start_ratio) * frac)
+        if rng.uniform() * lam_max <= lam:
+            times.append(t)
+    return np.asarray(times)
+
+
+def flood_arrivals(rng: np.random.Generator, rate: float, n: int, *,
+                   flood_ratio: float = 6.0,
+                   flood_start: float = 0.3,
+                   flood_frac: float = 0.4) -> np.ndarray:
+    """Piecewise-constant rate with one flood window: ``rate`` outside,
+    ``flood_ratio * rate`` inside ``[T*flood_start,
+    T*(flood_start+flood_frac))`` where ``T`` is the span ``n`` arrivals
+    cover at the blended mean rate — one tenant suddenly flooding an
+    otherwise steady mix.  Thinned from a Poisson majorant."""
+    if rate <= 0:
+        raise ValueError(f"arrival rate must be positive, got {rate}")
+    if flood_ratio < 1:
+        raise ValueError(f"flood_ratio must be >= 1, got {flood_ratio}")
+    if not (0.0 <= flood_start and flood_frac > 0.0
+            and flood_start + flood_frac <= 1.0):
+        raise ValueError(
+            f"flood window must satisfy 0 <= flood_start, flood_frac > 0, "
+            f"flood_start + flood_frac <= 1; got "
+            f"({flood_start}, {flood_frac})")
+    mean_rate = rate * (1.0 + (flood_ratio - 1.0) * flood_frac)
+    span = n / mean_rate
+    lo, hi = span * flood_start, span * (flood_start + flood_frac)
+    lam_max = rate * flood_ratio
+    times, t = [], 0.0
+    while len(times) < n:
+        t += rng.exponential(1.0 / lam_max)
+        lam = lam_max if lo <= t < hi else rate
+        if rng.uniform() * lam_max <= lam:
+            times.append(t)
+    return np.asarray(times)
+
+
 def trace_arrivals(times: Sequence[float]) -> np.ndarray:
     """Replay explicit arrival times (must be sorted, non-negative)."""
     arr = np.asarray(list(times), dtype=float)
@@ -154,7 +219,8 @@ def trace_arrivals(times: Sequence[float]) -> np.ndarray:
 
 
 ARRIVALS = {"poisson": poisson_arrivals, "bursty": bursty_arrivals,
-            "diurnal": diurnal_arrivals}
+            "diurnal": diurnal_arrivals, "ramp": ramp_arrivals,
+            "flood": flood_arrivals}
 
 
 # ---------------------------------------------------------------- tenants

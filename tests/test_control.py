@@ -1,0 +1,404 @@
+"""Closed-loop stability controller (PR 10).
+
+Covers the tentpole subsystem:
+  * estimator primitives (windowed rates, EWMA means) and their
+    validation;
+  * the stability region + hysteresis: an overload engages the
+    controller, draining the window disengages it, and every actuator
+    (batch cap, prefetch throttle, churn scale) is restored to its
+    passive value on disengage;
+  * :class:`StabilityAdmission`: verbatim delegation while disengaged,
+    deadline-reachability shedding / divergent-queue shedding / row+block
+    deferral while engaged, and the no-deadlock starvation guard;
+  * synchronized revocation storms in :class:`ClusterTrace` consume no
+    rng draws (storm-free configs stay draw-for-draw legacy-exact);
+  * the new ``ramp``/``flood`` arrival generators;
+  * satellites: all-requests-shed runs produce a clean zero summary
+    (never a division error), ``SweepResult.max_rss_mb``, engine
+    ``controller=`` plumbing and its async-mode guard.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import HarvestRuntime
+from repro.core.monitor import ClusterTrace, ClusterTraceConfig
+from repro.serving import (ControllerConfig, EwmaMean, HarvestServer,
+                           StabilityAdmission, StabilityController,
+                           TenantSpec, WindowedRate, WindowedSum, Workload)
+from repro.serving.admission import AdmissionPolicy, AdmissionView
+from repro.serving.engine import EngineStats
+from repro.serving.scheduler import Request
+from repro.serving.sweep import SweepConfig, SweepTrace, simulate
+from repro.serving.workload import flood_arrivals, ramp_arrivals
+
+MiB = 2**20
+
+
+@pytest.fixture(scope="module")
+def served_model():
+    import jax
+    from repro.configs import get_config
+    from repro.models import model as M
+    cfg = dataclasses.replace(get_config("yi-6b").reduced(), num_layers=2)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _server(served_model, *, budget=64 * MiB, **kw):
+    cfg, params = served_model
+    runtime = HarvestRuntime({1: budget})
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("block_size", 8)
+    kw.setdefault("num_local_slots", 10)
+    kw.setdefault("scheduler", "fair")
+    return HarvestServer(cfg, params, runtime=runtime, **kw)
+
+
+def _latency_workload(rate, n=12, seed=7, **tenant_kw):
+    return Workload(
+        num_requests=n, rate=rate, seed=seed, vocab=(3, 250),
+        tenants=(TenantSpec("t0", slo="latency", prompt_len=(8, 16),
+                            max_new_tokens=(4, 8), **tenant_kw),))
+
+
+# ---------------------------------------------------------------------------
+# estimator primitives
+# ---------------------------------------------------------------------------
+
+def test_windowed_rate_counts_only_the_window():
+    wr = WindowedRate(window_s=1.0)
+    for t in (0.1, 0.2, 0.9, 1.05, 1.6):
+        wr.observe(t)
+    # at now=2.0 the window is (1.0, 2.0]: events at 1.05 and 1.6
+    assert wr.count(2.0) == 2
+    assert wr.rate(2.0) == pytest.approx(2.0)
+    # purge is permanent: moving further forward empties it
+    assert wr.rate(5.0) == 0.0
+
+
+def test_windowed_sum_weights_events():
+    ws = WindowedSum(window_s=2.0)
+    ws.observe(0.5, 10.0)
+    ws.observe(1.5, 4.0)
+    assert ws.rate(2.0) == pytest.approx(7.0)     # (10 + 4) / 2
+    assert ws.rate(3.0) == pytest.approx(2.0)     # only the 1.5 event
+
+
+def test_ewma_mean_first_sample_initialises():
+    m = EwmaMean(alpha=0.5)
+    assert m.get(default=3.0) == 3.0
+    m.update(8.0)
+    assert m.value == 8.0                         # no zero bias
+    m.update(4.0)
+    assert m.value == pytest.approx(6.0)
+    assert m.n == 2
+
+
+def test_estimator_validation():
+    with pytest.raises(ValueError):
+        WindowedRate(0.0)
+    with pytest.raises(ValueError):
+        WindowedSum(-1.0)
+    with pytest.raises(ValueError):
+        EwmaMean(alpha=0.0)
+
+
+def test_controller_config_validation():
+    with pytest.raises(ValueError):
+        ControllerConfig(headroom=0.95)
+    with pytest.raises(ValueError):
+        ControllerConfig(enter_rho=0.5, exit_rho=0.8)
+    with pytest.raises(ValueError):
+        ControllerConfig(tick_interval_s=0.0)
+    with pytest.raises(ValueError):
+        ControllerConfig(min_prefetch_scale=0.0)
+    with pytest.raises(ValueError):
+        ControllerConfig(min_actual_samples=0)
+
+
+# ---------------------------------------------------------------------------
+# region + hysteresis + actuators
+# ---------------------------------------------------------------------------
+
+def _fake_request(i, t, *, prompt=12, out=8, slo="latency"):
+    return Request(i, list(range(3, 3 + prompt)), out, arrival_t=t,
+                   slo=slo, enqueue_t=t)
+
+
+def test_hysteresis_engage_disengage_restores_actuators(served_model):
+    srv = _server(served_model, mode="async",
+                  controller=ControllerConfig(
+                      tick_interval_s=1e-6, window_s=1e-4))
+    eng = srv.engine
+    ctrl = eng.controller
+    te = eng.runtime.transfers
+    ctrl.poll(eng._now())                 # first poll only sets the baseline
+    # flood the window with synthetic arrivals far above capacity
+    for i in range(400):
+        ctrl.on_arrival(_fake_request(i, te.now + i * 1e-8))
+    te.advance(5e-6)
+    ctrl.poll(eng._now())
+    assert ctrl.rho > 1.0 and ctrl.engaged
+    assert int(ctrl.stats["engages"]) == 1
+    assert ctrl.batch_cap <= eng.B
+    # drain: advance past the window so the arrival estimate collapses
+    te.advance(10 * ctrl.window_s)
+    ctrl.poll(eng._now())
+    assert ctrl.rho < ctrl.cfg.exit_rho and not ctrl.engaged
+    assert int(ctrl.stats["disengages"]) == 1
+    # every actuator restored to its passive value
+    assert ctrl.batch_cap == eng.B
+    assert ctrl.prefetch_scale == 1.0
+    assert ctrl.churn_scale == 1.0
+    line = ctrl.summary()
+    assert "rho" in line and "idle" in line
+
+
+def test_controller_requires_async_mode(served_model):
+    with pytest.raises(AssertionError, match="event timeline"):
+        _server(served_model, mode="sync", controller="stability")
+    with pytest.raises(ValueError, match="unknown controller"):
+        _server(served_model, mode="async", controller="bogus")
+
+
+def test_controller_publishes_ctrl_metrics(served_model):
+    srv = _server(served_model, mode="async", controller="stability")
+    stats = srv.run(_latency_workload(2e3), max_steps=4000)
+    ctrl = stats.metrics.get("ctrl")
+    assert ctrl is not None and ctrl["ticks"] > 0
+    for key in ("rho", "rho_mem", "rho_rows", "eff_blocks", "batch_cap"):
+        assert key in ctrl
+    assert "ctrl:" in stats.summary()
+    stats.check_clock_identity()
+
+
+# ---------------------------------------------------------------------------
+# StabilityAdmission
+# ---------------------------------------------------------------------------
+
+class _StubController:
+    """Duck-typed controller for admission-policy unit tests."""
+
+    def __init__(self, *, engaged=True, batch_cap=4, budget=100,
+                 tpot=1e-6, max_wait=1.0):
+        self.engaged = engaged
+        self.batch_cap = batch_cap
+        self.cfg = ControllerConfig()
+        self.stats = {"shed": 0, "deferred": 0}
+        self._budget = budget
+        self._tpot = tpot
+        self._max_wait = max_wait
+
+    def block_budget(self, view=None):
+        return self._budget
+
+    def tpot_plan(self, slo=None):
+        return self._tpot
+
+    def shed_wait_s(self):
+        return self._max_wait
+
+
+def _view(now=0.0, *, pinned=0, running=0, rows=4):
+    return AdmissionView(
+        now=now, free_rows=rows, num_slots=100, pinned_blocks=pinned,
+        num_running=running, blocks_needed=lambda r: 2,
+        est_prefill_s=lambda r: 1e-5, pending_prefill_s=0.0)
+
+
+def test_stability_admission_delegates_when_disengaged():
+    class Marker(AdmissionPolicy):
+        def select(self, waiting, view):
+            return list(reversed(waiting)), []
+    pol = StabilityAdmission(_StubController(engaged=False), inner=Marker())
+    reqs = [_fake_request(i, 0.0) for i in range(3)]
+    eligible, shed = pol.select(reqs, _view())
+    assert eligible == list(reversed(reqs)) and shed == []
+    assert pol.ctrl.stats["shed"] == 0
+
+
+def test_stability_admission_sheds_unreachable_deadlines():
+    ctrl = _StubController(tpot=1e-6)
+    pol = StabilityAdmission(ctrl)
+    ok = _fake_request(0, 0.0)
+    ok.ttft_slo_s = 1.0
+    late_ttft = _fake_request(1, 0.0)
+    late_ttft.ttft_slo_s = 1e-9          # prefill alone blows it
+    late_e2e = _fake_request(2, 0.0, out=100)
+    late_e2e.e2e_slo_s = 1e-8            # 100 tokens at 1us each cannot fit
+    eligible, shed = pol.select([ok, late_ttft, late_e2e], _view())
+    assert ok in eligible
+    assert late_ttft in shed and late_e2e in shed
+    assert ctrl.stats["shed"] == 2
+
+
+def test_stability_admission_sheds_divergent_queue_waiters():
+    ctrl = _StubController(max_wait=0.5)
+    pol = StabilityAdmission(ctrl)
+    fresh = _fake_request(0, 0.0)
+    stale = _fake_request(1, 0.0)
+    stale.enqueue_t = -1.0               # queued for 1s > max_wait
+    eligible, shed = pol.select([fresh, stale], _view(now=0.0))
+    assert fresh in eligible and stale in shed
+
+
+def test_stability_admission_defers_beyond_row_and_block_caps():
+    ctrl = _StubController(batch_cap=2, budget=100)
+    pol = StabilityAdmission(ctrl)
+    reqs = [_fake_request(i, i * 1e-9) for i in range(5)]
+    eligible, shed = pol.select(reqs, _view(running=1))
+    assert len(eligible) == 1 and not shed       # cap 2 - 1 running = 1 row
+    assert ctrl.stats["deferred"] == 4
+    # block budget binds instead of rows: 2 blocks each, budget 5 -> 2 fit
+    pol2 = StabilityAdmission(_StubController(batch_cap=8, budget=5))
+    eligible, shed = pol2.select(reqs, _view())
+    assert len(eligible) == 2 and not shed
+
+
+def test_stability_admission_starvation_guard():
+    # budget too small for even one request: with nothing running the
+    # head of line must still be admitted (no deadlock)
+    ctrl = _StubController(batch_cap=4, budget=1)
+    pol = StabilityAdmission(ctrl)
+    reqs = [_fake_request(i, i * 1e-9) for i in range(3)]
+    eligible, shed = pol.select(reqs, _view(running=0))
+    assert eligible == [reqs[0]] and not shed
+
+
+def test_stability_admission_priority_order():
+    ctrl = _StubController(batch_cap=8)
+    pol = StabilityAdmission(ctrl)
+    lo = _fake_request(0, 0.0)
+    hi = _fake_request(1, 1e-9)
+    hi.priority = 5
+    eligible, _ = pol.select([lo, hi], _view())
+    assert eligible[0] is hi
+
+
+# ---------------------------------------------------------------------------
+# synchronized revocation storms
+# ---------------------------------------------------------------------------
+
+def test_storm_schedule_consumes_no_rng_draws():
+    base = dict(num_devices=3, capacity_bytes=64 * MiB, seed=11)
+    plain = ClusterTrace(ClusterTraceConfig(**base))
+    storm = ClusterTrace(ClusterTraceConfig(
+        **base, storm_interval=10, storm_duration=2, storm_frac=0.4))
+    boosted = clean = 0
+    for _ in range(40):
+        u_plain = plain.step()
+        u_storm = storm.step()
+        if storm.t % 10 < 2:
+            # storm tick: every device's usage is >= the storm-free trace
+            assert np.all(u_storm >= u_plain)
+            boosted += 1
+        else:
+            # clean tick: bit-exact with the legacy trace — the storm
+            # schedule consumed no draws
+            assert np.array_equal(u_storm, u_plain)
+            clean += 1
+    assert boosted > 0 and clean > 0
+
+
+def test_storm_hits_all_devices_at_once():
+    tr = ClusterTrace(ClusterTraceConfig(
+        num_devices=4, capacity_bytes=64 * MiB, seed=2,
+        noise=0.0, job_arrival_p=0.0,
+        storm_interval=6, storm_duration=2, storm_frac=0.9))
+    quiet = tr.step()                      # t=1: inside the first window
+    for _ in range(4):                     # advance to t=5 (clean)
+        quiet = tr.step()
+    stormy = tr.step()                     # t=6: 6 % 6 == 0 -> storm
+    assert np.all(stormy > quiet)          # every peer slammed together
+
+
+def test_storm_config_validation():
+    with pytest.raises(ValueError):
+        ClusterTraceConfig(storm_interval=0)
+    with pytest.raises(ValueError):
+        ClusterTraceConfig(storm_interval=5, storm_duration=9)
+    with pytest.raises(ValueError):
+        ClusterTraceConfig(storm_interval=5, storm_duration=2,
+                           storm_frac=0.0)
+
+
+# ---------------------------------------------------------------------------
+# ramp / flood arrival generators
+# ---------------------------------------------------------------------------
+
+def test_ramp_arrivals_rate_climbs():
+    rng = np.random.default_rng(0)
+    ts = ramp_arrivals(rng, 1000.0, 4000, start_ratio=0.25, end_ratio=4.0)
+    assert len(ts) == 4000 and np.all(np.diff(ts) >= 0)
+    # inter-arrival gaps shrink as the ramp climbs
+    first = np.diff(ts[:1000]).mean()
+    last = np.diff(ts[-1000:]).mean()
+    assert last < first / 2
+
+
+def test_flood_arrivals_surge_window():
+    rng = np.random.default_rng(1)
+    ts = flood_arrivals(rng, 1000.0, 6000, flood_ratio=6.0,
+                        flood_start=0.3, flood_frac=0.4)
+    assert len(ts) == 6000 and np.all(np.diff(ts) >= 0)
+    mean_rate = 1000.0 * (1.0 + 5.0 * 0.4)
+    span = 6000 / mean_rate
+    lo, hi = 0.3 * span, 0.7 * span
+    inside = np.sum((ts >= lo) & (ts < hi)) / (hi - lo)
+    outside = np.sum(ts < lo) / lo
+    assert inside > 3.0 * outside          # ~6x in expectation
+
+
+def test_ramp_flood_validation():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        ramp_arrivals(rng, 100.0, 10, start_ratio=2.0, end_ratio=1.0)
+    with pytest.raises(ValueError):
+        ramp_arrivals(rng, 0.0, 10)
+    with pytest.raises(ValueError):
+        flood_arrivals(rng, 100.0, 10, flood_ratio=0.5)
+    with pytest.raises(ValueError):
+        flood_arrivals(rng, 100.0, 10, flood_start=0.8, flood_frac=0.4)
+    # registered in the Workload front door
+    Workload(num_requests=4, arrival="ramp", rate=100.0)
+    Workload(num_requests=4, arrival="flood", rate=100.0)
+
+
+# ---------------------------------------------------------------------------
+# satellites: all-shed summary, sweep RSS
+# ---------------------------------------------------------------------------
+
+def test_all_requests_shed_clean_summary(served_model):
+    # every request arrives at clock 0 with an unreachable TTFT deadline:
+    # the deadline policy sheds the lot, the clock never advances, and the
+    # summary must still render with zero percentiles — no ZeroDivision
+    srv = _server(served_model, mode="async", admission="deadline")
+    wl = Workload(
+        num_requests=5, arrival="trace", rate=1.0, seed=0,
+        arrival_kwargs={"times": [0.0] * 5},
+        tenants=(TenantSpec("t", slo="latency", prompt_len=(8, 16),
+                            max_new_tokens=4, ttft_slo_s=1e-12),))
+    stats = srv.run(wl, max_steps=200)
+    assert stats.rejected == 5
+    assert stats.clock_s == 0.0
+    assert stats.throughput() == 0.0
+    assert stats.goodput() == 0.0
+    pc = stats.latency_percentiles("latency")
+    assert pc["n"] == 0.0 and pc["ttft_p99"] == 0.0
+    assert "goodput 0 tok/s" in stats.summary()
+
+
+def test_latency_percentiles_empty_is_zero():
+    pc = EngineStats().latency_percentiles()
+    assert pc["n"] == 0.0
+    assert all(v == 0.0 for v in pc.values())
+
+
+def test_sweep_records_peak_rss():
+    trace = SweepTrace.generate("poisson", 1000.0, n=200, seed=0)
+    res = simulate(trace, SweepConfig(hosts=2))
+    assert res.max_rss_mb > 0.0
+    assert math.isfinite(res.max_rss_mb)

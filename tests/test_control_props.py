@@ -1,0 +1,111 @@
+"""Property tests for the stability controller (hypothesis; skipped
+cleanly when hypothesis is absent — the tier1-minimal-deps CI leg).
+
+Two invariant families:
+
+  1. **estimator convergence** — the windowed arrival-rate estimate over
+     seeded Poisson/bursty streams converges to the true long-run rate
+     within tolerance once the window holds enough events (relative
+     error ~ 1/sqrt(lam * W)), and the windowed token-rate (occupancy)
+     estimate tracks a known token stream the same way;
+  2. **in-region no-op** — on workloads that never leave the stability
+     region the controller is a bit-exact no-op: identical tokens AND
+     identical clock to the controller-free engine, every seed.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (optional test dep)")
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import HarvestRuntime
+from repro.models import model as M
+from repro.serving import (HarvestServer, TenantSpec, WindowedRate,
+                           WindowedSum, Workload)
+from repro.serving.workload import bursty_arrivals, poisson_arrivals
+
+MiB = 2**20
+CFG = dataclasses.replace(get_config("yi-6b").reduced(), num_layers=2)
+PARAMS = M.init_params(jax.random.PRNGKey(0), CFG)
+
+
+# ---------------------------------------------------------------------------
+# estimator convergence
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       rate=st.sampled_from([200.0, 1e3, 5e4]),
+       arrival=st.sampled_from(["poisson", "bursty"]))
+def test_windowed_rate_converges_to_true_rate(seed, rate, arrival):
+    rng = np.random.default_rng(seed)
+    n = 4000
+    times = (poisson_arrivals(rng, rate, n) if arrival == "poisson"
+             else bursty_arrivals(rng, rate, n, burst=8, duty=0.25))
+    # window sized to hold ~1500 events: relative error ~ 1/sqrt(1500),
+    # bursty adds burst-boundary variance — 25% tolerance covers both
+    window = 1500.0 / rate
+    wr = WindowedRate(window)
+    for t in times:
+        wr.observe(t)
+    now = float(times[-1])
+    assert wr.rate(now) == pytest.approx(rate, rel=0.25)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       rate=st.sampled_from([500.0, 2e4]),
+       tokens=st.integers(1, 32))
+def test_windowed_token_rate_tracks_occupancy(seed, rate, tokens):
+    # each retirement carries a fixed token count: the windowed sum must
+    # converge to rate * tokens (the throughput the controller divides
+    # capacity by)
+    rng = np.random.default_rng(seed)
+    times = poisson_arrivals(rng, rate, 3000)
+    window = 1200.0 / rate
+    ws = WindowedSum(window)
+    for t in times:
+        ws.observe(t, float(tokens))
+    now = float(times[-1])
+    assert ws.rate(now) == pytest.approx(rate * tokens, rel=0.25)
+
+
+# ---------------------------------------------------------------------------
+# in-region no-op
+# ---------------------------------------------------------------------------
+
+def _serve(workload: Workload, controller):
+    srv = HarvestServer(
+        CFG, PARAMS, runtime=HarvestRuntime({1: 64 * MiB}),
+        max_batch=2, block_size=8, num_local_slots=10,
+        scheduler="fair", mode="async", controller=controller)
+    stats = srv.run(workload, max_steps=4000)
+    tokens = {r.req_id: r.output_tokens for r in stats.requests}
+    return stats, tokens
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       arrival=st.sampled_from(["poisson", "bursty"]))
+def test_controller_is_noop_inside_stability_region(seed, arrival):
+    # rate far below the service capacity of the reduced model: the
+    # controller must never engage, so tokens AND clock are bit-exact
+    wl = Workload(
+        num_requests=8, arrival=arrival, rate=2e3, seed=seed,
+        vocab=(3, 250),
+        tenants=(TenantSpec("t", slo="latency", prompt_len=(6, 18),
+                            max_new_tokens=(3, 8)),))
+    base, base_tokens = _serve(wl, None)
+    ctrl, ctrl_tokens = _serve(wl, "stability")
+    assert ctrl_tokens == base_tokens
+    assert ctrl.clock_s == base.clock_s          # bit-exact, not approx
+    assert ctrl.idle_s == base.idle_s
+    assert ctrl.bubble_s == base.bubble_s
+    assert ctrl.metrics["ctrl"]["engages"] == 0
+    ctrl.check_clock_identity()
